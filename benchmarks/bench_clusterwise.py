@@ -1,0 +1,53 @@
+"""Paper Fig. 3 + Fig. 8 + Table 2 cluster columns: cluster-wise SpGEMM
+(fixed / variable / hierarchical), with and without reordering, relative to
+row-wise on the original order."""
+from __future__ import annotations
+
+from repro.benchlib import bench_clusterwise_on, bench_rowwise_on
+from repro.core.suite import generate
+
+from benchmarks.common import print_csv, summarize, tier_reorders, tier_specs
+
+SCHEMES = ["fixed", "variable", "hierarchical"]
+
+
+def run(tier: str = "default") -> dict:
+    specs = tier_specs(tier)
+    reorders = tier_reorders(tier)
+    rows = []
+    # clustering without reordering (Fig. 3 "Original" boxes + hierarchical)
+    per_scheme: dict[str, dict[str, float]] = {s: {} for s in SCHEMES}
+    for spec in specs:
+        a = generate(spec)
+        base = bench_rowwise_on(a, "original", name=spec.name)
+        row = {"matrix": spec.name}
+        for scheme in SCHEMES:
+            r = bench_clusterwise_on(a, "original", scheme, name=spec.name)
+            sp = base.kernel_s / r.kernel_s
+            per_scheme[scheme][spec.name] = sp
+            row[scheme] = sp
+            row[f"{scheme}_pre_x"] = r.preprocess_s / max(base.kernel_s,
+                                                          1e-9)
+        rows.append(row)
+    print_csv(rows, "fig3_clusterwise_no_reorder_speedup")
+    print_csv([{"scheme": s, **summarize(per_scheme[s])} for s in SCHEMES],
+              "fig3_summary_GM_Pos_+GM")
+
+    # reordering + fixed/variable clustering (Table 2 cluster columns)
+    summary = []
+    for algo in reorders:
+        for scheme in ("fixed", "variable"):
+            sp = {}
+            for spec in specs:
+                a = generate(spec)
+                base = bench_rowwise_on(a, "original", name=spec.name)
+                r = bench_clusterwise_on(a, algo, scheme, name=spec.name)
+                sp[spec.name] = base.kernel_s / r.kernel_s
+            summary.append({"algo": algo, "scheme": scheme,
+                            **summarize(sp)})
+    print_csv(summary, "table2_cluster_columns_GM_Pos_+GM")
+    return {"per_scheme": per_scheme}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Paper Fig. 11: memory footprint of CSR_Cluster (fixed / variable /
+hierarchical) relative to CSR — analytic exact ragged footprints, full
+110-matrix suite (cheap: no kernels run)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.clustering import (fixed_length_clusters,
+                                   hierarchical_clusters,
+                                   variable_length_clusters)
+from repro.core.formats import csr_cluster_nbytes_exact, csr_nbytes
+from repro.core.suite import SUITE, generate
+
+from benchmarks.common import print_csv, tier_specs
+
+RATIO_BINS = [0.5, 0.75, 0.9, 1.0, 1.25, 1.5, 2.0, 4.0]
+
+
+def run(tier: str = "default") -> dict:
+    specs = tier_specs(tier) if tier != "full" else list(SUITE)
+    ratios: dict[str, list[float]] = {"fixed": [], "variable": [],
+                                      "hierarchical": []}
+    for spec in specs:
+        a = generate(spec)
+        base = csr_nbytes(a)
+        fl = fixed_length_clusters(a, 8)
+        ratios["fixed"].append(
+            csr_cluster_nbytes_exact(a, fl.boundaries.tolist(),
+                                     fixed_length=True) / base)
+        vl = variable_length_clusters(a)
+        ratios["variable"].append(
+            csr_cluster_nbytes_exact(a, vl.boundaries.tolist()) / base)
+        hc = hierarchical_clusters(a)
+        ar = a.permute_symmetric(hc.perm)
+        ratios["hierarchical"].append(
+            csr_cluster_nbytes_exact(ar, hc.boundaries.tolist()) / base)
+
+    rows = []
+    for scheme, rs in ratios.items():
+        arr = np.asarray(rs)
+        row = {"scheme": scheme, "median": float(np.median(arr)),
+               "mean": float(arr.mean())}
+        for b in RATIO_BINS:
+            row[f"<= {b}x"] = float((arr <= b).mean())
+        rows.append(row)
+    print_csv(rows, "fig11_memory_ratio_cdf")
+    return {"ratios": {k: list(map(float, v)) for k, v in ratios.items()}}
+
+
+if __name__ == "__main__":
+    run()

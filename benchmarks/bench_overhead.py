@@ -1,0 +1,53 @@
+"""Paper Fig. 10: amortization profile — for each method, after how many
+SpGEMM iterations does the preprocessing pay for itself? Uses the cached
+measurements from the Fig. 2/3 sweeps (same-sweep reuse as the paper).
+
+Amortization iterations x for (matrix, method):
+    x = preprocess_s / (base_kernel_s - method_kernel_s)   (improvements only)
+A point (x, y) on the profile: fraction y of improved inputs amortize
+within x iterations.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.benchlib import bench_clusterwise_on, bench_rowwise_on
+from repro.core.suite import generate
+
+from benchmarks.common import print_csv, tier_reorders, tier_specs
+
+XS = [1, 2, 5, 10, 20, 50, 100]
+
+
+def run(tier: str = "default") -> dict:
+    specs = tier_specs(tier)
+    reorders = [r for r in tier_reorders(tier) if r != "hp"]  # paper excl. HP
+    methods: dict[str, list[float]] = {}
+    for spec in specs:
+        a = generate(spec)
+        base = bench_rowwise_on(a, "original", name=spec.name)
+        for algo in reorders:
+            r = bench_rowwise_on(a, algo, name=spec.name)
+            gain = base.kernel_s - r.kernel_s
+            if gain > 0:
+                methods.setdefault(algo, []).append(r.preprocess_s / gain)
+        rh = bench_clusterwise_on(a, "original", "hierarchical",
+                                  name=spec.name)
+        gain = base.kernel_s - rh.kernel_s
+        if gain > 0:
+            methods.setdefault("hierarchical", []).append(
+                rh.preprocess_s / gain)
+
+    rows = []
+    for m, xs in sorted(methods.items()):
+        arr = np.asarray(xs)
+        row = {"method": m, "improved_n": len(xs)}
+        for x in XS:
+            row[f"within_{x}"] = float((arr <= x).mean())
+        rows.append(row)
+    print_csv(rows, "fig10_amortization_profile")
+    return {"methods": {m: list(map(float, v)) for m, v in methods.items()}}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Paper Fig. 2 + Fig. 9 + Table 2 'Row-wise' columns: speedup of row-wise
+A² SpGEMM after each reordering, relative to original order."""
+from __future__ import annotations
+
+from repro.benchlib import bench_rowwise_on
+from repro.core.suite import generate
+
+from benchmarks.common import print_csv, summarize, tier_reorders, tier_specs
+
+
+def run(tier: str = "default") -> dict:
+    specs = tier_specs(tier)
+    reorders = tier_reorders(tier)
+    per_algo: dict[str, dict[str, float]] = {a: {} for a in reorders}
+    rows = []
+    for spec in specs:
+        a = generate(spec)
+        base = bench_rowwise_on(a, "original", name=spec.name)
+        row = {"matrix": spec.name,
+               "base_us": base.kernel_s * 1e6}
+        for algo in reorders:
+            r = bench_rowwise_on(a, algo, name=spec.name)
+            sp = base.kernel_s / r.kernel_s
+            per_algo[algo][spec.name] = sp
+            row[algo] = sp
+        rows.append(row)
+    print_csv(rows, "fig2_rowwise_speedup_by_reorder")
+    summary = []
+    for algo in reorders:
+        s = summarize(per_algo[algo])
+        summary.append({"algo": algo, **s})
+    print_csv(summary, "table2_rowwise_GM_Pos_+GM")
+    return {"per_algo": per_algo}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Paper Table 3 + Table 4: square × tall-skinny SpGEMM (BFS-frontier-like
+B) — reordering on row-wise SpMM, and hierarchical cluster-wise vs row-wise
+across 10 frontier iterations."""
+from __future__ import annotations
+
+from repro.benchlib import bench_tallskinny_on
+from repro.core.suite import generate
+
+from benchmarks.common import print_csv, tier_reorders, tier_specs
+
+
+def run(tier: str = "default") -> dict:
+    specs = tier_specs("quick" if tier == "quick" else "default")[:10]
+    reorders = tier_reorders(tier)
+    rows = []
+    for spec in specs:
+        a = generate(spec)
+        base = bench_tallskinny_on(a, "original", "rowwise", name=spec.name)
+        row = {"matrix": spec.name}
+        for algo in reorders:
+            r = bench_tallskinny_on(a, algo, "rowwise", name=spec.name)
+            row[algo] = base.kernel_s / r.kernel_s
+        rows.append(row)
+    print_csv(rows, "table3_tallskinny_rowwise_reorder_speedup")
+
+    # Table 4: hierarchical cluster-wise vs row-wise over 10 frontiers
+    iters = 10 if tier != "quick" else 3
+    rows4 = []
+    for spec in specs:
+        a = generate(spec)
+        row = {"matrix": spec.name}
+        vals = []
+        for it in range(iters):
+            base = bench_tallskinny_on(a, "original", "rowwise",
+                                       name=spec.name, frontier_seed=it)
+            r = bench_tallskinny_on(a, "original", "hierarchical",
+                                    name=spec.name, frontier_seed=it)
+            sp = base.kernel_s / r.kernel_s
+            row[f"i{it+1}"] = sp
+            vals.append(sp)
+        row["mean"] = sum(vals) / len(vals)
+        rows4.append(row)
+    print_csv(rows4, "table4_hierarchical_tallskinny_per_frontier")
+    return {}
+
+
+if __name__ == "__main__":
+    run()

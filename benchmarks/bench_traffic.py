@@ -1,0 +1,83 @@
+"""Mechanism-level reproduction (the paper's §3.1 motivation, measured):
+B-row fetch volume of row-wise vs cluster-wise SpGEMM.
+
+Wall-clock on this container cannot show the paper's L2-residency effect
+(jitted XLA-CPU scatter/gather SpGEMM is compute-bound at suite sizes, and
+CSR_Cluster's padded value slabs ADD multiply work) — documented as a
+negative result in EXPERIMENTS.md. What *does* transfer to the target
+hardware is the dataflow's traffic profile, which this table measures
+exactly:
+
+  * row-wise fetches a B row per A-nonzero           → nnz fetches;
+  * cluster-wise fetches a B row per (cluster, col)  → slot fetches
+    (deduplicated across the cluster's rows — Alg. 1's whole point);
+  * fetch_ratio = nnz / slots  ≥ 1 is the modeled reuse factor (on TPU:
+    the reduction in HBM→VMEM B-tile traffic of kernels/cluster_spmm.py);
+  * pad_ratio = padded-slab multiply work / useful multiplies (the cost the
+    format pays; the compact-grid kernel removes the inter-tile share).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.clustering import (fixed_length_clusters,
+                                   hierarchical_clusters,
+                                   variable_length_clusters)
+from repro.core.suite import generate
+
+from benchmarks.common import geomean, print_csv, tier_specs
+
+
+def _slots(a, boundaries) -> int:
+    bounds = list(boundaries) + [a.nrows]
+    total = 0
+    for c in range(len(bounds) - 1):
+        lo, hi = bounds[c], bounds[c + 1]
+        cols = np.concatenate([a.row(i)[0] for i in range(lo, hi)]
+                              or [np.empty(0, np.int32)])
+        total += np.unique(cols).size
+    return total
+
+
+def run(tier: str = "default") -> dict:
+    specs = tier_specs(tier)
+    rows = []
+    ratios = {"fixed": [], "variable": [], "hierarchical": []}
+    for spec in specs:
+        a = generate(spec)
+        nnz = a.nnz
+        row = {"matrix": spec.name, "nnz": nnz}
+        for scheme in ("fixed", "variable", "hierarchical"):
+            if scheme == "fixed":
+                cl, ar = fixed_length_clusters(a, 8), a
+            elif scheme == "variable":
+                cl, ar = variable_length_clusters(a), a
+            else:
+                cl = hierarchical_clusters(a)
+                ar = a.permute_symmetric(cl.perm)
+            slots = _slots(ar, cl.boundaries.tolist())
+            # padded multiplies: Σ_cluster |cols| × size  vs useful nnz
+            bounds = list(cl.boundaries) + [ar.nrows]
+            padded_mults = 0
+            for c in range(len(bounds) - 1):
+                lo, hi = bounds[c], bounds[c + 1]
+                cols = np.concatenate(
+                    [ar.row(i)[0] for i in range(lo, hi)]
+                    or [np.empty(0, np.int32)])
+                padded_mults += np.unique(cols).size * (hi - lo)
+            fetch_ratio = nnz / max(slots, 1)
+            row[f"{scheme}_fetch_ratio"] = fetch_ratio
+            row[f"{scheme}_pad_ratio"] = padded_mults / max(nnz, 1)
+            ratios[scheme].append(fetch_ratio)
+        rows.append(row)
+    print_csv(rows, "traffic_fetch_and_padding_per_matrix")
+    print_csv([{"scheme": s,
+                "fetch_ratio_gm": geomean(v),
+                "pos_pct": 100.0 * sum(r > 1.001 for r in v) / len(v)}
+               for s, v in ratios.items()],
+              "traffic_summary_modeled_reuse")
+    return {"ratios": {k: list(map(float, v)) for k, v in ratios.items()}}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Shared CLI/reporting utilities for the paper-table benchmarks."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.benchlib import representative_subset
+from repro.core.suite import SUITE
+
+REORDERS = ["random", "rabbit", "amd", "rcm", "nd", "gp", "hp", "gray",
+            "degree", "slashburn"]
+
+
+def tier_specs(tier: str):
+    if tier == "quick":
+        return representative_subset(8)
+    if tier == "default":
+        return representative_subset(24)
+    if tier == "full":
+        return list(SUITE)
+    raise ValueError(tier)
+
+
+def tier_reorders(tier: str) -> list[str]:
+    if tier == "quick":
+        return ["random", "rcm", "gp", "degree", "gray"]
+    return REORDERS
+
+
+def geomean(xs) -> float:
+    xs = np.asarray([x for x in xs if x > 0], dtype=np.float64)
+    return float(np.exp(np.log(xs).mean())) if xs.size else float("nan")
+
+
+def summarize(speedups: dict[str, float]) -> dict:
+    vals = list(speedups.values())
+    pos = [v for v in vals if v > 1.0]
+    return {
+        "gm": geomean(vals),
+        "pos_pct": 100.0 * len(pos) / max(len(vals), 1),
+        "pos_gm": geomean(pos),
+        "max": max(vals) if vals else float("nan"),
+    }
+
+
+def print_csv(rows: list[dict], title: str) -> None:
+    if not rows:
+        print(f"# {title}: no rows")
+        return
+    cols = list(rows[0].keys())
+    print(f"# {title}")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(f"{r[c]:.4g}" if isinstance(r[c], float)
+                       else str(r[c]) for c in cols))

@@ -1,0 +1,57 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import print_csv
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+def load_reports(mesh: str | None = None) -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        out.append(r)
+    return out
+
+
+def run(tier: str = "default") -> dict:
+    rows = []
+    skipped = []
+    failed = []
+    for r in load_reports():
+        if r["status"] == "skipped":
+            skipped.append(f'{r["arch"]}×{r["shape"]}×{r["mesh"]}')
+            continue
+        if r["status"] != "ok":
+            failed.append(f'{r["arch"]}×{r["shape"]}×{r["mesh"]}')
+            continue
+        rf = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "chips": rf["chips"],
+            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"],
+            "bottleneck": rf["bottleneck"],
+            "useful_ratio": rf["useful_ratio"],
+            "peak_frac": rf["peak_fraction"],
+            "temp_GiB": rf["memory_stats"]["temp_size_in_bytes"] / 2**30,
+        })
+    rows.sort(key=lambda x: (x["arch"], x["shape"], x["mesh"]))
+    print_csv(rows, "roofline_per_cell")
+    if skipped:
+        print(f"# skipped cells (documented): {'; '.join(skipped)}")
+    if failed:
+        print(f"# FAILED cells: {'; '.join(failed)}")
+    return {"rows": rows, "failed": failed}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--tier quick|default|full]
+                                            [--only fig2,fig3,...]
+
+Tiers: quick (8 matrices, 5 reorderings — CI-speed), default (24 matrices,
+all 10 reorderings), full (the whole 110-matrix suite; hours on CPU).
+Measurements are cached in experiments/bench_cache.json so Table 2 / Fig. 10
+reuse the Fig. 2/3 sweep, like the paper does.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro import benchlib
+
+from benchmarks import (bench_clusterwise, bench_kernels, bench_memory,
+                        bench_overhead, bench_reorder_rowwise,
+                        bench_tallskinny, bench_traffic, roofline_report)
+
+TABLES = {
+    "fig2": ("Fig.2/Table2 row-wise reorder", bench_reorder_rowwise.run),
+    "fig3": ("Fig.3/Fig.8/Table2 cluster-wise", bench_clusterwise.run),
+    "table3": ("Table3/Table4 tall-skinny", bench_tallskinny.run),
+    "fig10": ("Fig.10 amortization", bench_overhead.run),
+    "fig11": ("Fig.11 memory", bench_memory.run),
+    "traffic": ("B-fetch traffic model (mechanism)", bench_traffic.run),
+    "kernels": ("BCC kernel occupancy/VMEM", bench_kernels.run),
+    "roofline": ("TPU roofline (from dry-run)", roofline_report.run),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tier", choices=["quick", "default", "full"],
+                    default="quick")
+    ap.add_argument("--only", help="comma-separated table keys")
+    args = ap.parse_args()
+
+    keys = list(TABLES) if not args.only else args.only.split(",")
+    benchlib.load_cache()
+    t_all = time.time()
+    for k in keys:
+        title, fn = TABLES[k]
+        print(f"\n===== {k}: {title} (tier={args.tier}) =====")
+        t0 = time.time()
+        try:
+            fn(args.tier)
+        except Exception as e:    # keep the harness going; report at end
+            print(f"# {k} FAILED: {type(e).__name__}: {e}")
+            raise
+        finally:
+            benchlib.save_cache()
+        print(f"# {k} done in {time.time()-t0:.1f}s")
+    print(f"\n# all benchmarks done in {time.time()-t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Serve a small MoE model with batched requests through the continuous-
+batching engine — the cluster-wise dispatch (paper Alg. 1 ↔ models/moe.py)
+running in its natural habitat.
+
+    PYTHONPATH=src python examples/serve_moe.py
+"""
+import numpy as np
+
+from repro.configs.base import smoke_config
+from repro.launch.serve import run_serving
+from repro.models.transformer import init_params
+from repro.serve.engine import Request, ServingEngine
+
+import jax
+
+
+def main() -> None:
+    # 1) batched prefill+decode throughput path
+    out = run_serving("moonshot-v1-16b-a3b", smoke=True, batch=4,
+                      prompt_len=16, gen=24)
+    print(f"[batched] prefill {out['prefill_s']:.2f}s decode "
+          f"{out['decode_s']:.2f}s ({out['decode_tok_per_s']:.1f} tok/s)")
+
+    # 2) continuous-batching engine with ragged request arrival
+    cfg = smoke_config("granite-moe-3b-a800m")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, slots=4, max_len=128)
+    rng = np.random.default_rng(0)
+    for i in range(6):
+        eng.submit(Request(
+            prompt=rng.integers(0, cfg.vocab_size, 4 + 2 * i),
+            max_new_tokens=8 + 4 * i))
+    eng.run(steps=64)
+    done = 6 - sum(r is not None for r in eng.requests) - len(eng._queue)
+    print(f"[engine] completed {done}/6 ragged requests through 4 slots ✓")
+
+
+if __name__ == "__main__":
+    main()

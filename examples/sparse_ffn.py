@@ -1,0 +1,52 @@
+"""Sparse-weight FFN via the paper's full pipeline (prune → reorder →
+cluster → BCC → cluster-wise Pallas kernel), as a drop-in linear layer.
+
+    PYTHONPATH=src python examples/sparse_ffn.py
+
+Shows: exactness vs the dense-pruned reference, the tile statistics that
+predict the TPU win (live-tile reduction from hierarchical clustering =
+fewer HBM→VMEM B-tile fetches), and the memory saving vs dense storage.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.models.sparse_linear import SparseLinear, magnitude_prune
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    d_in, d_out, density = 8192, 512, 0.02
+    n_tiles = d_in // 128
+
+    # weights with latent row structure: groups of filters draw their
+    # support from a few shared 128-wide column tiles (structured pruning
+    # leaves exactly this shape), then rows are shuffled so the structure
+    # is invisible in storage order.
+    w = np.zeros((d_out, d_in), np.float32)
+    tile_sets = [rng.choice(n_tiles, 5, replace=False) for _ in range(16)]
+    for i in range(d_out):
+        for t in tile_sets[i % 16]:
+            cols = t * 128 + rng.choice(128, 32, replace=False)
+            w[i, cols] = rng.standard_normal(cols.size) * 2.0
+    w = w[rng.permutation(d_out)]
+
+    for reorder in ("original", "hierarchical"):
+        lin = SparseLinear.from_dense(w, density=density, reorder=reorder)
+        s = lin.stats
+        print(f"[{reorder:12s}] live B-tiles {s['live_tiles']:5d} "
+              f"(unordered {s['live_tiles_unordered']}), "
+              f"tile_reduction {s['tile_reduction']:.1%}, "
+              f"pad {s['pad_fraction']:.1%}, "
+              f"bytes {s['bcc_bytes']/2**20:.2f} MiB "
+              f"vs dense {s['dense_bytes']/2**20:.2f} MiB")
+
+    lin = SparseLinear.from_dense(w, density=density, reorder="hierarchical")
+    x = jnp.asarray(rng.standard_normal((4, 16, d_in)), jnp.float32)
+    y = np.asarray(lin.apply(x, interpret=True))
+    want = np.asarray(x) @ magnitude_prune(w, density).T
+    np.testing.assert_allclose(y, want, rtol=1e-3, atol=1e-3)
+    print("cluster-wise kernel output matches dense-pruned reference ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Mini reproduction of the paper's headline study on a 12-matrix subset:
+10 reorderings × {row-wise, fixed, variable, hierarchical} on A².
+
+    PYTHONPATH=src python examples/spgemm_study.py [--limit 12]
+
+Prints a per-matrix speedup table relative to row-wise/original order —
+the shape of paper Fig. 2 / Fig. 3 / Table 2 (full suite: benchmarks/).
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.benchlib import (bench_clusterwise_on, bench_rowwise_on,
+                            representative_subset)
+from repro.core.suite import generate
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--limit", type=int, default=12)
+    ap.add_argument("--reorders", nargs="*",
+                    default=["original", "rcm", "gp", "degree"])
+    args = ap.parse_args()
+
+    specs = representative_subset(args.limit)
+    print(f"{'matrix':<18}" + "".join(f"{r:>10}" for r in args.reorders)
+          + f"{'fixed':>10}{'variable':>10}{'hier':>10}")
+    for spec in specs:
+        a = generate(spec)
+        base = bench_rowwise_on(a, "original")
+        row = [spec.name[:17]]
+        for algo in args.reorders:
+            t = bench_rowwise_on(a, algo)
+            row.append(f"{base.kernel_s / t.kernel_s:9.2f}x")
+        for scheme in ("fixed", "variable", "hierarchical"):
+            t = bench_clusterwise_on(a, "original", scheme)
+            row.append(f"{base.kernel_s / t.kernel_s:9.2f}x")
+        print(f"{row[0]:<18}" + "".join(row[1:]))
+
+
+if __name__ == "__main__":
+    main()

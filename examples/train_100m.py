@@ -1,0 +1,67 @@
+"""End-to-end driver: train a ~100M-param qwen3-family model for a few
+hundred steps on CPU with checkpoint/restart mid-run.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300]
+
+The model is the qwen3 *family* scaled to ~100M params (real GQA + qk-norm +
+SwiGLU backbone); data is the deterministic motif-mixture stream from
+repro.data (learnable, so the loss visibly drops). Halfway through, the run
+simulates a failure: the process state is discarded and training resumes
+from the latest checkpoint — the loss curve must continue, not restart.
+"""
+import argparse
+import dataclasses
+import tempfile
+
+from repro.configs.qwen3_14b import CONFIG as QWEN3
+from repro.launch.train import run_training
+
+# ~100M params in the qwen3 family (12L, d_model 512, GQA 8/2, qk-norm)
+ARCH = "qwen3-14b"
+
+
+def hundred_m_config():
+    import repro.configs.qwen3_14b as q
+    # ≈100M params: 16L × (1.0M attn + 3.9M swiglu) + 2×10.5M embeddings
+    return dataclasses.replace(
+        q.CONFIG, name="qwen3-100m", num_layers=16, d_model=640,
+        num_heads=8, num_kv_heads=2, head_dim=80, d_ff=2048,
+        vocab_size=16384)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    # monkey-patch the smoke config to the 100M variant for this run
+    import repro.configs.qwen3_14b as q
+    orig = q.smoke_config
+    q.smoke_config = hundred_m_config
+    try:
+        with tempfile.TemporaryDirectory() as ckpt:
+            half = args.steps // 2
+            print(f"=== phase 1: steps 0..{half} (then simulated failure)")
+            out1 = run_training(ARCH, smoke=True, steps=half,
+                                batch=args.batch, seq=args.seq,
+                                ckpt_dir=ckpt, ckpt_every=max(half // 3, 10))
+            print("=== simulated failure: process state dropped; "
+                  "restart from checkpoint")
+            out2 = run_training(ARCH, smoke=True, steps=args.steps,
+                                batch=args.batch, seq=args.seq,
+                                ckpt_dir=ckpt,
+                                ckpt_every=max(args.steps // 4, 10))
+            print(f"=== loss: start {out1['first_loss']:.3f} → "
+                  f"mid {out1['final_loss']:.3f} → "
+                  f"final {out2['final_loss']:.3f}")
+            assert out2["final_loss"] < out1["first_loss"], \
+                "training did not reduce loss"
+            print("loss decreased across the simulated failure ✓")
+    finally:
+        q.smoke_config = orig
+
+
+if __name__ == "__main__":
+    main()

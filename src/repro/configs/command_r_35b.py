@@ -1,0 +1,19 @@
+"""command-r-35b — dense GQA decoder, no biases, 256k vocab
+[hf:CohereForAI/c4ai-command-r-v01].
+
+40L d_model 8192, 64H GQA kv=8 (head_dim 128), d_ff 22528, vocab 256000.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-35b", family="dense",
+    num_layers=40, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=22528, vocab_size=256000, head_dim=128, rope_theta=8.0e6,
+    tie_embeddings=True)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="command-r-smoke", family="dense",
+        num_layers=2, d_model=64, num_heads=8, num_kv_heads=2,
+        d_ff=128, vocab_size=256, head_dim=8, tie_embeddings=True)

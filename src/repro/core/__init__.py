@@ -1,0 +1,24 @@
+"""Core library: the paper's contribution — reordering, clustering, and
+cluster-wise SpGEMM with the CSR_Cluster / BCC formats."""
+from repro.core.formats import (BCC, CSR, CSRCluster, HostCSR, bcc_from_host,
+                                csr_cluster_from_host,
+                                csr_cluster_nbytes_exact, csr_from_host,
+                                csr_nbytes)
+from repro.core.clustering import (Clustering, DEFAULT_JACC_TH,
+                                   DEFAULT_MAX_CLUSTER, fixed_length_clusters,
+                                   hierarchical_clusters,
+                                   variable_length_clusters)
+from repro.core.reorder import REORDERINGS, reorder
+from repro.core.spgemm import (flops_spgemm, spgemm_clusterwise_dense,
+                               spgemm_reference, spgemm_rowwise_dense,
+                               spmm_clusterwise, spmm_rowwise, symbolic_nnz)
+
+__all__ = [
+    "BCC", "CSR", "CSRCluster", "HostCSR", "bcc_from_host",
+    "csr_cluster_from_host", "csr_cluster_nbytes_exact", "csr_from_host",
+    "csr_nbytes", "Clustering", "DEFAULT_JACC_TH", "DEFAULT_MAX_CLUSTER",
+    "fixed_length_clusters", "hierarchical_clusters",
+    "variable_length_clusters", "REORDERINGS", "reorder", "flops_spgemm",
+    "spgemm_clusterwise_dense", "spgemm_reference", "spgemm_rowwise_dense",
+    "spmm_clusterwise", "spmm_rowwise", "symbolic_nnz",
+]

@@ -1,0 +1,156 @@
+"""The paper's three clustering strategies (§3.2–§3.3).
+
+All three return *cluster boundaries over consecutive rows* of a (possibly
+reordered) matrix plus, for hierarchical clustering, the row permutation that
+makes its clusters consecutive. This uniform output feeds directly into
+``formats.csr_cluster_from_host`` / ``formats.bcc_from_host``.
+
+* :func:`fixed_length_clusters` — every R consecutive rows (paper §3.2).
+* :func:`variable_length_clusters` — Alg. 2: greedy scan, join the open
+  cluster iff Jaccard(representative, row) ≥ jacc_th, cap at max_cluster_th.
+* :func:`hierarchical_clusters` — Alg. 3: candidate pairs from binarized
+  SpGEMM(A·Aᵀ) top-K, max-heap + union–find merging with lazy rescoring,
+  clusters used directly (reordering is implicit in the cluster layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+from repro.core.formats import HostCSR
+from repro.core.similarity import jaccard_pairs_topk
+
+__all__ = ["Clustering", "fixed_length_clusters", "variable_length_clusters",
+           "hierarchical_clusters", "DEFAULT_JACC_TH", "DEFAULT_MAX_CLUSTER"]
+
+DEFAULT_JACC_TH = 0.3      # paper §3.2
+DEFAULT_MAX_CLUSTER = 8    # paper §3.2
+
+
+@dataclasses.dataclass(frozen=True)
+class Clustering:
+    """Cluster boundaries over consecutive rows of ``matrix`` (which may be a
+    reordered view of the input; ``perm`` maps new→old rows)."""
+
+    boundaries: np.ndarray          # (nclusters,) start rows, sorted, [0]==0
+    perm: np.ndarray                # (nrows,) new→old
+    max_cluster: int
+
+    @property
+    def nclusters(self) -> int:
+        return int(self.boundaries.shape[0])
+
+    def sizes(self, nrows: int) -> np.ndarray:
+        b = np.concatenate([self.boundaries, [nrows]])
+        return np.diff(b)
+
+
+def fixed_length_clusters(a: HostCSR, length: int = DEFAULT_MAX_CLUSTER
+                          ) -> Clustering:
+    if length < 1:
+        raise ValueError("cluster length must be >= 1")
+    return Clustering(
+        boundaries=np.arange(0, a.nrows, length, dtype=np.int64),
+        perm=np.arange(a.nrows, dtype=np.int64),
+        max_cluster=length)
+
+
+def variable_length_clusters(a: HostCSR,
+                             jacc_th: float = DEFAULT_JACC_TH,
+                             max_cluster_th: int = DEFAULT_MAX_CLUSTER
+                             ) -> Clustering:
+    """Alg. 2 — representative-row greedy scan, no reordering."""
+    bounds = [0]
+    rep = 0
+    size = 1
+    for i in range(1, a.nrows):
+        score = a.jaccard(rep, i)
+        if score < jacc_th or size == max_cluster_th:
+            bounds.append(i)
+            rep, size = i, 1
+        else:
+            size += 1
+    return Clustering(boundaries=np.asarray(bounds, dtype=np.int64),
+                      perm=np.arange(a.nrows, dtype=np.int64),
+                      max_cluster=max_cluster_th)
+
+
+class _UnionFind:
+    __slots__ = ("parent", "size")
+
+    def __init__(self, n: int):
+        self.parent = np.arange(n, dtype=np.int64)
+        self.size = np.ones(n, dtype=np.int64)
+
+    def find(self, x: int) -> int:
+        root = x
+        while self.parent[root] != root:
+            root = int(self.parent[root])
+        while self.parent[x] != root:       # path compression
+            self.parent[x], x = root, int(self.parent[x])
+        return root
+
+    def union(self, x: int, y: int) -> int:
+        rx, ry = self.find(x), self.find(y)
+        if rx == ry:
+            return rx
+        if self.size[rx] < self.size[ry]:
+            rx, ry = ry, rx
+        self.parent[ry] = rx
+        self.size[rx] += self.size[ry]
+        return rx
+
+
+def hierarchical_clusters(a: HostCSR,
+                          jacc_th: float = DEFAULT_JACC_TH,
+                          max_cluster_th: int = DEFAULT_MAX_CLUSTER
+                          ) -> Clustering:
+    """Alg. 3 — SpGEMM-driven candidate pairs + union–find merging.
+
+    Follows the paper: top-K (= max_cluster_th − 1) candidate pairs per row
+    from binarized SpGEMM(A·Aᵀ); a max-heap pops the most similar pair; if
+    both endpoints are live cluster roots they merge; otherwise the pair is
+    *re-scored* between the two current roots (lazily, with memoization via
+    ``candidate_pairs``) and re-inserted if still above threshold. Cluster
+    size is capped at ``max_cluster_th``. The final clusters are laid out
+    contiguously (the implicit reordering the paper exploits), members in
+    original-row order, clusters sequenced by their smallest member row.
+    """
+    topk = max(max_cluster_th - 1, 1)
+    cand = jaccard_pairs_topk(a, topk, jacc_th)
+    seen: set[tuple[int, int]] = {(i, j) for _, i, j in cand}
+    heap = [(-s, i, j) for s, i, j in cand]
+    heapq.heapify(heap)
+    uf = _UnionFind(a.nrows)
+
+    while heap:
+        negs, i, j = heapq.heappop(heap)
+        ri, rj = uf.find(i), uf.find(j)
+        if ri == rj:
+            continue
+        if i == ri and j == rj:
+            if uf.size[ri] + uf.size[rj] <= max_cluster_th:
+                uf.union(ri, rj)
+            continue
+        # endpoints stale → rescore between live roots (Alg. 3 lines 12–21)
+        lo, hi = (ri, rj) if ri < rj else (rj, ri)
+        if (lo, hi) in seen:
+            continue
+        seen.add((lo, hi))
+        score = a.jaccard(lo, hi)
+        if score > jacc_th and uf.size[lo] + uf.size[hi] <= max_cluster_th:
+            heapq.heappush(heap, (-score, lo, hi))
+
+    # lay clusters out contiguously: members sorted, clusters by min member
+    roots: dict[int, list[int]] = {}
+    for v in range(a.nrows):
+        roots.setdefault(uf.find(v), []).append(v)
+    groups = sorted(roots.values(), key=lambda g: g[0])
+    perm = np.fromiter((v for g in groups for v in g), dtype=np.int64,
+                       count=a.nrows)
+    sizes = np.fromiter((len(g) for g in groups), dtype=np.int64)
+    bounds = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    return Clustering(boundaries=bounds.astype(np.int64), perm=perm,
+                      max_cluster=max_cluster_th)

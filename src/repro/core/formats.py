@@ -1,0 +1,487 @@
+"""Sparse matrix formats: CSR, CSR_Cluster, and BCC (block-clustered-columns).
+
+Two tiers:
+
+* **Host tier** (`HostCSR`) — plain numpy, ragged, used by the preprocessing
+  pipeline (reordering, clustering, format construction). Mirrors the paper's
+  CPU-side CSR exactly.
+* **Device tier** (`CSR`, `CSRCluster`, `BCC`) — JAX pytrees with *static*
+  shapes (padded capacities) so every kernel jits. Padding convention:
+  ``col == ncols`` sentinel / zero values contribute nothing.
+
+The CSR_Cluster device layout pads rows-in-cluster to ``max_cluster`` (K) so
+the value slab is a rectangular ``(col_slots, K)`` array — column ids are
+still deduplicated per cluster, which is the format's memory win. The *exact*
+ragged footprint the paper reports (Fig. 11) is computed analytically by
+:func:`csr_cluster_nbytes_exact` without materializing the ragged layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "HostCSR",
+    "CSR",
+    "CSRCluster",
+    "BCC",
+    "csr_from_host",
+    "csr_cluster_from_host",
+    "bcc_from_host",
+    "csr_cluster_nbytes_exact",
+    "csr_nbytes",
+]
+
+# ---------------------------------------------------------------------------
+# Host tier
+# ---------------------------------------------------------------------------
+
+
+class HostCSR:
+    """Numpy CSR with the preprocessing operations the paper needs.
+
+    Invariants: ``indptr`` is int64 non-decreasing of length ``nrows+1``;
+    column indices within a row are sorted ascending; no explicit zeros
+    required (but tolerated).
+    """
+
+    __slots__ = ("indptr", "indices", "data", "shape")
+
+    def __init__(self, indptr, indices, data, shape):
+        self.indptr = np.asarray(indptr, dtype=np.int64)
+        self.indices = np.asarray(indices, dtype=np.int32)
+        self.data = np.asarray(data, dtype=np.float32)
+        self.shape = (int(shape[0]), int(shape[1]))
+        if self.indptr.shape[0] != self.shape[0] + 1:
+            raise ValueError("indptr length mismatch")
+        if self.indices.shape[0] != self.data.shape[0]:
+            raise ValueError("indices/data length mismatch")
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def from_coo(cls, rows, cols, vals, shape, *, sum_duplicates=True) -> "HostCSR":
+        rows = np.asarray(rows, dtype=np.int64)
+        cols = np.asarray(cols, dtype=np.int64)
+        vals = np.asarray(vals, dtype=np.float32)
+        nrows, ncols = shape
+        order = np.lexsort((cols, rows))
+        rows, cols, vals = rows[order], cols[order], vals[order]
+        if sum_duplicates and rows.size:
+            key = rows * ncols + cols
+            uniq, inv = np.unique(key, return_inverse=True)
+            newv = np.zeros(uniq.shape[0], dtype=np.float64)
+            np.add.at(newv, inv, vals)
+            rows = (uniq // ncols).astype(np.int64)
+            cols = (uniq % ncols).astype(np.int64)
+            vals = newv.astype(np.float32)
+        indptr = np.zeros(nrows + 1, dtype=np.int64)
+        np.add.at(indptr, rows + 1, 1)
+        np.cumsum(indptr, out=indptr)
+        return cls(indptr, cols.astype(np.int32), vals, shape)
+
+    @classmethod
+    def from_dense(cls, dense) -> "HostCSR":
+        dense = np.asarray(dense)
+        rows, cols = np.nonzero(dense)
+        return cls.from_coo(rows, cols, dense[rows, cols], dense.shape,
+                            sum_duplicates=False)
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros(self.shape, dtype=np.float32)
+        for i in range(self.shape[0]):
+            s, e = self.indptr[i], self.indptr[i + 1]
+            out[i, self.indices[s:e]] = self.data[s:e]
+        return out
+
+    # -- basic properties ----------------------------------------------------
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def nrows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def ncols(self) -> int:
+        return self.shape[1]
+
+    def row_nnz(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    def row(self, i: int) -> tuple[np.ndarray, np.ndarray]:
+        s, e = self.indptr[i], self.indptr[i + 1]
+        return self.indices[s:e], self.data[s:e]
+
+    # -- transforms ----------------------------------------------------------
+
+    def binarize(self) -> "HostCSR":
+        return HostCSR(self.indptr, self.indices,
+                       np.ones_like(self.data), self.shape)
+
+    def transpose(self) -> "HostCSR":
+        """O(nnz) counting transpose (Gustavson's permuted transposition)."""
+        nrows, ncols = self.shape
+        cnt = np.zeros(ncols + 1, dtype=np.int64)
+        np.add.at(cnt, self.indices.astype(np.int64) + 1, 1)
+        indptr_t = np.cumsum(cnt)
+        indices_t = np.empty(self.nnz, dtype=np.int32)
+        data_t = np.empty(self.nnz, dtype=np.float32)
+        # expand row ids then stable-sort by column
+        row_ids = np.repeat(np.arange(nrows, dtype=np.int32), self.row_nnz())
+        order = np.argsort(self.indices, kind="stable")
+        indices_t[:] = row_ids[order]
+        data_t[:] = self.data[order]
+        return HostCSR(indptr_t, indices_t, data_t, (ncols, nrows))
+
+    def permute_rows(self, perm: np.ndarray) -> "HostCSR":
+        """Return A[perm, :] — ``perm[new_row] = old_row``."""
+        perm = np.asarray(perm, dtype=np.int64)
+        counts = self.row_nnz()[perm]
+        indptr = np.zeros(self.nrows + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        indices = np.empty(self.nnz, dtype=np.int32)
+        data = np.empty(self.nnz, dtype=np.float32)
+        for new_i, old_i in enumerate(perm):
+            s, e = self.indptr[old_i], self.indptr[old_i + 1]
+            d = indptr[new_i]
+            indices[d:d + e - s] = self.indices[s:e]
+            data[d:d + e - s] = self.data[s:e]
+        return HostCSR(indptr, indices, data, self.shape)
+
+    def permute_symmetric(self, perm: np.ndarray) -> "HostCSR":
+        """Return PAPᵀ — rows and columns permuted together (square only)."""
+        if self.nrows != self.ncols:
+            raise ValueError("symmetric permutation needs a square matrix")
+        perm = np.asarray(perm, dtype=np.int64)
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(perm.shape[0])
+        rowperm = self.permute_rows(perm)
+        # remap and re-sort column ids within each row
+        newcols = inv[rowperm.indices.astype(np.int64)].astype(np.int32)
+        indices = np.empty_like(newcols)
+        data = np.empty_like(rowperm.data)
+        for i in range(self.nrows):
+            s, e = rowperm.indptr[i], rowperm.indptr[i + 1]
+            o = np.argsort(newcols[s:e], kind="stable")
+            indices[s:e] = newcols[s:e][o]
+            data[s:e] = rowperm.data[s:e][o]
+        return HostCSR(rowperm.indptr, indices, data, self.shape)
+
+    def jaccard(self, i: int, j: int) -> float:
+        """Jaccard similarity of the column-id sets of rows i and j."""
+        a, _ = self.row(i)
+        b, _ = self.row(j)
+        if a.size == 0 and b.size == 0:
+            return 1.0
+        inter = np.intersect1d(a, b, assume_unique=True).size
+        union = a.size + b.size - inter
+        return inter / union if union else 0.0
+
+    def nbytes(self, index_bytes: int = 4, value_bytes: int = 4,
+               ptr_bytes: int = 8) -> int:
+        return (self.indptr.size * ptr_bytes
+                + self.indices.size * index_bytes
+                + self.data.size * value_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Device tier
+# ---------------------------------------------------------------------------
+
+
+def _register(cls):
+    fields = [f.name for f in dataclasses.fields(cls)]
+    data = [f for f in fields if f not in cls._static]
+    jax.tree_util.register_dataclass(cls, data_fields=data,
+                                     meta_fields=list(cls._static))
+    return cls
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Static-shape CSR: padded to ``nnz_cap``; pad cols == ncols, vals 0."""
+
+    _static = ("nrows", "ncols")
+
+    indptr: jax.Array        # (nrows+1,) int32
+    indices: jax.Array       # (nnz_cap,) int32, padded with ncols
+    data: jax.Array          # (nnz_cap,) float
+    nrows: int
+    ncols: int
+
+    @property
+    def nnz_cap(self) -> int:
+        return self.indices.shape[0]
+
+    def to_dense(self) -> jax.Array:
+        row_ids = jnp.searchsorted(
+            self.indptr, jnp.arange(self.nnz_cap, dtype=jnp.int32),
+            side="right") - 1
+        valid = self.indices < self.ncols
+        rows = jnp.where(valid, row_ids, 0)
+        cols = jnp.where(valid, self.indices, 0)
+        vals = jnp.where(valid, self.data, 0.0)
+        out = jnp.zeros((self.nrows, self.ncols), self.data.dtype)
+        return out.at[rows, cols].add(vals)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class CSRCluster:
+    """Device CSR_Cluster (paper Fig. 6), rows-in-cluster padded to K.
+
+    ``col_slots`` indexes the deduplicated (cluster, column) pairs:
+      * ``cluster_ptr[c] .. cluster_ptr[c+1]`` — slots of cluster ``c``
+      * ``cols[s]`` — column id of slot ``s`` (pad: ncols)
+      * ``values[s, k]`` — value of row ``row_base[c]+k`` at that column
+        (pad: 0 where the row has no entry there or k >= cluster_size[c])
+    ``row_base``/``cluster_size`` recover original row ids (clusters cover
+    consecutive rows of the — possibly reordered — matrix).
+    """
+
+    _static = ("nrows", "ncols", "max_cluster")
+
+    cluster_ptr: jax.Array   # (nclusters+1,) int32
+    cols: jax.Array          # (slot_cap,) int32, pad=ncols
+    values: jax.Array        # (slot_cap, K) float
+    row_base: jax.Array      # (nclusters,) int32
+    cluster_size: jax.Array  # (nclusters,) int32
+    nrows: int
+    ncols: int
+    max_cluster: int
+
+    @property
+    def nclusters(self) -> int:
+        return self.row_base.shape[0]
+
+    @property
+    def slot_cap(self) -> int:
+        return self.cols.shape[0]
+
+    def to_dense(self) -> jax.Array:
+        slot_cluster = jnp.searchsorted(
+            self.cluster_ptr, jnp.arange(self.slot_cap, dtype=jnp.int32),
+            side="right") - 1
+        base = self.row_base[jnp.clip(slot_cluster, 0, self.nclusters - 1)]
+        valid_col = self.cols < self.ncols
+        out = jnp.zeros((self.nrows + self.max_cluster, self.ncols + 1),
+                        self.values.dtype)
+        k = jnp.arange(self.max_cluster, dtype=jnp.int32)
+        rows = base[:, None] + k[None, :]                       # (S, K)
+        cols = jnp.where(valid_col, self.cols, self.ncols)[:, None]
+        cols = jnp.broadcast_to(cols, rows.shape)
+        out = out.at[rows, cols].add(self.values)
+        return out[: self.nrows, : self.ncols]
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class BCC:
+    """Block-Clustered-Columns: the TPU-native clustered format.
+
+    Clusters are fixed-height row blocks of ``block_r`` rows; active columns
+    are grouped into ``block_k``-wide tiles. Per cluster we store the list of
+    active tile ids (padded with 0 alongside all-zero value slabs) and dense
+    ``(block_r, block_k)`` value slabs — MXU-ready.
+
+    ``tile_ids``/``values`` are *flat* over (cluster, tile-slot) with a fixed
+    ``tiles_per_block`` stride so a Pallas kernel can scalar-prefetch
+    ``tile_ids`` and drive its B BlockSpec index_map with it.
+    """
+
+    _static = ("nrows", "ncols", "block_r", "block_k", "tiles_per_block")
+
+    tile_ids: jax.Array      # (nblocks * tiles_per_block,) int32, pad=0
+    values: jax.Array        # (nblocks * tiles_per_block, block_r, block_k)
+    ntiles: jax.Array        # (nblocks,) int32 — live tiles per block
+    nrows: int
+    ncols: int
+    block_r: int
+    block_k: int
+    tiles_per_block: int
+
+    @property
+    def nblocks(self) -> int:
+        return self.ntiles.shape[0]
+
+    def to_dense(self) -> jax.Array:
+        nb, t = self.nblocks, self.tiles_per_block
+        out = jnp.zeros((nb * self.block_r,
+                         (self.ncols + self.block_k - 1)
+                         // self.block_k * self.block_k),
+                        self.values.dtype)
+        for b in range(nb):
+            for s in range(t):
+                flat = b * t + s
+                live = s < self.ntiles[b]
+                col0 = self.tile_ids[flat] * self.block_k
+                slab = jnp.where(live, self.values[flat], 0.0)
+                out = jax.lax.dynamic_update_slice(
+                    out,
+                    jax.lax.dynamic_slice(
+                        out, (b * self.block_r, col0),
+                        (self.block_r, self.block_k)) + slab,
+                    (b * self.block_r, col0))
+        return out[: self.nrows, : self.ncols]
+
+
+# ---------------------------------------------------------------------------
+# Host → device conversions
+# ---------------------------------------------------------------------------
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def csr_from_host(h: HostCSR, nnz_cap: int | None = None,
+                  dtype=jnp.float32) -> CSR:
+    cap = _round_up(max(h.nnz, 1), 8) if nnz_cap is None else nnz_cap
+    if cap < h.nnz:
+        raise ValueError(f"nnz_cap {cap} < nnz {h.nnz}")
+    indices = np.full(cap, h.ncols, dtype=np.int32)
+    data = np.zeros(cap, dtype=np.float32)
+    indices[: h.nnz] = h.indices
+    data[: h.nnz] = h.data
+    return CSR(indptr=jnp.asarray(h.indptr, jnp.int32),
+               indices=jnp.asarray(indices),
+               data=jnp.asarray(data, dtype),
+               nrows=h.nrows, ncols=h.ncols)
+
+
+def csr_cluster_from_host(h: HostCSR, boundaries: Sequence[int],
+                          max_cluster: int, slot_cap: int | None = None,
+                          dtype=jnp.float32) -> CSRCluster:
+    """Build CSR_Cluster from consecutive-row clusters.
+
+    ``boundaries`` — cluster start rows, ending sentinel nrows implied.
+    """
+    bounds = list(boundaries) + [h.nrows]
+    ncl = len(bounds) - 1
+    ptr = [0]
+    cols_l: list[np.ndarray] = []
+    vals_l: list[np.ndarray] = []
+    row_base = np.zeros(ncl, dtype=np.int32)
+    csize = np.zeros(ncl, dtype=np.int32)
+    for c in range(ncl):
+        lo, hi = bounds[c], bounds[c + 1]
+        if hi - lo > max_cluster:
+            raise ValueError(f"cluster {c} larger than max_cluster")
+        row_base[c] = lo
+        csize[c] = hi - lo
+        merged = np.unique(np.concatenate(
+            [h.row(i)[0] for i in range(lo, hi)] or
+            [np.empty(0, np.int32)]))
+        slab = np.zeros((merged.size, max_cluster), dtype=np.float32)
+        for k, i in enumerate(range(lo, hi)):
+            ci, vi = h.row(i)
+            pos = np.searchsorted(merged, ci)
+            slab[pos, k] = vi
+        cols_l.append(merged.astype(np.int32))
+        vals_l.append(slab)
+        ptr.append(ptr[-1] + merged.size)
+    total = ptr[-1]
+    cap = _round_up(max(total, 1), 8) if slot_cap is None else slot_cap
+    if cap < total:
+        raise ValueError(f"slot_cap {cap} < required {total}")
+    cols = np.full(cap, h.ncols, dtype=np.int32)
+    values = np.zeros((cap, max_cluster), dtype=np.float32)
+    if total:
+        cols[:total] = np.concatenate(cols_l)
+        values[:total] = np.concatenate(vals_l, axis=0)
+    return CSRCluster(
+        cluster_ptr=jnp.asarray(np.asarray(ptr, np.int32)),
+        cols=jnp.asarray(cols),
+        values=jnp.asarray(values, dtype),
+        row_base=jnp.asarray(row_base),
+        cluster_size=jnp.asarray(csize),
+        nrows=h.nrows, ncols=h.ncols, max_cluster=max_cluster)
+
+
+def bcc_from_host(h: HostCSR, block_r: int = 8, block_k: int = 128,
+                  tiles_per_block: int | None = None,
+                  dtype=jnp.float32) -> BCC:
+    """Pack a (reordered) HostCSR into BCC tiles."""
+    nb = (h.nrows + block_r - 1) // block_r
+    nk = (h.ncols + block_k - 1) // block_k
+    dense = None  # built per-block below, never full-matrix
+    per_block_tiles: list[np.ndarray] = []
+    per_block_slabs: list[np.ndarray] = []
+    max_live = 1
+    for b in range(nb):
+        lo, hi = b * block_r, min((b + 1) * block_r, h.nrows)
+        # active column tiles of this row block
+        cols = np.concatenate([h.row(i)[0] for i in range(lo, hi)]
+                              or [np.empty(0, np.int32)])
+        tiles = np.unique(cols // block_k) if cols.size else np.empty(0, np.int64)
+        slabs = np.zeros((tiles.size, block_r, block_k), dtype=np.float32)
+        tpos = {int(t): s for s, t in enumerate(tiles)}
+        for r, i in enumerate(range(lo, hi)):
+            ci, vi = h.row(i)
+            for c, v in zip(ci, vi):
+                t = int(c) // block_k
+                slabs[tpos[t], r, int(c) % block_k] = v
+        per_block_tiles.append(tiles.astype(np.int32))
+        per_block_slabs.append(slabs)
+        max_live = max(max_live, tiles.size)
+    tpb = max_live if tiles_per_block is None else tiles_per_block
+    if tpb < max_live:
+        raise ValueError(f"tiles_per_block {tpb} < max live {max_live}")
+    tile_ids = np.zeros(nb * tpb, dtype=np.int32)
+    values = np.zeros((nb * tpb, block_r, block_k), dtype=np.float32)
+    ntiles = np.zeros(nb, dtype=np.int32)
+    for b in range(nb):
+        n = per_block_tiles[b].size
+        ntiles[b] = n
+        tile_ids[b * tpb: b * tpb + n] = per_block_tiles[b]
+        values[b * tpb: b * tpb + n] = per_block_slabs[b]
+    return BCC(tile_ids=jnp.asarray(tile_ids),
+               values=jnp.asarray(values, dtype),
+               ntiles=jnp.asarray(ntiles),
+               nrows=h.nrows, ncols=h.ncols,
+               block_r=block_r, block_k=block_k, tiles_per_block=tpb)
+
+
+# ---------------------------------------------------------------------------
+# Analytic footprints (paper Fig. 11)
+# ---------------------------------------------------------------------------
+
+
+def csr_nbytes(h: HostCSR) -> int:
+    return h.nbytes()
+
+
+def csr_cluster_nbytes_exact(h: HostCSR, boundaries: Sequence[int],
+                             *, fixed_length: bool = False,
+                             index_bytes: int = 4, value_bytes: int = 4,
+                             ptr_bytes: int = 8) -> int:
+    """Exact ragged CSR_Cluster footprint as the paper counts it.
+
+    Per cluster: one col-id per *distinct* column + a value slab of
+    (distinct_cols × cluster_size). Variable-length additionally stores the
+    cluster-size array and a value-pointer array; fixed-length does not.
+    """
+    bounds = list(boundaries) + [h.nrows]
+    ncl = len(bounds) - 1
+    total_cols = 0
+    total_vals = 0
+    for c in range(ncl):
+        lo, hi = bounds[c], bounds[c + 1]
+        merged = np.unique(np.concatenate(
+            [h.row(i)[0] for i in range(lo, hi)] or [np.empty(0, np.int32)]))
+        total_cols += merged.size
+        total_vals += merged.size * (hi - lo)
+    n = (ncl + 1) * ptr_bytes + total_cols * index_bytes \
+        + total_vals * value_bytes
+    if not fixed_length:
+        n += ncl * index_bytes          # cluster sizes
+        n += (ncl + 1) * ptr_bytes      # value pointers
+    return n

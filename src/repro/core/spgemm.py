@@ -1,0 +1,194 @@
+"""SpGEMM / SpMM compute: row-wise (Gustavson) and cluster-wise (Alg. 1).
+
+All functions are shape-static and jittable. Outputs are dense accumulators
+(M×N) — on TPU the sparse-hash accumulator of the CPU algorithm has no
+efficient analogue, and for the paper's workloads (A², square×tall-skinny)
+the comparison between row-wise and cluster-wise is unaffected: both variants
+share the identical scatter-accumulate epilogue and differ exactly where the
+paper's variants differ — in how rows of B are fetched and reused.
+
+Dataflow correspondence (paper → here):
+
+* row-wise Gustavson: one gather of a B row per *nonzero* of A
+  (:func:`spgemm_rowwise_dense` / :func:`spmm_rowwise`).
+* cluster-wise (Alg. 1): one gather of a B row per *(cluster, column)* slot —
+  deduplicated across the rows of the cluster — then an outer product against
+  the cluster's value slab (:func:`spgemm_clusterwise_dense` /
+  :func:`spmm_clusterwise`). The gather-volume reduction is the TPU analogue
+  of the paper's cache-reuse win.
+
+``flops_*`` helpers report the multiply-add count each variant performs
+(including padding waste for the clustered format) — used by the benchmark
+harness and the §Roofline analysis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import CSR, CSRCluster, HostCSR
+
+__all__ = [
+    "spgemm_rowwise_dense", "spgemm_clusterwise_dense",
+    "spmm_rowwise", "spmm_clusterwise",
+    "spgemm_reference", "symbolic_nnz", "flops_spgemm",
+    "gathers_rowwise", "gathers_clusterwise",
+]
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _slot_rows(indptr: jax.Array, cap: int) -> jax.Array:
+    """Row id of each storage slot (padded slots map past the last row)."""
+    return jnp.searchsorted(indptr,
+                            jnp.arange(cap, dtype=indptr.dtype),
+                            side="right").astype(jnp.int32) - 1
+
+
+def _gather_b_row(b: CSR, k: jax.Array, max_row_b: int
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Fixed-width gather of B row ``k``: (cols, vals), masked past row end.
+
+    ``k`` may be the padding sentinel ``b.nrows`` — yields an empty row.
+    """
+    k = jnp.clip(k, 0, b.nrows)
+    start = b.indptr[k]
+    length = b.indptr[jnp.clip(k + 1, 0, b.nrows)] - start
+    offs = jnp.arange(max_row_b, dtype=jnp.int32)
+    idx = jnp.clip(start + offs, 0, b.nnz_cap - 1)
+    mask = offs < length
+    cols = jnp.where(mask, b.indices[idx], b.ncols)
+    vals = jnp.where(mask, b.data[idx], 0.0)
+    return cols, vals
+
+
+# ---------------------------------------------------------------------------
+# sparse × sparse (A², paper §4.2–4.3)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("max_row_b",))
+def spgemm_rowwise_dense(a: CSR, b: CSR, max_row_b: int) -> jax.Array:
+    """Gustavson row-wise SpGEMM; returns dense C (nrows_a × ncols_b)."""
+    rows = _slot_rows(a.indptr, a.nnz_cap)               # (nnz_a,)
+    ks = a.indices                                        # (nnz_a,)
+    valid = ks < a.ncols
+    bcols, bvals = jax.vmap(
+        lambda k: _gather_b_row(b, k, max_row_b))(
+        jnp.where(valid, ks, b.nrows))                    # (nnz_a, W)
+    prod = a.data[:, None] * bvals                        # (nnz_a, W)
+    out_rows = jnp.broadcast_to(
+        jnp.clip(rows, 0, a.nrows - 1)[:, None], prod.shape)
+    out_cols = jnp.minimum(bcols, b.ncols)
+    c = jnp.zeros((a.nrows, b.ncols + 1), prod.dtype)
+    c = c.at[out_rows, out_cols].add(prod)
+    return c[:, : b.ncols]
+
+
+@functools.partial(jax.jit, static_argnames=("max_row_b",))
+def spgemm_clusterwise_dense(a: CSRCluster, b: CSR,
+                             max_row_b: int) -> jax.Array:
+    """Cluster-wise SpGEMM (Alg. 1); returns dense C.
+
+    One B-row gather per (cluster, column) slot; the gathered row is applied
+    to *all* rows of the cluster via an outer product with the value slab —
+    the reuse the CSR_Cluster format exists to create.
+    """
+    slot_cluster = jnp.searchsorted(
+        a.cluster_ptr, jnp.arange(a.slot_cap, dtype=jnp.int32),
+        side="right").astype(jnp.int32) - 1               # (S,)
+    cl = jnp.clip(slot_cluster, 0, a.nclusters - 1)
+    ks = a.cols                                           # (S,)
+    valid = ks < a.ncols
+    bcols, bvals = jax.vmap(
+        lambda k: _gather_b_row(b, k, max_row_b))(
+        jnp.where(valid, ks, b.nrows))                    # (S, W)
+    # outer product: (S, K, W)
+    prod = a.values[:, :, None] * bvals[:, None, :]
+    base = a.row_base[cl]                                 # (S,)
+    kk = jnp.arange(a.max_cluster, dtype=jnp.int32)
+    out_rows = jnp.clip(base[:, None, None] + kk[None, :, None],
+                        0, a.nrows)                       # (S, K, 1)
+    out_rows = jnp.broadcast_to(out_rows, prod.shape)
+    out_cols = jnp.broadcast_to(
+        jnp.minimum(bcols, b.ncols)[:, None, :], prod.shape)
+    c = jnp.zeros((a.nrows + 1, b.ncols + 1), prod.dtype)
+    c = c.at[out_rows, out_cols].add(prod)
+    return c[: a.nrows, : b.ncols]
+
+
+# ---------------------------------------------------------------------------
+# sparse × dense tall-skinny (paper §4.4)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def spmm_rowwise(a: CSR, bdense: jax.Array) -> jax.Array:
+    """Row-wise CSR × dense: one gather of B[k, :] per nonzero of A."""
+    rows = _slot_rows(a.indptr, a.nnz_cap)
+    ks = a.indices
+    valid = ks < a.ncols
+    brows = bdense[jnp.where(valid, ks, 0)]               # (nnz_a, N)
+    prod = jnp.where(valid, a.data, 0.0)[:, None] * brows
+    c = jnp.zeros((a.nrows, bdense.shape[1]), prod.dtype)
+    return c.at[jnp.clip(rows, 0, a.nrows - 1)].add(prod)
+
+
+@jax.jit
+def spmm_clusterwise(a: CSRCluster, bdense: jax.Array) -> jax.Array:
+    """Cluster-wise CSR_Cluster × dense: one gather per (cluster, column)."""
+    slot_cluster = jnp.searchsorted(
+        a.cluster_ptr, jnp.arange(a.slot_cap, dtype=jnp.int32),
+        side="right").astype(jnp.int32) - 1
+    cl = jnp.clip(slot_cluster, 0, a.nclusters - 1)
+    ks = a.cols
+    valid = ks < a.ncols
+    brows = bdense[jnp.where(valid, ks, 0)]               # (S, N)
+    brows = jnp.where(valid[:, None], brows, 0.0)
+    prod = a.values[:, :, None] * brows[:, None, :]       # (S, K, N)
+    base = a.row_base[cl]
+    kk = jnp.arange(a.max_cluster, dtype=jnp.int32)
+    out_rows = jnp.clip(base[:, None] + kk[None, :], 0, a.nrows)  # (S, K)
+    c = jnp.zeros((a.nrows + 1, bdense.shape[1]), prod.dtype)
+    c = c.at[out_rows].add(prod)
+    return c[: a.nrows]
+
+
+# ---------------------------------------------------------------------------
+# oracle + metrics
+# ---------------------------------------------------------------------------
+
+
+def spgemm_reference(a: HostCSR, b: HostCSR) -> np.ndarray:
+    """Pure-numpy oracle: densify and matmul."""
+    return a.to_dense() @ b.to_dense()
+
+
+def symbolic_nnz(a: HostCSR, b: HostCSR) -> int:
+    """Symbolic-phase nnz(C) (exact, host-side)."""
+    c = (a.to_dense() != 0).astype(np.float32) @ \
+        (b.to_dense() != 0).astype(np.float32)
+    return int((c != 0).sum())
+
+
+def flops_spgemm(a: HostCSR, b: HostCSR) -> int:
+    """2 × Σ_{a_ik ≠ 0} nnz(B row k) — the standard SpGEMM flop count."""
+    bn = b.row_nnz()
+    return int(2 * bn[a.indices.astype(np.int64)].sum())
+
+
+def gathers_rowwise(a: HostCSR) -> int:
+    """Number of B-row fetches the row-wise dataflow performs."""
+    return a.nnz
+
+
+def gathers_clusterwise(nslots: int) -> int:
+    """Number of B-row fetches the cluster-wise dataflow performs
+    (= deduplicated (cluster, column) slots)."""
+    return nslots

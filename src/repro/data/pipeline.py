@@ -1,0 +1,103 @@
+"""Deterministic synthetic data pipeline with sharded loading.
+
+Production posture: the loader is *stateless given (step, shard)* — every
+batch is a pure function of (seed, step, data_shard_index), so
+
+* restart-after-failure resumes mid-epoch exactly (checkpoint stores only
+  the step counter);
+* elastic re-sharding is a pure re-indexing (no data re-shuffling);
+* stragglers can be re-assigned a shard without coordination.
+
+Token streams are a mixture of Zipfian unigram draws and short Markov
+motifs, giving a learnable (compressible) distribution so the ~100M-param
+example train run shows a real loss curve rather than log(V) noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["DataConfig", "make_batch", "host_batch_iterator", "batch_spec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    motif_len: int = 16
+    num_motifs: int = 256
+    frontend: str = "tokens"      # "tokens" | "embeddings"
+    d_model: int = 0              # for embeddings frontend
+    m_rope: bool = False
+
+
+def _motif_table(cfg: DataConfig) -> np.ndarray:
+    rng = np.random.default_rng(cfg.seed + 1234)
+    return rng.integers(0, cfg.vocab_size,
+                        (cfg.num_motifs, cfg.motif_len)).astype(np.int32)
+
+
+def make_batch(cfg: DataConfig, step: int, shard: int = 0,
+               num_shards: int = 1) -> dict:
+    """Batch for (step, shard): tokens/labels (B/num_shards, S)."""
+    bsz = cfg.global_batch // num_shards
+    rng = np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, step, shard]))
+    motifs = _motif_table(cfg)
+    s = cfg.seq_len + 1
+    # zipf-ish unigram background
+    ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+    probs = 1.0 / ranks
+    probs /= probs.sum()
+    toks = rng.choice(cfg.vocab_size, size=(bsz, s), p=probs).astype(np.int32)
+    # plant motifs: ~50% of positions covered by repeated motifs
+    n_plant = max(1, s // (2 * cfg.motif_len))
+    for b in range(bsz):
+        ids = rng.integers(0, cfg.num_motifs, n_plant)
+        offs = rng.integers(0, max(s - cfg.motif_len, 1), n_plant)
+        for mid, off in zip(ids, offs):
+            toks[b, off: off + cfg.motif_len] = \
+                motifs[mid][: max(0, min(cfg.motif_len, s - off))]
+    batch: dict = {"labels": jnp.asarray(toks[:, 1:])}
+    if cfg.frontend == "tokens":
+        batch["tokens"] = jnp.asarray(toks[:, :-1])
+    else:
+        # modality-frontend stub: pretend an encoder produced embeddings
+        emb_rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed + 77, step, shard]))
+        emb = emb_rng.standard_normal(
+            (bsz, cfg.seq_len, cfg.d_model)).astype(np.float32)
+        batch["embeddings"] = jnp.asarray(emb)
+        if cfg.m_rope:
+            pos = np.broadcast_to(np.arange(cfg.seq_len, dtype=np.int32),
+                                  (3, bsz, cfg.seq_len))
+            batch["positions3"] = jnp.asarray(pos)
+    return batch
+
+
+def host_batch_iterator(cfg: DataConfig, start_step: int = 0,
+                        shard: int = 0, num_shards: int = 1):
+    step = start_step
+    while True:
+        yield step, make_batch(cfg, step, shard, num_shards)
+        step += 1
+
+
+def batch_spec(cfg: DataConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for one *global* batch (dry-run input)."""
+    import jax
+    b, s = cfg.global_batch, cfg.seq_len
+    spec: dict = {"labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.frontend == "tokens":
+        spec["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    else:
+        spec["embeddings"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                  jnp.bfloat16)
+        if cfg.m_rope:
+            spec["positions3"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    return spec

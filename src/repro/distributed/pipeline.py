@@ -1,0 +1,93 @@
+"""Pipeline parallelism: GPipe-style microbatch schedule over a ``pipe``
+mesh axis with ``shard_map`` + ``collective_permute``.
+
+Completes the parallelism matrix (DP/TP/EP/SP/FSDP are pjit-native in
+distributed/sharding.py; PP needs explicit scheduling, which SPMD
+propagation cannot invent). Design:
+
+* stage parameters are stacked on a leading axis sharded over ``pipe`` —
+  inside the shard_map body each rank holds exactly its stage's weights;
+* the schedule runs ``M + P - 1`` ticks; each tick shifts activations one
+  rank to the right via ``jax.lax.ppermute`` and computes one microbatch on
+  every rank in the active window (classic GPipe fill/steady/drain — the
+  1F1B memory optimization applies on top of the same wiring for training;
+  forward-only is what serving and this dry-run-facing module need);
+* rank 0 feeds microbatch ``t`` at tick ``t``; rank ``P-1`` emits completed
+  microbatch ``t`` at tick ``t + P - 1``. Bubble fraction = (P-1)/(M+P-1),
+  reported by :func:`bubble_fraction` and asserted in tests.
+
+The stage function must be shape-preserving ((B, ...) → (B, ...)), which
+covers transformer blocks — the embedding/head live outside the pipe.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["pipeline_apply", "bubble_fraction"]
+
+
+def bubble_fraction(num_stages: int, num_microbatches: int) -> float:
+    return (num_stages - 1) / (num_stages + num_microbatches - 1)
+
+
+def pipeline_apply(stage_fn: Callable, stage_params, x: jax.Array, *,
+                   mesh: Mesh, axis: str = "pipe") -> jax.Array:
+    """Run ``x`` through ``P`` pipelined stages.
+
+    Args:
+      stage_fn: (params_for_one_stage, act (B, ...)) -> act (B, ...).
+      stage_params: pytree whose leaves have leading dim P (= mesh[axis]).
+      x: (M, B, ...) microbatched input (M = number of microbatches).
+
+    Returns: (M, B, ...) output after all P stages in order.
+    """
+    nstages = mesh.shape[axis]
+    m = x.shape[0]
+    ticks = m + nstages - 1
+
+    def body(params, xs):
+        # params leaves: (1, ...) local stage slice; xs: (M, B, ...) [rank0's
+        # copy is used; other ranks' xs are ignored by the schedule]
+        local = jax.tree.map(lambda a: a[0], params)
+        rank = jax.lax.axis_index(axis)
+        buf = jnp.zeros_like(xs[0])                    # activation register
+        outs = jnp.zeros((m, *xs.shape[1:]), xs.dtype)
+
+        def tick(carry, t):
+            buf, outs = carry
+            # shift: every rank receives the previous rank's last output
+            recv = jax.lax.ppermute(
+                buf, axis, [(i, i + 1) for i in range(nstages - 1)])
+            feed = jnp.where(t < m, xs[jnp.clip(t, 0, m - 1)],
+                             jnp.zeros_like(recv))
+            inp = jnp.where(rank == 0, feed, recv)
+            out = stage_fn(local, inp)
+            # last rank banks finished microbatch t-(P-1)
+            slot = t - (nstages - 1)
+            valid = (rank == nstages - 1) & (slot >= 0)
+            outs = jax.lax.cond(
+                valid,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, out.astype(o.dtype), jnp.maximum(slot, 0), 0),
+                lambda o: o, outs)
+            return (out, outs), None
+
+        (_, outs), _ = jax.lax.scan(tick, (buf, outs),
+                                    jnp.arange(ticks))
+        # every rank returns its `outs`; only the last rank's is real —
+        # psum after masking gives all ranks the result (replicated out)
+        mask = (rank == nstages - 1).astype(outs.dtype)
+        return jax.lax.psum(outs * mask, axis)
+
+    pspec = jax.tree.map(lambda _: P(axis), stage_params)
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(pspec, P()),        # x replicated; params pipe-sharded
+        out_specs=P(),
+        check_vma=False,
+    )(stage_params, x)

@@ -1,0 +1,319 @@
+"""Logical-axis sharding rules: parameter PartitionSpecs + activation
+constraints for the production mesh.
+
+Policy (1000+-chip posture, see DESIGN.md §6):
+
+* **Size-aware FSDP**: weights shard over *both* the ``data`` (ZeRO-3) and
+  ``model`` (TP/EP) axes only when the TP-only footprint exceeds
+  ~10 GB/chip (llama3-405B); smaller models replicate weights across data
+  (removing per-layer weight all-gathers — EXPERIMENTS.md §Perf iter 2).
+  Optimizer moments always shard over (data, model) (ZeRO-1).
+* **TP**: projection output dims shard over ``model`` when divisible;
+  KV projections shard over ``model`` only when ``num_kv_heads`` divides the
+  model-axis size (MQA replicates KV — granite-34b).
+* **EP-vs-TP MoE policy**: experts shard over ``model`` when
+  ``num_experts % model_size == 0`` (moonshot 64e), else experts stay
+  unsharded and the per-expert ``d_ff`` shards over ``model`` (granite 40e).
+* **Vocab parallelism**: embedding table V over ``model``; LM head output
+  vocab over ``model`` (per-shard logits + global softmax via psum).
+* **Batch**: global batch shards over ``(pod, data)``; the pod axis is pure
+  DP (hierarchical gradient reduction).
+
+Activation constraints are applied through :func:`constrain`, a no-op unless
+a ``Rules`` context is active — model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["Rules", "active_rules", "use_rules", "constrain",
+           "param_specs", "batch_specs", "cache_specs", "moe_policy",
+           "tree_shardings"]
+
+_RULES: contextvars.ContextVar[Optional["Rules"]] = \
+    contextvars.ContextVar("sharding_rules", default=None)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    mesh: Mesh
+    data_axes: tuple = ("data",)     # ("pod","data") multi-pod
+    model_axis: str = "model"
+    fsdp: bool = False               # weights ZeRO-3-sharded over data?
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def data_size(self) -> int:
+        n = 1
+        for a in self.data_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    # logical axis → mesh axes
+    @property
+    def batch(self):
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+    def sharding(self, *spec) -> NamedSharding:
+        return NamedSharding(self.mesh, P(*spec))
+
+
+def active_rules() -> Optional[Rules]:
+    return _RULES.get()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    tok = _RULES.set(rules)
+    try:
+        yield rules
+    finally:
+        _RULES.reset(tok)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def fsdp_active() -> bool:
+    r = _RULES.get()
+    return bool(r and r.fsdp)
+
+
+def constrain_if_fsdp(x, *spec):
+    """Constraint applied only under ZeRO-3 weight sharding — pins that fix
+    FSDP propagation pathologies but add churn for TP-only layouts
+    (EXPERIMENTS.md §Perf iter 4c)."""
+    return constrain(x, *spec) if fsdp_active() else x
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint iff a Rules context is active.
+
+    Axis entries that do not evenly divide their dimension are dropped
+    (e.g. batch=1 long-context decode cannot shard batch over data) —
+    model code states *intent*, the rules decide feasibility.
+    """
+    r = _RULES.get()
+    if r is None:
+        return x
+    spec = tuple(spec[: x.ndim]) + (None,) * max(0, x.ndim - len(spec))
+    clean = []
+    for dim, entry in zip(x.shape, spec):
+        # resolve logical "data" to the configured data axes
+        if entry == "data":
+            entry = r.batch
+        n = _axis_size(r.mesh, entry)
+        clean.append(entry if (n > 1 and dim % n == 0) else None)
+    return jax.lax.with_sharding_constraint(x, r.sharding(*clean))
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def moe_policy(cfg, model_size: int) -> str:
+    """'ep' (experts over model) or 'tp' (d_ff over model). Expert counts
+    are padded (cfg.moe_pad_experts) precisely so EP applies — TP on
+    fine-grained experts psums the full dispatch tensor every layer
+    (EXPERIMENTS.md §Perf iter 3)."""
+    if cfg.num_experts and cfg.num_experts_padded % model_size == 0:
+        return "ep"
+    return "tp"
+
+
+# Per-device budget above which weights must also shard over the data axes
+# (ZeRO-3). Below it, weights replicate across data and shard only over
+# model — removing the per-layer-per-microbatch FSDP all-gathers that
+# dominated every baseline collective term (EXPERIMENTS.md §Perf iter 2).
+# Optimizer moments ALWAYS shard over (data, model) (ZeRO-1): one
+# reduce-scatter + one gather per step instead of per layer.
+FSDP_THRESHOLD_BYTES = 10 * 2 ** 30
+
+
+def fsdp_policy(cfg, model_size: int,
+                threshold: int = FSDP_THRESHOLD_BYTES) -> bool:
+    per_device = cfg.param_count() * 2 / model_size      # bf16
+    return per_device > threshold
+
+
+def _dense_layer_specs(cfg, r: Rules, d) -> dict:
+    m = r.model_axis
+    ms = r.model_size
+    kv_ok = cfg.num_kv_heads and cfg.num_kv_heads % ms == 0
+    hq_ok = cfg.num_heads and (cfg.num_heads * cfg.head_dim) % ms == 0
+    attn = {
+        "wq": P(None, d, m if hq_ok else None),
+        "wk": P(None, d, m if kv_ok else None),
+        "wv": P(None, d, m if kv_ok else None),
+        "wo": P(None, m if hq_ok else None, d),
+        "ln": P(None, None),
+    }
+    if cfg.qk_norm:
+        attn["q_norm"] = P(None, None)
+        attn["k_norm"] = P(None, None)
+    ff_ok = cfg.d_ff and cfg.d_ff % ms == 0
+    mlp = {
+        "wg": P(None, d, m if ff_ok else None),
+        "wu": P(None, d, m if ff_ok else None),
+        "wd": P(None, m if ff_ok else None, d),
+        "ln": P(None, None),
+    }
+    return {"attn": attn, "mlp": mlp}
+
+
+def _moe_layer_specs(cfg, r: Rules, d) -> dict:
+    m = r.model_axis
+    pol = moe_policy(cfg, r.model_size)
+    if pol == "ep":
+        e_ax, f_ax, fin = m, None, None
+    else:
+        ff_ok = cfg.d_ff % r.model_size == 0
+        e_ax, f_ax = None, (m if ff_ok else None)
+        fin = f_ax
+    return {
+        "router": P(None, d, None),
+        "wg": P(None, e_ax, d, f_ax),
+        "wu": P(None, e_ax, d, f_ax),
+        "wd": P(None, e_ax, fin, d),
+        "ln": P(None, None),
+    }
+
+
+def _ssm_layer_specs(cfg, r: Rules, d) -> dict:
+    m = r.model_axis
+    ms = r.model_size
+    din_ok = cfg.ssm_d_inner % ms == 0
+    bc = cfg.ssm_groups * cfg.ssm_state
+    bc_ok = bc % ms == 0
+    h_ok = cfg.ssm_num_heads % ms == 0
+    return {
+        "wz": P(None, d, m if din_ok else None),
+        "wx": P(None, d, m if din_ok else None),
+        "wB": P(None, d, m if bc_ok else None),
+        "wC": P(None, d, m if bc_ok else None),
+        "wdt": P(None, d, None),
+        "conv_w": P(None, None, m if din_ok and bc_ok else None),
+        "conv_b": P(None, m if din_ok and bc_ok else None),
+        "A_log": P(None, m if h_ok else None),
+        "dt_bias": P(None, m if h_ok else None),
+        "D_skip": P(None, m if h_ok else None),
+        "gnorm": P(None, m if din_ok else None),
+        "out_proj": P(None, m if din_ok else None, d),
+        "ln": P(None, None),
+    }
+
+
+def _strip_leading(spec_tree):
+    """Drop the leading (layer-stack) axis from every spec — for unstacked
+    (shared) blocks."""
+    return jax.tree.map(
+        lambda s: P(*s[1:]), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def param_specs(cfg, rules: Rules, fsdp: bool | None = None) -> dict:
+    """PartitionSpec tree matching models.transformer.init_params output.
+
+    ``fsdp=None`` applies the size-aware policy (:func:`fsdp_policy`);
+    ``fsdp=True`` forces ZeRO-3 weight sharding over the data axes (used
+    unconditionally for optimizer moments — ZeRO-1)."""
+    r = rules
+    if fsdp is None:
+        fsdp = fsdp_policy(cfg, r.model_size)
+    m = r.model_axis
+    d = "data" if fsdp else None
+    specs: dict[str, Any] = {}
+    if cfg.frontend == "tokens":
+        specs["embed"] = P(m, d)
+    if cfg.family in ("dense", "audio", "vlm"):
+        specs["layers"] = _dense_layer_specs(cfg, r, d)
+    elif cfg.family == "moe":
+        lay = _dense_layer_specs(cfg, r, d)
+        lay.pop("mlp")
+        lay["moe"] = _moe_layer_specs(cfg, r, d)
+        specs["layers"] = lay
+    elif cfg.family == "ssm":
+        specs["layers"] = {"ssm": _ssm_layer_specs(cfg, r, d)}
+    elif cfg.family == "hybrid":
+        specs["layers"] = {"ssm": _ssm_layer_specs(cfg, r, d)}
+        specs["shared_attn"] = _strip_leading(_dense_layer_specs(cfg, r, d))
+    else:
+        raise ValueError(cfg.family)
+    specs["final_norm"] = P(None)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(d, m)
+    return specs
+
+
+def batch_specs(cfg, rules: Rules, kind: str) -> dict:
+    """Input pytree specs for a shape kind ('train'|'prefill'|'decode')."""
+    b = rules.batch
+    if cfg.frontend == "tokens":
+        specs = {"tokens": P(b, None)}
+    else:
+        specs = {"embeddings": P(b, None, None)}
+        if cfg.m_rope:
+            specs["positions3"] = P(None, b, None)
+    if kind == "train":
+        specs["labels"] = P(b, None)
+    return specs
+
+
+def cache_specs(cfg, rules: Rules, *, seq_parallel: bool = False) -> dict:
+    """KV/SSM cache specs.
+
+    * ``seq_parallel`` (long-context, batch=1): KV sequence shards over the
+      data axes — decode attention becomes flash-decoding (partial softmax
+      per shard, psum combine, inserted by SPMD).
+    * KV heads shard over ``model`` when divisible; otherwise (GQA kv=8 on a
+      16-way model axis, MQA kv=1) the *sequence* shards over ``model``
+      instead — same flash-decoding dataflow along the model axis.
+    """
+    m = rules.model_axis
+    b = rules.batch
+    ms = rules.model_size
+    kv_ok = cfg.num_kv_heads and cfg.num_kv_heads % ms == 0
+    kv_ax = m if kv_ok else None
+    seq_axes: list = []
+    if seq_parallel:
+        seq_axes += list(rules.data_axes)
+    if not kv_ok:
+        seq_axes.append(m)
+    seq_sp = tuple(seq_axes) if seq_axes else None
+    bat_ax = None if seq_parallel else b
+    specs = {}
+    if cfg.num_attn_layers:
+        specs["k"] = P(None, bat_ax, seq_sp, kv_ax, None)
+        specs["v"] = P(None, bat_ax, seq_sp, kv_ax, None)
+        specs["pos"] = P()
+    if cfg.family in ("ssm", "hybrid"):
+        h_ok = cfg.ssm_num_heads % ms == 0
+        specs["ssm_state"] = P(None, bat_ax, m if h_ok else None, None, None)
+        specs["conv_buf"] = P(None, bat_ax, None, None)
+        if "pos" not in specs:
+            specs["pos"] = P()
+    return specs
+
+
+def tree_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,159 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These adapt framework-level types (``core.formats.BCC``, GQA-shaped
+attention tensors) to the kernel calling conventions, handle padding, and
+select interpret mode automatically off-TPU so the same call sites run in
+CI (CPU, interpret=True) and production (TPU, compiled).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import BCC
+from repro.kernels.cluster_spmm import cluster_spmm, cluster_spmm_compact
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_chunk import ssd_chunk_scan
+
+__all__ = ["on_tpu", "bcc_spmm", "bcc_compact_stream", "bcc_spmm_compact",
+           "flash_mha", "fused_ssd"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_cols(b: jax.Array, multiple: int) -> jax.Array:
+    n = b.shape[-1]
+    pad = (-n) % multiple
+    if pad:
+        b = jnp.pad(b, ((0, 0), (0, pad)))
+    return b
+
+
+def bcc_spmm(a: BCC, b: jax.Array, *, bn: int = 128,
+             interpret: bool | None = None) -> jax.Array:
+    """C = A_bcc @ B via the padded-grid cluster kernel. Returns (nrows, N)."""
+    if interpret is None:
+        interpret = not on_tpu()
+    kdim = a.tile_ids.shape  # noqa: F841  (documentational)
+    k_needed = ((a.ncols + a.block_k - 1) // a.block_k) * a.block_k
+    if b.shape[0] < k_needed:
+        b = jnp.pad(b, ((0, k_needed - b.shape[0]), (0, 0)))
+    n0 = b.shape[1]
+    bn_eff = min(bn, max(8, n0))
+    b = _pad_cols(b, bn_eff)
+    out = cluster_spmm(a.tile_ids, a.values, b,
+                       block_r=a.block_r, block_k=a.block_k,
+                       tiles_per_block=a.tiles_per_block, bn=bn_eff,
+                       interpret=interpret)
+    return out[: a.nrows, : n0]
+
+
+def bcc_compact_stream(a: BCC) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side: squeeze the padded (block, tile) lattice to live tiles.
+
+    Returns (block_ids, tile_ids, values) sorted by block — the input of
+    :func:`bcc_spmm_compact`. Tail-padded (repeating the last block with zero
+    slabs) to a multiple of 8 steps.
+    """
+    ntiles = np.asarray(a.ntiles)
+    tpb = a.tiles_per_block
+    tile_ids = np.asarray(a.tile_ids)
+    values = np.asarray(a.values)
+    keep = []
+    blocks = []
+    for blk in range(ntiles.shape[0]):
+        for t in range(int(ntiles[blk])):
+            keep.append(blk * tpb + t)
+            blocks.append(blk)
+    if not keep:   # fully empty matrix: single zero step
+        keep, blocks = [0], [0]
+    live = len(keep)
+    pad = (-live) % 8
+    keep = np.asarray(keep + [keep[-1]] * pad)
+    block_ids = np.asarray(blocks + [blocks[-1]] * pad, dtype=np.int32)
+    vals = values[keep]
+    if pad:
+        vals[live:] = 0.0
+    return block_ids, tile_ids[keep].astype(np.int32), vals
+
+
+def bcc_spmm_compact(a: BCC, b: jax.Array, *, bn: int = 128,
+                     interpret: bool | None = None,
+                     stream: tuple | None = None) -> jax.Array:
+    """C = A_bcc @ B via the compact-stream kernel (no padding compute)."""
+    if interpret is None:
+        interpret = not on_tpu()
+    if stream is None:
+        stream = bcc_compact_stream(a)
+    block_ids, tile_ids, values = (jnp.asarray(s) for s in stream)
+    k_needed = ((a.ncols + a.block_k - 1) // a.block_k) * a.block_k
+    if b.shape[0] < k_needed:
+        b = jnp.pad(b, ((0, k_needed - b.shape[0]), (0, 0)))
+    n0 = b.shape[1]
+    bn_eff = min(bn, max(8, n0))
+    b = _pad_cols(b, bn_eff)
+    nblocks = (a.nrows + a.block_r - 1) // a.block_r
+    out = cluster_spmm_compact(block_ids, tile_ids, values, b,
+                               block_r=a.block_r, block_k=a.block_k,
+                               nblocks=nblocks, bn=bn_eff,
+                               interpret=interpret)
+    return out[: a.nrows, : n0]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def fused_ssd(x: jax.Array, dt: jax.Array, a_log: jax.Array, b: jax.Array,
+              c: jax.Array, chunk: int, *,
+              interpret: bool | None = None
+              ) -> tuple[jax.Array, jax.Array]:
+    """Drop-in for models.mamba2.ssd_chunked backed by the fused Pallas
+    kernel. x (B,S,H,P); dt (B,S,H); a_log (H,); b/c (B,S,G,N) with G
+    groups broadcast over heads. Returns (y (B,S,H,P), state (B,H,P,N))."""
+    if interpret is None:
+        interpret = not on_tpu()
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    nc = s // chunk
+    rep = h // g
+    a_step = (-jnp.exp(a_log.astype(jnp.float32)))[None, None, :] \
+        * dt.astype(jnp.float32)                              # (B,S,H)
+    xd = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+
+    def to_bh(t):   # (B,S,H,...) -> (B*H, nc, Q, ...)
+        t = jnp.moveaxis(t, 2, 1)                             # (B,H,S,...)
+        return t.reshape(bsz * h, nc, chunk, *t.shape[3:])
+
+    bh_b = jnp.broadcast_to(b[:, :, :, None, :], (bsz, s, g, rep, n)
+                            ).reshape(bsz, s, h, n)
+    bh_c = jnp.broadcast_to(c[:, :, :, None, :], (bsz, s, g, rep, n)
+                            ).reshape(bsz, s, h, n)
+    y, hfin = ssd_chunk_scan(
+        to_bh(xd), to_bh(a_step[..., None])[..., 0],
+        to_bh(bh_b.astype(jnp.float32)), to_bh(bh_c.astype(jnp.float32)),
+        interpret=interpret)
+    y = jnp.moveaxis(y.reshape(bsz, h, s, p), 1, 2).astype(x.dtype)
+    state = jnp.moveaxis(hfin.reshape(bsz, h, n, p), 2, 3)    # (B,H,P,N)
+    return y, state
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, block_q: int = 128, block_k: int = 128,
+              interpret: bool = False) -> jax.Array:
+    """GQA flash attention: q (B,Hq,S,D), k/v (B,Hkv,S,D); Hq % Hkv == 0."""
+    bsz, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    rep = hq // hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    out = flash_attention(q.reshape(bsz * hq, sq, d),
+                          k.reshape(bsz * hq, sk, d),
+                          v.reshape(bsz * hq, sk, d),
+                          causal=causal, block_q=block_q, block_k=block_k,
+                          interpret=interpret)
+    return out.reshape(bsz, hq, sq, d)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["cluster_spmm_ref", "cluster_spmm_compact_ref",
+           "flash_attention_ref"]
+
+
+def cluster_spmm_ref(tile_ids, a_values, b, *, block_r, block_k,
+                     tiles_per_block):
+    """Oracle for kernels.cluster_spmm: reassemble dense A, then matmul."""
+    tile_ids = np.asarray(tile_ids)
+    a_values = np.asarray(a_values)
+    b = np.asarray(b)
+    nslabs = a_values.shape[0]
+    nblocks = nslabs // tiles_per_block
+    k, n = b.shape
+    a_dense = np.zeros((nblocks * block_r, k), dtype=a_values.dtype)
+    for blk in range(nblocks):
+        for t in range(tiles_per_block):
+            s = blk * tiles_per_block + t
+            c0 = int(tile_ids[s]) * block_k
+            a_dense[blk * block_r:(blk + 1) * block_r, c0:c0 + block_k] \
+                += a_values[s]
+    return a_dense @ b
+
+
+def cluster_spmm_compact_ref(block_ids, tile_ids, a_values, b, *,
+                             block_r, block_k, nblocks):
+    block_ids = np.asarray(block_ids)
+    tile_ids = np.asarray(tile_ids)
+    a_values = np.asarray(a_values)
+    b = np.asarray(b)
+    k, n = b.shape
+    a_dense = np.zeros((nblocks * block_r, k), dtype=a_values.dtype)
+    for s in range(a_values.shape[0]):
+        blk = int(block_ids[s])
+        c0 = int(tile_ids[s]) * block_k
+        a_dense[blk * block_r:(blk + 1) * block_r, c0:c0 + block_k] \
+            += a_values[s]
+    return a_dense @ b
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        scale: float | None = None):
+    """Oracle attention: (B, H, Sq, D) x (B, H, Sk, D) -> (B, H, Sq, D)."""
+    if scale is None:
+        scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        sq, sk = q.shape[-2], k.shape[-2]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)

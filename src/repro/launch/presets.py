@@ -1,0 +1,43 @@
+"""Per-architecture launch presets: microbatching, dtypes, and notes.
+
+Microbatch counts are sized so the per-device rematerialization residual
+(stored layer inputs, sequence-parallel over the model axis) stays near or
+under ~1 GB on the production mesh — see DESIGN.md §6 and the derivations in
+EXPERIMENTS.md §Dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["LaunchPreset", "PRESETS", "preset_for"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchPreset:
+    microbatches: int = 1
+    param_dtype: object = jnp.bfloat16
+    moment_dtype: object = jnp.float32
+    note: str = ""
+
+
+PRESETS: dict[str, LaunchPreset] = {
+    "llama3-405b": LaunchPreset(
+        microbatches=16, moment_dtype=jnp.bfloat16,
+        note="405B: bf16 moments + 16 microbatches (8 was tried: collective "
+             "-7% but activation temp 2x — refuted, see §Perf iter 5)"),
+    "qwen2-vl-72b": LaunchPreset(microbatches=8),
+    "granite-34b": LaunchPreset(microbatches=4),
+    "command-r-35b": LaunchPreset(microbatches=4),
+    "qwen3-14b": LaunchPreset(microbatches=2),
+    "zamba2-2.7b": LaunchPreset(microbatches=2),
+    "moonshot-v1-16b-a3b": LaunchPreset(microbatches=2),
+    "musicgen-large": LaunchPreset(microbatches=1),
+    "mamba2-370m": LaunchPreset(microbatches=1),
+    "granite-moe-3b-a800m": LaunchPreset(microbatches=1),
+}
+
+
+def preset_for(arch: str) -> LaunchPreset:
+    return PRESETS.get(arch, LaunchPreset())

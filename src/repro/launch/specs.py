@@ -1,0 +1,202 @@
+"""Dry-run step builders: abstract inputs (ShapeDtypeStruct — zero
+allocation) + in/out shardings for every (arch × shape) cell.
+
+``build_cell(arch, shape_name, mesh)`` returns a ``Cell`` with:
+  * ``fn``        — the jittable step (train_step / prefill / serve_step)
+  * ``args``      — ShapeDtypeStruct pytree stand-ins
+  * ``in_shardings`` / ``out_shardings``
+lowered by dryrun.py via ``jax.jit(...).lower(*args).compile()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, get_config
+from repro.configs.shapes import SHAPES, ShapeSpec, shape_applicable
+from repro.data.pipeline import DataConfig, batch_spec
+from repro.distributed import sharding as shd
+from repro.launch.presets import preset_for
+from repro.models import transformer as tfm
+from repro.optim.adamw import AdamWConfig, OptState, init_opt_state
+from repro.train.step import TrainConfig, make_train_step
+
+__all__ = ["Cell", "build_cell", "input_specs", "abstract_params",
+           "make_rules"]
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    cfg: ModelConfig
+    notes: str = ""
+
+
+def make_rules(mesh, cfg=None) -> shd.Rules:
+    axes = mesh.axis_names
+    data_axes = tuple(a for a in axes if a in ("pod", "data"))
+    fsdp = False
+    if cfg is not None:
+        fsdp = shd.fsdp_policy(cfg, mesh.shape["model"])
+    return shd.Rules(mesh=mesh, data_axes=data_axes, model_axis="model",
+                     fsdp=fsdp)
+
+
+def _data_cfg(cfg: ModelConfig, shape: ShapeSpec) -> DataConfig:
+    return DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=shape.seq_len,
+        global_batch=shape.global_batch, frontend=cfg.frontend,
+        d_model=cfg.d_model, m_rope=cfg.m_rope)
+
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for the model inputs of one cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind in ("train", "prefill"):
+        spec = batch_spec(_data_cfg(cfg, shape))
+        if shape.kind == "prefill":
+            spec.pop("labels")
+        return spec
+    # decode: one new token against a seq_len cache
+    b = shape.global_batch
+    if cfg.frontend == "tokens":
+        spec = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    else:
+        spec = {"embeddings": jax.ShapeDtypeStruct((b, 1, cfg.d_model),
+                                                   jnp.bfloat16)}
+        if cfg.m_rope:
+            spec["positions3"] = jax.ShapeDtypeStruct((3, b, 1), jnp.int32)
+    return spec
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(tfm.init_params, cfg, dtype=dtype),
+        jax.random.PRNGKey(0))
+
+
+def _abstract_cache(cfg: ModelConfig, shape: ShapeSpec, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(tfm.init_cache, cfg, shape.global_batch,
+                          shape.seq_len, dtype=dtype))
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def _sanitize(mesh, spec: P, shape: tuple) -> P:
+    """Drop spec axes that do not evenly divide their dimension (batch=1
+    long-context decode cannot shard batch over data, etc.)."""
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    clean = []
+    for dim, entry in zip(shape, entries):
+        n = _axis_size(mesh, entry)
+        clean.append(entry if (n > 1 and dim % n == 0) else None)
+    return P(*clean)
+
+
+def _batch_shardings(cfg, rules, spec_dict, kind):
+    specs = shd.batch_specs(cfg, rules, kind)
+    out = {}
+    for k, v in spec_dict.items():
+        sp = specs.get(k, P())
+        out[k] = NamedSharding(rules.mesh,
+                               _sanitize(rules.mesh, sp, v.shape))
+    return out
+
+
+def _opt_shardings(cfg, rules, mesh):
+    """ZeRO-1: moments always shard over (data, model), independent of the
+    weight FSDP policy — one reduce-scatter/gather per step, not per layer."""
+    mspecs = shd.param_specs(cfg, rules, fsdp=True)
+    msh = jax.tree.map(lambda s: NamedSharding(mesh, s), mspecs,
+                       is_leaf=lambda s: isinstance(s, P))
+    return OptState(step=NamedSharding(mesh, P()), mu=msh, nu=msh)
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               microbatches: int | None = None) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{arch}×{shape_name} skipped: {why}")
+    preset = preset_for(arch)
+    rules = make_rules(mesh, cfg)
+    params_abs = abstract_params(cfg, preset.param_dtype)
+    pspecs = shd.param_specs(cfg, rules)
+    params_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda s: isinstance(s, P))
+    batch_abs = input_specs(arch, shape_name)
+    batch_sh = _batch_shardings(cfg, rules, batch_abs, shape.kind)
+    scalar = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(
+            microbatches=(microbatches if microbatches is not None
+                          else preset.microbatches),
+            optimizer=AdamWConfig(moment_dtype=preset.moment_dtype))
+        step = make_train_step(cfg, tcfg)
+
+        def fn(params, opt_state, batch):
+            with shd.use_rules(rules):
+                return step(params, opt_state, batch)
+
+        opt_abs = jax.eval_shape(
+            functools.partial(init_opt_state, cfg=tcfg.optimizer), params_abs)
+        opt_sh = _opt_shardings(cfg, rules, mesh)
+        metrics_sh = {"lr": scalar, "grad_norm": scalar, "loss": scalar,
+                      "skipped": scalar}
+        return Cell(arch, shape, fn, (params_abs, opt_abs, batch_abs),
+                    (params_sh, opt_sh, batch_sh),
+                    (params_sh, opt_sh, metrics_sh), cfg,
+                    notes=f"microbatches={tcfg.microbatches}")
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            with shd.use_rules(rules):
+                return tfm.prefill(cfg, params, batch, shape.seq_len)
+
+        cache_sp = shd.cache_specs(cfg, rules, seq_parallel=False)
+        cache_sh = {k: NamedSharding(mesh, s) for k, s in cache_sp.items()}
+        logits_sh = rules.sharding(rules.batch, None, "model")
+        return Cell(arch, shape, fn, (params_abs, batch_abs),
+                    (params_sh, batch_sh), (logits_sh, cache_sh), cfg)
+
+    # decode
+    seq_parallel = shape.name == "long_500k"
+
+    def fn(params, batch, cache):
+        with shd.use_rules(rules):
+            return tfm.decode_step(cfg, params, batch, cache)
+
+    cache_abs = _abstract_cache(cfg, shape, preset.param_dtype)
+    cache_sp = shd.cache_specs(cfg, rules, seq_parallel=seq_parallel)
+    cache_sh = {k: NamedSharding(
+        mesh, _sanitize(mesh, cache_sp[k], cache_abs[k].shape))
+        for k in cache_abs}
+    bax = rules.batch if shape.global_batch > 1 else None
+    logits_sh = rules.sharding(bax, None, "model")
+    return Cell(arch, shape, fn, (params_abs, batch_abs, cache_abs),
+                (params_sh, batch_sh, cache_sh), (logits_sh, cache_sh), cfg,
+                notes=("seq-parallel cache" if seq_parallel else ""))

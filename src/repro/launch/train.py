@@ -1,0 +1,130 @@
+"""End-to-end training driver.
+
+Runs on anything from this container's CPU (``--smoke``: reduced config,
+~100M-param example below) up to the production mesh (same code path; the
+mesh/shardings come from launch.specs). Features exercised here:
+deterministic resumable data, checkpoint/restart, NaN-guard, straggler
+monitor, optional gradient compression.
+
+Example (CPU, used by examples/train_100m.py):
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --smoke \
+        --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ARCH_IDS, get_config, smoke_config
+from repro.data.pipeline import DataConfig, make_batch
+from repro.distributed.compression import init_residuals
+from repro.distributed.elastic import NaNGuard, StragglerMonitor
+from repro.models.transformer import init_params
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.train.step import TrainConfig, make_train_step
+
+__all__ = ["run_training", "main"]
+
+
+def run_training(arch: str, *, smoke: bool = True, steps: int = 50,
+                 batch: int = 8, seq: int = 128, lr: float = 3e-4,
+                 microbatches: int = 1, ckpt_dir: str | None = None,
+                 ckpt_every: int = 50, compress: bool = False,
+                 seed: int = 0, log_every: int = 10,
+                 param_dtype=jnp.float32) -> dict:
+    cfg = smoke_config(arch) if smoke else get_config(arch)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                      global_batch=batch, seed=seed,
+                      frontend=cfg.frontend, d_model=cfg.d_model,
+                      m_rope=cfg.m_rope)
+    ocfg = AdamWConfig(lr_peak=lr, warmup_steps=max(steps // 10, 5),
+                       total_steps=steps)
+    tcfg = TrainConfig(microbatches=microbatches, optimizer=ocfg,
+                       compress_grads=compress)
+
+    key = jax.random.PRNGKey(seed)
+    params = init_params(cfg, key, dtype=param_dtype)
+    opt_state = init_opt_state(params, ocfg)
+    residuals = init_residuals(params) if compress else None
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+
+    start = 0
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    if mgr is not None:
+        got = mgr.restore_latest({"params": params, "opt": opt_state})
+        if got is not None:
+            start, tree, extra = got
+            params, opt_state = tree["params"], tree["opt"]
+            print(f"[train] restored checkpoint at step {start}")
+
+    guard = NaNGuard()
+    monitor = StragglerMonitor()
+    losses = []
+    nparams = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"[train] {cfg.name}: {nparams/1e6:.1f}M params, "
+          f"batch={batch}×{seq}, steps {start}→{steps}")
+
+    for step in range(start, steps):
+        t0 = time.time()
+        data = make_batch(dcfg, step)
+        if compress:
+            params_n, opt_n, residuals_n, metrics = step_fn(
+                params, opt_state, data, residuals)
+        else:
+            params_n, opt_n, metrics = step_fn(params, opt_state, data)
+        loss = float(metrics["loss"])
+        monitor.record(0, time.time() - t0)
+        if guard.check(loss):
+            params, opt_state = params_n, opt_n
+            if compress:
+                residuals = residuals_n
+        else:
+            print(f"[train] step {step}: non-finite loss — update skipped")
+        losses.append(loss)
+        if step % log_every == 0 or step == steps - 1:
+            print(f"[train] step {step:5d} loss {loss:.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.2f} "
+                  f"{time.time()-t0:.2f}s")
+        if mgr is not None and (step + 1) % ckpt_every == 0:
+            mgr.save(step + 1, {"params": params, "opt": opt_state},
+                     extra={"loss": loss})
+    if mgr is not None:
+        mgr.save(steps, {"params": params, "opt": opt_state},
+                 extra={"loss": losses[-1] if losses else None})
+    return {"losses": losses, "params": params, "final_loss":
+            losses[-1] if losses else None,
+            "first_loss": losses[0] if losses else None}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = run_training(args.arch, smoke=args.smoke, steps=args.steps,
+                       batch=args.batch, seq=args.seq, lr=args.lr,
+                       microbatches=args.microbatches,
+                       ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                       compress=args.compress, seed=args.seed)
+    print(f"[train] done: loss {out['first_loss']:.3f} → "
+          f"{out['final_loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

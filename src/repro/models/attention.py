@@ -1,0 +1,127 @@
+"""Attention: chunked (flash-style, pure-jnp) causal attention for
+train/prefill and cached single-token attention for decode.
+
+The chunked path scans over query blocks (outer) and KV blocks (inner) with
+an online-softmax accumulator, bounding live memory to
+O(q_chunk × kv_chunk) per (batch, head) instead of O(S²). This is the
+portable XLA path used by the dry-run; on real TPU hardware the Pallas
+``kernels.flash_attention`` slots in behind the same call site
+(``use_pallas=True``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kernel_ops
+
+__all__ = ["gqa_attention", "decode_attention"]
+
+NEG_INF = -1e30
+
+
+def _broadcast_kv(k: jax.Array, groups: int) -> jax.Array:
+    # (B, S, Hkv, D) -> (B, S, Hkv, G, D) without materializing repeat
+    return jnp.broadcast_to(k[:, :, :, None, :],
+                            (*k.shape[:3], groups, k.shape[-1]))
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, q_chunk: int = 256,
+                  kv_chunk: int = 1024, use_pallas: bool = False
+                  ) -> jax.Array:
+    """q (B,S,Hq,D), k/v (B,S,Hkv,D) → (B,S,Hq,D)."""
+    bsz, s, hq, d = q.shape
+    hkv = k.shape[2]
+    groups = hq // hkv
+
+    if use_pallas:
+        out = kernel_ops.flash_mha(
+            jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+            jnp.moveaxis(v, 2, 1), causal=causal)
+        return jnp.moveaxis(out, 1, 2)
+
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, s)
+    if s % q_chunk or s % kv_chunk:     # odd seq: plain masked attention
+        return _full_attention(q, k, v, causal=causal)
+
+    scale = 1.0 / (d ** 0.5)
+    nq, nk = s // q_chunk, s // kv_chunk
+    # (B, nq, qc, Hkv, G, D)
+    qr = q.reshape(bsz, nq, q_chunk, hkv, groups, d)
+    kr = k.reshape(bsz, nk, kv_chunk, hkv, d)
+    vr = v.reshape(bsz, nk, kv_chunk, hkv, d)
+
+    def q_step(_, qi):
+        qb = qr[:, qi] * scale                       # (B, qc, Hkv, G, D)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kb = kr[:, ki]                           # (B, kc, Hkv, D)
+            vb = vr[:, ki]
+            s_blk = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                               preferred_element_type=jnp.float32)
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk)
+                kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+                mask = qpos[:, None] >= kpos[None, :]
+                s_blk = jnp.where(mask[None, None, None], s_blk, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s_blk, axis=-1, keepdims=True))
+            p = jnp.exp(s_blk - m_new)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * alpha[..., 0, None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((bsz, hkv, groups, q_chunk, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros_like(m0)
+        a0 = jnp.zeros((bsz, hkv, groups, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)
+        # (B, Hkv, G, qc, D) -> (B, qc, Hkv, G, D)
+        return None, jnp.moveaxis(out, 3, 1).astype(q.dtype)
+
+    _, chunks = jax.lax.scan(q_step, None, jnp.arange(nq))
+    # chunks: (nq, B, qc, Hkv, G, D)
+    out = jnp.moveaxis(chunks, 0, 1).reshape(bsz, s, hkv, groups, d)
+    return out.reshape(bsz, s, hq, d)
+
+
+def _full_attention(q, k, v, *, causal):
+    bsz, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qr = q.reshape(bsz, s, hkv, g, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k,
+                        preferred_element_type=jnp.float32) / (d ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return out.reshape(bsz, s, hq, d)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array) -> jax.Array:
+    """One-token attention against a cache.
+
+    q (B,1,Hq,D); caches (B,Smax,Hkv,D); positions > pos are masked.
+    """
+    bsz, _, hq, d = q.shape
+    hkv = k_cache.shape[2]
+    g = hq // hkv
+    qr = q.reshape(bsz, hkv, g, d)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qr, k_cache,
+                        preferred_element_type=jnp.float32) / (d ** 0.5)
+    idx = jnp.arange(k_cache.shape[1])
+    logits = jnp.where(idx[None, None, None] <= pos, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(bsz, 1, hq, d)

@@ -1,0 +1,72 @@
+"""Shared neural-net primitives: RMSNorm, SwiGLU, RoPE/M-RoPE, losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rmsnorm", "swiglu", "rope_cos_sin", "m_rope_cos_sin",
+           "apply_rope", "softmax_cross_entropy"]
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def swiglu(x: jax.Array, wg: jax.Array, wu: jax.Array,
+           wd: jax.Array) -> jax.Array:
+    g = jax.nn.silu(x @ wg)
+    return (g * (x @ wu)) @ wd
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int,
+                 theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions (..., S) → cos/sin (..., S, head_dim//2) in f32."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def m_rope_cos_sin(positions3: jax.Array, head_dim: int, theta: float,
+                   sections: tuple) -> tuple[jax.Array, jax.Array]:
+    """Qwen2-VL M-RoPE: positions3 (3, ..., S); the half-dim frequency bands
+    are split into (t, h, w) sections, each rotated by its own position
+    stream. Returns cos/sin shaped (..., S, head_dim//2)."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freq = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang_per = positions3[..., None].astype(jnp.float32) * freq  # (3,...,S,half)
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=half)               # (half,)
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_per, 0, -1), sec_id[(None,) * (ang_per.ndim - 2)
+                                             + (slice(None), None)],
+        axis=-1)[..., 0]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B, S, H, D); cos/sin (B, S, D//2) — rotate-half convention."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(dt)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          ignore_index: int = -100) -> jax.Array:
+    """Mean CE over non-ignored positions; logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = (labels != ignore_index).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,119 @@
+"""Mixture-of-Experts with the paper's cluster-wise dispatch dataflow.
+
+The token→expert assignment matrix is a sparse A matrix (one nonzero per
+(token, slot)); the expert FFN weight stack is the B operand. The paper's
+pipeline maps 1:1:
+
+  1. *row reordering* — tokens are sorted by expert id so that all rows
+     (tokens) hitting the same B rows (expert weights) become consecutive
+     (`argsort` over expert assignments);
+  2. *variable-length clustering* — the per-expert contiguous runs are the
+     clusters; capacity bucketing pads them to a rectangular (E, C) slab the
+     same way CSR_Cluster pads ragged clusters;
+  3. *cluster-wise computation* — one grouped matmul per expert keeps the
+     expert's weights (the B rows) resident while the whole token cluster
+     streams through: the exact reuse Alg. 1 creates for SpGEMM.
+
+Distribution design (§Perf iteration 3 in EXPERIMENTS.md): dispatch is
+**group-parallel** — every batch row reorders/buckets its own tokens, so the
+leading batch dim stays sharded over the data axes through the entire
+dispatch (zero cross-shard traffic for routing). Under the EP policy the
+expert dim of the weights is model-sharded and XLA materializes the classic
+MoE all-to-all at the grouped einsum; under the TP policy the per-expert
+``d_ff`` is model-sharded and the combine psum appears instead. The first
+version of this file dispatched over *global* token ids, which forced a
+replicated (E, global_cap, D) tensor and a ~40 GB/layer all-reduce — see the
+before/after in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+__all__ = ["init_moe_params", "moe_ffn"]
+
+
+def init_moe_params(cfg, key, dtype=jnp.float32) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts_padded
+    ks = jax.random.split(key, 4)
+    return {
+        "router": (jax.random.normal(ks[0], (d, e)) * d ** -0.5
+                   ).astype(jnp.float32),        # router stays f32
+        "wg": (jax.random.normal(ks[1], (e, d, f)) * d ** -0.5).astype(dtype),
+        "wu": (jax.random.normal(ks[2], (e, d, f)) * d ** -0.5).astype(dtype),
+        "wd": (jax.random.normal(ks[3], (e, f, d)) * f ** -0.5).astype(dtype),
+        "ln": jnp.zeros((d,), dtype),
+    }
+
+
+def moe_ffn(cfg, p: dict, x: jax.Array) -> jax.Array:
+    """x (B, S, D) → (B, S, D); top-k routing, per-group (=batch-row)
+    capacity bucketing, grouped expert matmuls."""
+    bsz, s, d = x.shape
+    e, k = cfg.num_experts_padded, cfg.experts_per_token
+    sk = s * k
+
+    # SP boundary: routing sorts across the whole sequence, so gather the
+    # seq dim here (batch stays data-sharded; dispatch is then shard-local).
+    x = constrain(x, "data", None, None)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    if e != cfg.num_experts:   # padded (dummy) experts never win routing
+        pad = jnp.arange(e) >= cfg.num_experts
+        logits = jnp.where(pad, -jnp.inf, logits)
+    topw, topi = jax.lax.top_k(logits, k)                     # (B, S, k)
+    topw = jax.nn.softmax(topw, axis=-1).astype(x.dtype)
+
+    # ---- 1) row reordering within each group: sort (token, slot) by expert
+    flat_e = topi.reshape(bsz, sk)                            # (B, S*k)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)[None], (bsz, sk))
+    flat_w = topw.reshape(bsz, sk)
+    order = jnp.argsort(flat_e, axis=-1)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)          # (B, S*k)
+    st = jnp.take_along_axis(flat_t, order, axis=-1)
+    sw = jnp.take_along_axis(flat_w, order, axis=-1)
+
+    # ---- 2) variable-length clusters → rectangular (E, C) capacity slab
+    cap = max(8, int(sk / e * cfg.moe_capacity_factor) + 1)
+    counts = jax.nn.one_hot(topi.reshape(bsz, sk), e,
+                            dtype=jnp.int32).sum(axis=1)      # (B, E)
+    starts = jnp.concatenate(
+        [jnp.zeros((bsz, 1), jnp.int32),
+         jnp.cumsum(counts, axis=-1)[:, :-1]], axis=-1)       # (B, E)
+    rank = jnp.arange(sk, dtype=jnp.int32)[None] \
+        - jnp.take_along_axis(starts, se, axis=-1)
+    keep = rank < cap
+    slot = jnp.where(keep, se * cap + rank, e * cap)          # overflow bin
+
+    bidx = jnp.broadcast_to(jnp.arange(bsz)[:, None], (bsz, sk))
+    tok_for_slot = jnp.zeros((bsz, e * cap + 1), jnp.int32
+                             ).at[bidx, slot].set(st)
+    w_for_slot = jnp.zeros((bsz, e * cap + 1), x.dtype
+                           ).at[bidx, slot].set(jnp.where(keep, sw, 0.0))
+    live = jnp.zeros((bsz, e * cap + 1), bool).at[bidx, slot].set(keep)
+    tok_for_slot = tok_for_slot[:, : e * cap]
+    w_for_slot = w_for_slot[:, : e * cap]
+    live = live[:, : e * cap]
+
+    # dispatch: (B, E, C, D) — batch dim stays data-sharded
+    xe = jnp.take_along_axis(x, tok_for_slot[..., None], axis=1)
+    xe = (xe * live[..., None].astype(x.dtype)).reshape(bsz, e, cap, d)
+    # pin the EP all-to-all: batch-sharded → expert-sharded. Without this,
+    # SPMD decomposes the layout change as all-gather(batch)+slice (16× the
+    # wire bytes) and produces uncontracted (E,F,B,C) wgrad all-reduces.
+    xe = constrain(xe, None, "model", None, None)
+
+    # ---- 3) cluster-wise computation: grouped SwiGLU per expert ----------
+    g = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p["wg"]))
+    u = jnp.einsum("becd,edf->becf", xe, p["wu"])
+    ye = jnp.einsum("becf,efd->becd", g * u, p["wd"])         # (B, E, C, D)
+
+    # combine: weighted scatter back to token order within each group
+    ye_flat = ye.reshape(bsz, e * cap, d) * w_for_slot[..., None]
+    bidx_c = jnp.broadcast_to(jnp.arange(bsz)[:, None], (bsz, e * cap))
+    out = jnp.zeros((bsz, s, d), x.dtype).at[bidx_c, tok_for_slot].add(
+        jnp.where(live[..., None], ye_flat, 0.0))
+    return constrain(out, "data", None, None)

@@ -1,0 +1,480 @@
+"""Model zoo assembly: dense / MoE / SSM / hybrid decoder LMs.
+
+One functional implementation covers all 10 assigned architectures:
+
+* ``init_params`` — stacked-layer parameter pytree (leading axis = layer) so
+  the forward pass is a single ``lax.scan`` (compact HLO at 126 layers).
+* ``forward`` — train/prefill full-sequence pass (chunked flash-style
+  attention, chunked SSD scan), with per-layer rematerialization.
+* ``init_cache`` / ``decode_step`` — single-token serving against KV caches
+  (attention) and O(1) recurrent state (SSM); hybrid uses both.
+* ``prefill`` — full-sequence pass that also fills the serving cache.
+
+Modality frontends (musicgen / qwen2-vl) are stubs per the assignment: the
+batch carries precomputed frame/patch ``embeddings`` instead of ``tokens``;
+everything after the embedding lookup is the real backbone.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain, constrain_if_fsdp
+from repro.models.attention import decode_attention, gqa_attention
+from repro.models.layers import (apply_rope, m_rope_cos_sin, rmsnorm,
+                                 rope_cos_sin, softmax_cross_entropy, swiglu)
+from repro.models.mamba2 import (init_mamba2_params, mamba2_block,
+                                 mamba2_decode_block)
+from repro.models.moe import init_moe_params, moe_ffn
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "decode_step",
+           "prefill"]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn(cfg: ModelConfig, key, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    sc = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, hq * hd)) * sc).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, hkv * hd)) * sc).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, hkv * hd)) * sc).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (hq * hd, d))
+               * (hq * hd) ** -0.5).astype(dtype),
+        "ln": jnp.zeros((d,), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _init_mlp(cfg: ModelConfig, key, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": (jax.random.normal(ks[0], (d, f)) * d ** -0.5).astype(dtype),
+        "wu": (jax.random.normal(ks[1], (d, f)) * d ** -0.5).astype(dtype),
+        "wd": (jax.random.normal(ks[2], (f, d)) * f ** -0.5).astype(dtype),
+        "ln": jnp.zeros((d,), dtype),
+    }
+
+
+def _stack(leaves: list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, cfg.num_layers + 4)
+    params: dict[str, Any] = {}
+    if cfg.frontend == "tokens":
+        params["embed"] = (jax.random.normal(
+            keys[-1], (cfg.padded_vocab, cfg.d_model))
+            * cfg.d_model ** -0.5).astype(dtype)
+    if cfg.family in ("dense", "audio", "vlm"):
+        layers = [{"attn": _init_attn(cfg, jax.random.fold_in(keys[i], 0),
+                                      dtype),
+                   "mlp": _init_mlp(cfg, jax.random.fold_in(keys[i], 1),
+                                    dtype)}
+                  for i in range(cfg.num_layers)]
+        params["layers"] = _stack(layers)
+    elif cfg.family == "moe":
+        layers = [{"attn": _init_attn(cfg, jax.random.fold_in(keys[i], 0),
+                                      dtype),
+                   "moe": init_moe_params(cfg, jax.random.fold_in(keys[i], 1),
+                                          dtype)}
+                  for i in range(cfg.num_layers)]
+        params["layers"] = _stack(layers)
+    elif cfg.family == "ssm":
+        layers = [{"ssm": init_mamba2_params(cfg, keys[i], dtype)}
+                  for i in range(cfg.num_layers)]
+        params["layers"] = _stack(layers)
+    elif cfg.family == "hybrid":
+        layers = [{"ssm": init_mamba2_params(cfg, keys[i], dtype)}
+                  for i in range(cfg.num_layers)]
+        params["layers"] = _stack(layers)
+        params["shared_attn"] = {
+            "attn": _init_attn(cfg, keys[-2], dtype),
+            "mlp": _init_mlp(cfg, keys[-3], dtype)}
+    else:
+        raise ValueError(cfg.family)
+    params["final_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            keys[-4], (cfg.d_model, cfg.padded_vocab))
+            * cfg.d_model ** -0.5).astype(dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# shared sub-blocks
+# ---------------------------------------------------------------------------
+
+
+def _qkv(cfg, p, h):
+    bsz, s, _ = h.shape
+    hd = cfg.head_dim
+    q = (h @ p["wq"]).reshape(bsz, s, cfg.num_heads, hd)
+    k = (h @ p["wk"]).reshape(bsz, s, cfg.num_kv_heads, hd)
+    v = (h @ p["wv"]).reshape(bsz, s, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _attn_full(cfg, p, x, cos, sin, use_pallas):
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    q, k, v = _qkv(cfg, p, h)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    # NOTE: no multi-axis-batch + model constraint here — that combination
+    # inside a scan body miscompiles under XLA SPMD (see DESIGN.md §Sharding
+    # workaround); head sharding propagates from the wq/wk/wv specs.
+    out = gqa_attention(q, k, v, causal=True, use_pallas=use_pallas)
+    out = out.reshape(*x.shape[:2], -1) @ p["wo"]
+    out = constrain_if_fsdp(out, "data", None, None)   # see _mlp_full note
+    return out, (k, v)
+
+
+def _mlp_full(cfg, p, x):
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    # pin the TP layout of the SwiGLU hidden: without this SPMD sometimes
+    # resolves the FSDP(data)×TP(model) weight sharding by fully gathering
+    # wg/wu/wd instead of partitioning the feature dim (§Perf iter 4b).
+    g = jax.nn.silu(h @ p["wg"])
+    g = constrain_if_fsdp(g, None, None, "model")
+    u = constrain_if_fsdp(h @ p["wu"], None, None, "model")
+    # batch-sharded output: otherwise the FSDP down-proj propagates its
+    # feature sharding into the residual stream and SPMD gathers the whole
+    # microbatch over data to reconcile (§Perf iter 4c). TP-only layouts
+    # regress with this pin, hence the fsdp-conditional form.
+    return constrain_if_fsdp((g * u) @ p["wd"], "data", None, None)
+
+
+def _positions(cfg, batch, seq):
+    if "positions" in batch:
+        return batch["positions"]
+    bsz = (batch.get("tokens") if cfg.frontend == "tokens"
+           else batch["embeddings"]).shape[0]
+    return jnp.broadcast_to(jnp.arange(seq)[None], (bsz, seq))
+
+
+def _rope_tables(cfg, batch, positions):
+    if cfg.m_rope:
+        pos3 = batch.get("positions3")
+        if pos3 is None:
+            pos3 = jnp.broadcast_to(positions[None], (3, *positions.shape))
+        return m_rope_cos_sin(pos3, cfg.head_dim, cfg.rope_theta,
+                              cfg.m_rope_sections)
+    return rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+
+
+def _embed_in(cfg, params, batch):
+    if cfg.frontend == "tokens":
+        x = params["embed"][batch["tokens"]]
+    else:
+        x = batch["embeddings"]
+    return constrain(x, "data", None, None)
+
+
+def _head_out(cfg, params, x):
+    """Logits over the *padded* vocab (pad ids masked to -inf)."""
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ w
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad, jnp.asarray(-1e30, logits.dtype), logits)
+    return constrain(logits, "data", None, "model")
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict, *,
+            remat: bool = True, use_pallas: bool = False,
+            collect_kv: bool = False):
+    """Full-sequence pass → logits (B, S, V). With ``collect_kv`` also
+    returns the per-layer serving state (for prefill)."""
+    x = _embed_in(cfg, params, batch)
+    seq = x.shape[1]
+    positions = _positions(cfg, batch, seq)
+    ck = {}
+
+    if cfg.family in ("dense", "audio", "vlm", "moe"):
+        cos, sin = _rope_tables(cfg, batch, positions)
+
+        def body(h, lp):
+            # Megatron-SP: residual stream is sequence-sharded over `model`
+            # between layers; gather seq here so the model axis is free for
+            # the TP matmuls (otherwise SPMD fully replicates FSDP weights —
+            # EXPERIMENTS.md §Perf iter 4).
+            h = constrain(h, "data", None, None)
+            a, kv = _attn_full(cfg, lp["attn"], h, cos, sin, use_pallas)
+            h = h + a
+            if cfg.family == "moe":
+                h = h + moe_ffn(cfg, lp["moe"], rmsnorm(
+                    h, lp["moe"]["ln"], cfg.norm_eps))
+            else:
+                h = h + _mlp_full(cfg, lp["mlp"], h)
+            h = constrain(h, "data", "model", None)
+            return h, (kv if collect_kv else None)
+
+        fn = jax.checkpoint(body) if remat else body
+        x, kvs = jax.lax.scan(fn, x, params["layers"])
+        if collect_kv:
+            ck = {"k": kvs[0], "v": kvs[1]}
+
+    elif cfg.family == "ssm":
+        def body(h, lp):
+            h = constrain(h, "data", None, None)   # SP gather (see dense)
+            out = mamba2_block(cfg, lp["ssm"],
+                               rmsnorm(h, lp["ssm"]["ln"], cfg.norm_eps),
+                               return_state=collect_kv,
+                               use_pallas=use_pallas)
+            if collect_kv:
+                y, st = out
+            else:
+                y, st = out, None
+            h = h + y
+            return constrain(h, "data", "model", None), st
+
+        fn = jax.checkpoint(body) if remat else body
+        x, sts = jax.lax.scan(fn, x, params["layers"])
+        if collect_kv:
+            ck = {"ssm_state": sts[0], "conv_buf": sts[1]}
+
+    elif cfg.family == "hybrid":
+        cos, sin = _rope_tables(cfg, batch, positions)
+        every = cfg.hybrid_attn_every
+        ngroups = cfg.num_layers // every
+        grouped = jax.tree.map(
+            lambda a: a.reshape(ngroups, every, *a.shape[1:]),
+            params["layers"])
+        shared = params["shared_attn"]
+
+        def inner(h, lp):
+            h = constrain(h, "data", None, None)   # SP gather (see dense)
+            out = mamba2_block(cfg, lp["ssm"],
+                               rmsnorm(h, lp["ssm"]["ln"], cfg.norm_eps),
+                               return_state=collect_kv,
+                               use_pallas=use_pallas)
+            if collect_kv:
+                y, st = out
+            else:
+                y, st = out, None
+            return h + y, st
+
+        def group(h, gp):
+            fn = jax.checkpoint(inner) if remat else inner
+            h, sts = jax.lax.scan(fn, h, gp)
+            h = constrain(h, "data", None, None)
+            a, kv = _attn_full(cfg, shared["attn"], h, cos, sin, use_pallas)
+            h = h + a
+            h = h + _mlp_full(cfg, shared["mlp"], h)
+            return constrain(h, "data", "model", None), \
+                ((kv, sts) if collect_kv else None)
+
+        gfn = jax.checkpoint(group) if remat else group
+        x, ys = jax.lax.scan(gfn, x, grouped)
+        if collect_kv:
+            (kvs, sts) = ys
+            ck = {"k": kvs[0], "v": kvs[1],
+                  "ssm_state": sts[0].reshape(cfg.num_layers,
+                                              *sts[0].shape[2:]),
+                  "conv_buf": sts[1].reshape(cfg.num_layers,
+                                             *sts[1].shape[2:])}
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _head_out(cfg, params, x)
+    if collect_kv:
+        return logits, ck
+    return logits
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *,
+            remat: bool = True, use_pallas: bool = False) -> jax.Array:
+    logits = forward(cfg, params, batch, remat=remat, use_pallas=use_pallas)
+    return softmax_cross_entropy(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               dtype=jnp.float32) -> dict:
+    cache: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    na = cfg.num_attn_layers
+    if na:
+        hd = cfg.head_dim
+        cache["k"] = jnp.zeros((na, batch_size, max_len, cfg.num_kv_heads,
+                                hd), dtype)
+        cache["v"] = jnp.zeros_like(cache["k"])
+    if cfg.family in ("ssm", "hybrid"):
+        h, p, n = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state
+        cch = cfg.ssm_d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        cache["ssm_state"] = jnp.zeros(
+            (cfg.num_layers, batch_size, h, p, n), jnp.float32)
+        cache["conv_buf"] = jnp.zeros(
+            (cfg.num_layers, batch_size, cfg.ssm_conv_width - 1, cch), dtype)
+    return cache
+
+
+def _attn_decode(cfg, p, x, kc, vc, pos, cos, sin):
+    """x (B,1,D); kc/vc (B,Smax,Hkv,Dh). Returns (out, kc, vc)."""
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    q, k, v = _qkv(cfg, p, h)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, pos, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, pos, 0, 0))
+    out = decode_attention(q, kc, vc, pos)
+    return out.reshape(*x.shape[:2], -1) @ p["wo"], kc, vc
+
+
+def decode_step(cfg: ModelConfig, params: dict, batch: dict, cache: dict):
+    """One-token step. batch: {"tokens": (B,1)} or {"embeddings": (B,1,D)}
+    (+ optional positions3 (3,B,1)). Returns (logits (B,1,V), new cache)."""
+    x = _embed_in(cfg, params, batch)
+    pos = cache["pos"]
+    bsz = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (bsz, 1))
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "audio", "vlm", "moe"):
+        cos, sin = _rope_tables(cfg, batch, positions)
+
+        def body(h, xs):
+            lp, kc, vc = xs
+            a, kc, vc = _attn_decode(cfg, lp["attn"], h, kc, vc, pos,
+                                     cos, sin)
+            h = h + a
+            if cfg.family == "moe":
+                h = h + moe_ffn(cfg, lp["moe"], rmsnorm(
+                    h, lp["moe"]["ln"], cfg.norm_eps))
+            else:
+                h = h + _mlp_full(cfg, lp["mlp"], h)
+            return h, (kc, vc)
+
+        x, (kc, vc) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache.update(k=kc, v=vc)
+
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            lp, st, buf = xs
+            y, st, buf = mamba2_decode_block(
+                cfg, lp["ssm"], rmsnorm(h, lp["ssm"]["ln"], cfg.norm_eps),
+                st, buf)
+            return h + y, (st, buf)
+
+        x, (st, buf) = jax.lax.scan(
+            body, x, (params["layers"], cache["ssm_state"],
+                      cache["conv_buf"]))
+        new_cache.update(ssm_state=st, conv_buf=buf)
+
+    elif cfg.family == "hybrid":
+        cos, sin = _rope_tables(cfg, batch, positions)
+        every = cfg.hybrid_attn_every
+        ngroups = cfg.num_layers // every
+        grouped = jax.tree.map(
+            lambda a: a.reshape(ngroups, every, *a.shape[1:]),
+            params["layers"])
+        sst = cache["ssm_state"].reshape(ngroups, every,
+                                         *cache["ssm_state"].shape[1:])
+        sbuf = cache["conv_buf"].reshape(ngroups, every,
+                                         *cache["conv_buf"].shape[1:])
+        shared = params["shared_attn"]
+
+        def inner(h, xs):
+            lp, st, buf = xs
+            y, st, buf = mamba2_decode_block(
+                cfg, lp["ssm"], rmsnorm(h, lp["ssm"]["ln"], cfg.norm_eps),
+                st, buf)
+            return h + y, (st, buf)
+
+        def group(h, xs):
+            gp, st_g, buf_g, kc, vc = xs
+            h, (st_g, buf_g) = jax.lax.scan(inner, h, (gp, st_g, buf_g))
+            a, kc, vc = _attn_decode(cfg, shared["attn"], h, kc, vc, pos,
+                                     cos, sin)
+            h = h + a
+            h = h + _mlp_full(cfg, shared["mlp"], h)
+            return h, (st_g, buf_g, kc, vc)
+
+        x, (st, buf, kc, vc) = jax.lax.scan(
+            group, x, (grouped, sst, sbuf, cache["k"], cache["v"]))
+        new_cache.update(
+            ssm_state=st.reshape(cfg.num_layers, *st.shape[2:]),
+            conv_buf=buf.reshape(cfg.num_layers, *buf.shape[2:]),
+            k=kc, v=vc)
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _head_out(cfg, params, x)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+def _decode_replay(cfg, params, batch, cache, seq):
+    """Exact cache fill by replaying the prompt through decode_step
+    (used for SSM/hybrid where conv buffers + states must match)."""
+    def step(cache, t):
+        sub = {}
+        for k, v in batch.items():
+            if k == "labels":
+                continue
+            if k == "positions3":
+                sub[k] = jax.lax.dynamic_slice_in_dim(v, t, 1, axis=2)
+            else:
+                sub[k] = jax.lax.dynamic_slice_in_dim(v, t, 1, axis=1)
+        logits, cache = decode_step(cfg, params, sub, cache)
+        return cache, logits[:, 0]
+
+    cache, logits = jax.lax.scan(step, cache, jnp.arange(seq))
+    return jnp.moveaxis(logits, 0, 1), cache   # (B, S, V)
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, max_len: int, *,
+            use_pallas: bool = False):
+    """Run the full prompt, returning (logits, cache ready at pos=seq).
+
+    One chunked forward pass for every family — SSM layers hand their final
+    SSD state + conv tail straight to the cache (no token-by-token replay;
+    that path cost O(seq) sequential steps and was the zamba2/mamba2
+    prefill-cell pathology in EXPERIMENTS.md §Perf iteration 1).
+    """
+    lead = (batch.get("tokens") if cfg.frontend == "tokens"
+            else batch["embeddings"])
+    bsz, seq = lead.shape[0], lead.shape[1]
+    cache = init_cache(cfg, bsz, max_len,
+                       dtype=jax.tree.leaves(params)[0].dtype)
+    logits, ck = forward(cfg, params, batch, use_pallas=use_pallas,
+                         collect_kv=True)
+    if cfg.num_attn_layers:
+        # ck["k"]: (L, B, S, Hkv, Dh) — write the prompt into the cache head
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], ck["k"].astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], ck["v"].astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    if cfg.family in ("ssm", "hybrid"):
+        cache["ssm_state"] = ck["ssm_state"].astype(cache["ssm_state"].dtype)
+        cache["conv_buf"] = ck["conv_buf"].astype(cache["conv_buf"].dtype)
+    cache["pos"] = jnp.asarray(seq, jnp.int32)
+    return logits, cache

@@ -1,0 +1,58 @@
+"""Int8 KV-cache quantization — the decode cells' dominant-term lever.
+
+§Roofline shows every decode cell memory-bound on KV-cache streaming; int8
+storage halves the dominant term at <1e-2 attention-output error (tested).
+Scheme: symmetric per-(layer, position, head) scales — position-wise scales
+keep early-token outliers from poisoning late-token precision, and the
+scale tensor is seq×heads (negligible vs the cache itself).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_kv", "dequantize_kv", "quantized_cache_bytes"]
+
+
+def _q(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    # x (..., head_dim): scale over the head_dim axis
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def quantize_kv(cache: dict) -> dict:
+    """Returns a new cache dict with k/v as (int8 values, f32 scales)."""
+    out = dict(cache)
+    for key in ("k", "v"):
+        if key in cache:
+            q, s = _q(cache[key])
+            out[key + "_q"] = q
+            out[key + "_scale"] = s
+            del out[key]
+    return out
+
+
+def dequantize_kv(cache: dict, dtype=jnp.bfloat16) -> dict:
+    out = dict(cache)
+    for key in ("k", "v"):
+        qk, sk = key + "_q", key + "_scale"
+        if qk in cache:
+            out[key] = (cache[qk].astype(jnp.float32)
+                        * cache[sk]).astype(dtype)
+            del out[qk], out[sk]
+    return out
+
+
+def quantized_cache_bytes(cache: dict) -> tuple[int, int]:
+    """(bf16 bytes, int8+scales bytes) for the attention cache portion."""
+    full = 0
+    quant = 0
+    for key in ("k", "v"):
+        if key in cache:
+            n = cache[key].size
+            full += n * 2
+            quant += n * 1 + (n // cache[key].shape[-1]) * 4
+    return full, quant

@@ -1,0 +1,106 @@
+"""Training step: grad-accumulation microbatching, remat, AdamW, optional
+error-feedback gradient compression, NaN-safe update.
+
+``make_train_step`` returns a pure jittable function
+``(params, opt_state, batch[, residuals]) -> (params, opt_state, metrics)``
+suitable for ``jax.jit`` with in/out shardings. Microbatching runs as a
+``lax.scan`` over the leading split of the global batch — activation memory
+scales with the microbatch while the gradient all-reduce happens once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compression import ef_compress_grads
+from repro.models.transformer import loss_fn
+from repro.optim.adamw import AdamWConfig, OptState, adamw_update
+
+__all__ = ["TrainConfig", "make_train_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    remat: bool = True
+    use_pallas: bool = False
+    compress_grads: bool = False
+    skip_nonfinite: bool = True
+    optimizer: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+def _split_micro(batch: dict, n: int) -> dict:
+    def sp(x):
+        if x.ndim >= 2 and x.shape[0] % n == 0 and x.shape[0] >= n:
+            return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+        return jnp.broadcast_to(x[None], (n, *x.shape))
+    out = {}
+    for k, v in batch.items():
+        if k == "positions3":   # (3, B, S) — batch is axis 1
+            v = jnp.moveaxis(v, 1, 0)
+            v = v.reshape(n, v.shape[0] // n, *v.shape[1:])
+            out[k] = jnp.moveaxis(v, 2, 1)
+        else:
+            out[k] = sp(v)
+    return out
+
+
+def make_train_step(cfg, tcfg: TrainConfig):
+    """cfg: ModelConfig. Returns f(params, opt_state, batch, residuals)."""
+
+    def micro_loss(params, mb):
+        return loss_fn(cfg, params, mb, remat=tcfg.remat,
+                       use_pallas=tcfg.use_pallas)
+
+    grad_fn = jax.value_and_grad(micro_loss)
+
+    def train_step(params, opt_state: OptState, batch: dict,
+                   residuals: Optional[Any] = None):
+        n = tcfg.microbatches
+        if n > 1:
+            micros = _split_micro(batch, n)
+
+            def acc_step(carry, mb):
+                gsum, lsum = carry
+                l, g = grad_fn(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (gsum, lsum), _ = jax.lax.scan(acc_step, (g0, 0.0), micros)
+            loss = lsum / n
+            grads = jax.tree.map(lambda g: g / n, gsum)
+        else:
+            loss, grads = grad_fn(params, batch)
+
+        if tcfg.compress_grads:
+            assert residuals is not None, "compression needs residual state"
+            grads, residuals = ef_compress_grads(grads, residuals)
+
+        new_params, new_opt, metrics = adamw_update(
+            params, grads, opt_state, tcfg.optimizer)
+
+        if tcfg.skip_nonfinite:
+            ok = jnp.isfinite(loss) & jnp.isfinite(metrics["grad_norm"])
+            new_params = jax.tree.map(
+                lambda n_, o: jnp.where(ok, n_, o), new_params, params)
+            new_opt = OptState(
+                step=jnp.where(ok, new_opt.step, opt_state.step),
+                mu=jax.tree.map(lambda n_, o: jnp.where(ok, n_, o),
+                                new_opt.mu, opt_state.mu),
+                nu=jax.tree.map(lambda n_, o: jnp.where(ok, n_, o),
+                                new_opt.nu, opt_state.nu))
+            metrics["skipped"] = (~ok).astype(jnp.int32)
+
+        metrics["loss"] = loss
+        if tcfg.compress_grads:
+            return new_params, new_opt, residuals, metrics
+        return new_params, new_opt, metrics
+
+    return train_step

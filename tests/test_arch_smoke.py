@@ -1,0 +1,106 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train step + one decode step on CPU; assert shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config, smoke_config
+from repro.configs.shapes import SHAPES, shape_applicable
+from repro.models import transformer as tfm
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.train.step import TrainConfig, make_train_step
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    if cfg.frontend == "tokens":
+        batch = {"tokens": jax.random.randint(key, (B, S), 0,
+                                              cfg.vocab_size)}
+    else:
+        batch = {"embeddings": jax.random.normal(key, (B, S, cfg.d_model))}
+        if cfg.m_rope:
+            batch["positions3"] = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None, None], (3, B, S))
+    batch["labels"] = jax.random.randint(jax.random.fold_in(key, 1),
+                                         (B, S), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = smoke_config(arch)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    logits = tfm.forward(cfg, params, batch)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch):
+    cfg = smoke_config(arch)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    tcfg = TrainConfig(microbatches=1, optimizer=AdamWConfig())
+    step = jax.jit(make_train_step(cfg, tcfg))
+    opt = init_opt_state(params, tcfg.optimizer)
+    batch = _batch(cfg, jax.random.PRNGKey(2))
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(new_opt.step) == 1
+    # params actually moved
+    delta = sum(float(jnp.abs(a - b).sum()) for a, b in
+                zip(jax.tree.leaves(new_params), jax.tree.leaves(params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step_matches_cache_contract(arch):
+    cfg = smoke_config(arch)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    cache = tfm.init_cache(cfg, B, 16)
+    batch = _batch(cfg, jax.random.PRNGKey(3))
+    step = {k: (v[:, :1] if k != "positions3" else v[:, :, :1])
+            for k, v in batch.items() if k != "labels"}
+    logits, cache2 = tfm.decode_step(cfg, params, step, cache)
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert int(cache2["pos"]) == 1
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_exact_numbers(arch):
+    """The full (non-smoke) configs carry the exact published numbers."""
+    cfg = get_config(arch)
+    expected = {
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+        "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected
+
+
+def test_ssm_extras():
+    assert get_config("zamba2-2.7b").ssm_state == 64
+    assert get_config("mamba2-370m").ssm_state == 128
+    assert get_config("granite-moe-3b-a800m").num_experts == 40
+    assert get_config("granite-moe-3b-a800m").experts_per_token == 8
+    assert get_config("moonshot-v1-16b-a3b").num_experts == 64
+    assert get_config("moonshot-v1-16b-a3b").experts_per_token == 6
+
+
+def test_long_500k_applicability():
+    long = SHAPES["long_500k"]
+    runs = [a for a in ARCH_IDS
+            if shape_applicable(get_config(a), long)[0]]
+    assert sorted(runs) == ["mamba2-370m", "zamba2-2.7b"]

@@ -1,0 +1,91 @@
+"""Tests for fixed/variable/hierarchical clustering (paper Algs. 2–3)."""
+import numpy as np
+import pytest
+
+from repro.core.clustering import (fixed_length_clusters,
+                                   hierarchical_clusters,
+                                   variable_length_clusters)
+from repro.core.formats import HostCSR
+from repro.core.similarity import jaccard_pairs_topk
+
+
+def paper_figure_matrix() -> HostCSR:
+    """The 6×6 matrix of Fig. 1 / Fig. 5 of the paper."""
+    d = np.zeros((6, 6), np.float32)
+    # rows as drawn in Fig. 5: col sets {0,2},{0,2,5},{0,2,5},{1,3},{1,3,4},{0,4}
+    d[0, [0, 2]] = 1
+    d[1, [0, 2, 5]] = 1
+    d[2, [0, 2, 5]] = 1
+    d[3, [1, 3]] = 1
+    d[4, [1, 3, 4]] = 1
+    d[5, [0, 4]] = 1
+    return HostCSR.from_dense(d)
+
+
+def test_fixed_length_boundaries():
+    a = paper_figure_matrix()
+    cl = fixed_length_clusters(a, 3)
+    assert cl.boundaries.tolist() == [0, 3]
+    assert cl.sizes(a.nrows).tolist() == [3, 3]
+
+
+def test_variable_length_matches_paper_walkthrough():
+    """§3.2's walkthrough: clusters {0,1,2}, {3,4}, {5} at jacc_th=0.3."""
+    a = paper_figure_matrix()
+    cl = variable_length_clusters(a, jacc_th=0.3, max_cluster_th=8)
+    assert cl.boundaries.tolist() == [0, 3, 5]
+
+
+def test_variable_length_respects_cap():
+    d = np.zeros((16, 4), np.float32)
+    d[:, 0] = 1.0  # all rows identical
+    a = HostCSR.from_dense(d)
+    cl = variable_length_clusters(a, jacc_th=0.3, max_cluster_th=4)
+    assert cl.sizes(a.nrows).max() == 4
+    assert cl.boundaries.tolist() == [0, 4, 8, 12]
+
+
+def test_jaccard_pairs_topk_exact():
+    a = paper_figure_matrix()
+    pairs = {(i, j): s for s, i, j in jaccard_pairs_topk(a, topk=7,
+                                                         jacc_th=0.0)}
+    # rows 1 and 2 are identical -> jaccard 1.0
+    assert pairs[(1, 2)] == pytest.approx(1.0)
+    # rows 0 and 1 share {0,2} of union {0,2,5} -> 2/3
+    assert pairs[(0, 1)] == pytest.approx(2 / 3)
+
+
+def test_hierarchical_groups_scattered_similar_rows():
+    """Identical rows placed far apart must end up in one cluster."""
+    d = np.zeros((12, 16), np.float32)
+    pattern_a = [1, 5, 9]
+    pattern_b = [2, 6, 10, 14]
+    for i in range(12):
+        d[i, pattern_a if i % 2 == 0 else pattern_b] = 1.0
+    a = HostCSR.from_dense(d)
+    cl = hierarchical_clusters(a, jacc_th=0.3, max_cluster_th=6)
+    # the permutation must bring same-pattern rows together
+    reordered_parity = (cl.perm % 2)
+    b = np.concatenate([cl.boundaries, [12]])
+    for c in range(len(b) - 1):
+        seg = reordered_parity[b[c]: b[c + 1]]
+        assert len(set(seg.tolist())) == 1, "cluster mixes dissimilar rows"
+
+
+def test_hierarchical_perm_is_permutation():
+    rng = np.random.default_rng(0)
+    d = (rng.random((64, 64)) < 0.1).astype(np.float32)
+    a = HostCSR.from_dense(d)
+    cl = hierarchical_clusters(a)
+    assert np.array_equal(np.sort(cl.perm), np.arange(64))
+    assert cl.boundaries[0] == 0
+    assert np.all(np.diff(cl.boundaries) >= 1)
+    assert cl.sizes(64).max() <= cl.max_cluster
+
+
+def test_hierarchical_cap_respected():
+    d = np.zeros((32, 4), np.float32)
+    d[:, 1] = 1.0
+    a = HostCSR.from_dense(d)
+    cl = hierarchical_clusters(a, jacc_th=0.3, max_cluster_th=8)
+    assert cl.sizes(32).max() <= 8

@@ -1,0 +1,104 @@
+"""Unit + property tests for sparse formats and conversions."""
+import numpy as np
+import pytest
+
+from repro.core.formats import (HostCSR, bcc_from_host,
+                                csr_cluster_from_host,
+                                csr_cluster_nbytes_exact, csr_from_host)
+
+from hypothesis import given, settings, strategies as st
+
+
+def rand_host(n, m, density, seed):
+    rng = np.random.default_rng(seed)
+    dense = (rng.random((n, m)) < density) * rng.uniform(
+        0.5, 2.0, (n, m)).astype(np.float32)
+    return HostCSR.from_dense(dense), dense.astype(np.float32)
+
+
+def test_host_roundtrip():
+    h, dense = rand_host(17, 23, 0.2, 0)
+    np.testing.assert_allclose(h.to_dense(), dense, rtol=1e-6)
+
+
+def test_host_transpose():
+    h, dense = rand_host(13, 29, 0.3, 1)
+    np.testing.assert_allclose(h.transpose().to_dense(), dense.T, rtol=1e-6)
+
+
+def test_host_permute_rows():
+    h, dense = rand_host(20, 20, 0.25, 2)
+    perm = np.random.default_rng(0).permutation(20)
+    np.testing.assert_allclose(h.permute_rows(perm).to_dense(), dense[perm],
+                               rtol=1e-6)
+
+
+def test_host_permute_symmetric():
+    h, dense = rand_host(20, 20, 0.25, 3)
+    perm = np.random.default_rng(1).permutation(20)
+    got = h.permute_symmetric(perm).to_dense()
+    np.testing.assert_allclose(got, dense[np.ix_(perm, perm)], rtol=1e-6)
+
+
+def test_csr_device_roundtrip():
+    h, dense = rand_host(11, 19, 0.3, 4)
+    c = csr_from_host(h)
+    np.testing.assert_allclose(np.asarray(c.to_dense()), dense, rtol=1e-6)
+
+
+def test_csr_cluster_roundtrip():
+    h, dense = rand_host(16, 24, 0.3, 5)
+    bounds = [0, 3, 8, 12]  # variable-length clusters
+    cc = csr_cluster_from_host(h, bounds, max_cluster=8)
+    np.testing.assert_allclose(np.asarray(cc.to_dense()), dense, rtol=1e-6)
+
+
+def test_csr_cluster_dedupes_columns():
+    # two identical rows in one cluster -> one column slot per column
+    dense = np.zeros((2, 8), np.float32)
+    dense[:, [1, 5]] = 1.0
+    h = HostCSR.from_dense(dense)
+    cc = csr_cluster_from_host(h, [0], max_cluster=2)
+    assert int(cc.cluster_ptr[1]) == 2  # 2 distinct columns, not 4 slots
+
+
+def test_bcc_roundtrip():
+    h, dense = rand_host(20, 300, 0.05, 6)
+    b = bcc_from_host(h, block_r=8, block_k=128)
+    got = np.asarray(b.to_dense())
+    np.testing.assert_allclose(got, dense, rtol=1e-6)
+
+
+def test_bcc_jaggedness_padding():
+    h, dense = rand_host(9, 200, 0.02, 7)   # nrows not multiple of block_r
+    b = bcc_from_host(h, block_r=8, block_k=64)
+    np.testing.assert_allclose(np.asarray(b.to_dense()), dense, rtol=1e-6)
+
+
+def test_cluster_nbytes_exact_less_than_csr_for_similar_rows():
+    dense = np.zeros((32, 64), np.float32)
+    dense[:, [3, 17, 42]] = 1.0  # all rows identical
+    h = HostCSR.from_dense(dense)
+    bounds = list(range(0, 32, 8))
+    nb = csr_cluster_nbytes_exact(h, bounds, fixed_length=True)
+    assert nb < h.nbytes()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 30), st.integers(1, 30),
+       st.floats(0.05, 0.6), st.integers(0, 10_000))
+def test_property_roundtrip_csr(n, m, density, seed):
+    h, dense = rand_host(n, m, density, seed)
+    np.testing.assert_allclose(h.to_dense(), dense, rtol=1e-6)
+    c = csr_from_host(h)
+    np.testing.assert_allclose(np.asarray(c.to_dense()), dense, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 24), st.floats(0.05, 0.5), st.integers(0, 10_000),
+       st.integers(1, 8))
+def test_property_cluster_roundtrip(n, density, seed, k):
+    h, dense = rand_host(n, n, density, seed)
+    bounds = list(range(0, n, k))
+    cc = csr_cluster_from_host(h, bounds, max_cluster=k)
+    np.testing.assert_allclose(np.asarray(cc.to_dense()), dense, rtol=1e-6)

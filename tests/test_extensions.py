@@ -1,0 +1,130 @@
+"""Tests for the beyond-paper extensions: BCC sparse-weight linear, fused
+Pallas SSD kernel, int8 KV-cache quantization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.sparse_linear import SparseLinear, magnitude_prune
+from repro.kernels.ssd_chunk import ssd_chunk_scan
+from repro.models.mamba2 import ssd_chunked
+from repro.serve.quant import (dequantize_kv, quantize_kv,
+                               quantized_cache_bytes)
+from repro.models.attention import decode_attention
+
+
+# ---------------------------------------------------------------------------
+# SparseLinear (BCC weights)
+# ---------------------------------------------------------------------------
+
+
+def test_magnitude_prune_density():
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((64, 256)).astype(np.float32)
+    p = magnitude_prune(w, 0.1)
+    assert abs((p != 0).mean() - 0.1) < 0.02
+    # kept entries are the largest
+    assert np.abs(p[p != 0]).min() >= np.abs(w[p == 0]).max() - 1e-6
+
+
+@pytest.mark.parametrize("reorder", ["original", "hierarchical", "rcm"])
+def test_sparse_linear_exact(reorder):
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal((64, 256)).astype(np.float32)
+    pruned = magnitude_prune(w, 0.15)
+    lin = SparseLinear.from_dense(w, density=0.15, reorder=reorder)
+    x = jnp.asarray(rng.standard_normal((4, 8, 256)), jnp.float32)
+    got = np.asarray(lin.apply(x, interpret=True))
+    want = np.asarray(x) @ pruned.T
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_sparse_linear_clustering_reduces_tiles():
+    # block-structured weights: hierarchical clustering should pack tighter
+    rng = np.random.default_rng(2)
+    w = np.zeros((128, 4096), np.float32)   # 32 column tiles at block_k=128
+    patterns = [rng.choice(4096, 12, replace=False) for _ in range(8)]
+    for i in range(128):
+        w[i, patterns[i % 8]] = rng.standard_normal(12)
+    scr = rng.permutation(128)
+    w = w[scr]                       # scatter similar rows apart
+    lin = SparseLinear.from_dense(w, density=1.0, reorder="hierarchical")
+    assert lin.stats["tile_reduction"] > 0.3
+    assert lin.stats["bcc_bytes"] < lin.stats["dense_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# fused SSD kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bh,nc,q,p,n", [
+    (2, 4, 16, 8, 16),
+    (3, 2, 32, 16, 8),
+])
+def test_ssd_chunk_scan_matches_jnp(bh, nc, q, p, n):
+    rng = np.random.default_rng(0)
+    # build inputs in the (B,S,H,P) layout of ssd_chunked, one head
+    s = nc * q
+    x = jnp.asarray(rng.standard_normal((bh, s, 1, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.05, 0.3, (bh, s, 1)), jnp.float32)
+    a_log = jnp.asarray(rng.uniform(-1.0, 0.0, (1,)), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((bh, s, 1, n)), jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((bh, s, 1, n)), jnp.float32)
+    y_ref, h_ref = ssd_chunked(x, dt, a_log, bm, cm, chunk=q)
+
+    # kernel-layout inputs: dt-discretized
+    a_step = (-jnp.exp(a_log))[None, None, :] * dt          # (BH,S,1)
+    xk = (x * dt[..., None])[:, :, 0].reshape(bh, nc, q, p)
+    ak = a_step[:, :, 0].reshape(bh, nc, q)
+    bk = bm[:, :, 0].reshape(bh, nc, q, n)
+    ck = cm[:, :, 0].reshape(bh, nc, q, n)
+    y, h = ssd_chunk_scan(xk, ak, bk, ck, interpret=True)
+
+    np.testing.assert_allclose(
+        np.asarray(y).reshape(bh, s, p),
+        np.asarray(y_ref)[:, :, 0], rtol=2e-3, atol=2e-3)
+    # state layouts: kernel (BH,N,P) vs ref (B,H,P,N)
+    np.testing.assert_allclose(
+        np.asarray(h).transpose(0, 2, 1),
+        np.asarray(h_ref)[:, 0], rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache
+# ---------------------------------------------------------------------------
+
+
+def test_kv_quant_roundtrip_error_small():
+    rng = np.random.default_rng(0)
+    cache = {"k": jnp.asarray(rng.standard_normal((2, 4, 64, 4, 32)),
+                              jnp.float32),
+             "v": jnp.asarray(rng.standard_normal((2, 4, 64, 4, 32)),
+                              jnp.float32),
+             "pos": jnp.asarray(10)}
+    deq = dequantize_kv(quantize_kv(cache), dtype=jnp.float32)
+    err = np.abs(np.asarray(deq["k"]) - np.asarray(cache["k"])).max()
+    assert err < 3e-2
+    assert int(deq["pos"]) == 10
+
+
+def test_kv_quant_attention_output_close():
+    rng = np.random.default_rng(1)
+    bsz, smax, hkv, hd, hq = 2, 64, 2, 32, 8
+    kc = jnp.asarray(rng.standard_normal((bsz, smax, hkv, hd)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((bsz, smax, hkv, hd)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((bsz, 1, hq, hd)), jnp.float32)
+    pos = jnp.asarray(40)
+    ref = decode_attention(q, kc, vc, pos)
+    dq = dequantize_kv(quantize_kv({"k": kc, "v": vc, "pos": pos}),
+                       dtype=jnp.float32)
+    got = decode_attention(q, dq["k"], dq["v"], pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_kv_quant_halves_bytes():
+    cache = {"k": jnp.zeros((2, 4, 64, 4, 32), jnp.bfloat16),
+             "v": jnp.zeros((2, 4, 64, 4, 32), jnp.bfloat16)}
+    full, quant = quantized_cache_bytes(cache)
+    assert quant < 0.6 * full

@@ -1,0 +1,140 @@
+"""Pallas kernel validation in interpret mode: shape/dtype sweeps vs the
+pure-jnp/numpy oracles in kernels/ref.py."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.formats import HostCSR, bcc_from_host
+from repro.kernels import ops, ref
+from repro.kernels.cluster_spmm import cluster_spmm, cluster_spmm_compact
+from repro.kernels.flash_attention import flash_attention
+
+
+def rand_host(n, m, density, seed):
+    rng = np.random.default_rng(seed)
+    dense = (rng.random((n, m)) < density) * rng.uniform(
+        0.5, 2.0, (n, m)).astype(np.float32)
+    return HostCSR.from_dense(dense.astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# cluster_spmm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,k,density,seed", [
+    (16, 256, 0.05, 0),
+    (64, 256, 0.10, 1),
+    (40, 384, 0.02, 2),     # ragged rows (not multiple of block_r)
+    (8, 128, 0.50, 3),      # dense-ish single block
+])
+@pytest.mark.parametrize("ncols_b", [8, 128, 256])
+def test_cluster_spmm_vs_ref(n, k, density, seed, ncols_b):
+    a = rand_host(n, k, density, seed)
+    bcc = bcc_from_host(a, block_r=8, block_k=128)
+    rng = np.random.default_rng(seed + 100)
+    b = rng.normal(size=(k, ncols_b)).astype(np.float32)
+    got = np.asarray(ops.bcc_spmm(bcc, jnp.asarray(b), interpret=True))
+    want = a.to_dense() @ b
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cluster_spmm_dtypes(dtype):
+    a = rand_host(32, 256, 0.1, 7)
+    bcc = bcc_from_host(a, block_r=8, block_k=128, dtype=dtype)
+    rng = np.random.default_rng(8)
+    b = jnp.asarray(rng.normal(size=(256, 128)), dtype=dtype)
+    got = np.asarray(ops.bcc_spmm(bcc, b, interpret=True), np.float32)
+    want = a.to_dense() @ np.asarray(b, np.float32)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_cluster_spmm_kernel_raw_vs_oracle():
+    """Drive the raw kernel (not the wrapper) against the numpy oracle."""
+    a = rand_host(24, 256, 0.08, 11)
+    bcc = bcc_from_host(a, block_r=8, block_k=128)
+    rng = np.random.default_rng(12)
+    b = rng.normal(size=(256, 128)).astype(np.float32)
+    got = np.asarray(cluster_spmm(
+        bcc.tile_ids, bcc.values, jnp.asarray(b),
+        block_r=8, block_k=128, tiles_per_block=bcc.tiles_per_block,
+        bn=128, interpret=True))
+    want = ref.cluster_spmm_ref(bcc.tile_ids, bcc.values, b, block_r=8,
+                                block_k=128,
+                                tiles_per_block=bcc.tiles_per_block)
+    np.testing.assert_allclose(got[:24], want[:24], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,k,density,seed", [
+    (32, 256, 0.05, 0),
+    (64, 512, 0.02, 1),
+    (16, 128, 0.30, 2),
+])
+def test_cluster_spmm_compact_vs_ref(n, k, density, seed):
+    a = rand_host(n, k, density, seed)
+    bcc = bcc_from_host(a, block_r=8, block_k=128)
+    rng = np.random.default_rng(seed + 5)
+    b = rng.normal(size=(k, 128)).astype(np.float32)
+    got = np.asarray(ops.bcc_spmm_compact(bcc, jnp.asarray(b),
+                                          interpret=True))
+    want = a.to_dense() @ b
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_compact_stream_drops_padding():
+    # ragged occupancy by construction: block 0 spans 4 tiles, the rest 1
+    dense = np.zeros((64, 512), np.float32)
+    dense[0, [0, 130, 260, 400]] = 1.0
+    dense[8:64, 5] = 1.0
+    a = HostCSR.from_dense(dense)
+    bcc = bcc_from_host(a, block_r=8, block_k=128)
+    assert bcc.tiles_per_block == 4
+    block_ids, tile_ids, values = ops.bcc_compact_stream(bcc)
+    live = int(np.asarray(bcc.ntiles).sum())        # 4 + 7*1 = 11
+    assert values.shape[0] == ((live + 7) // 8) * 8  # 16 << 8*4=32 padded
+    assert values.shape[0] < bcc.values.shape[0]
+    # correctness of the compacted stream
+    rng = np.random.default_rng(0)
+    b = rng.normal(size=(512, 64)).astype(np.float32)
+    got = np.asarray(ops.bcc_spmm_compact(bcc, jnp.asarray(b),
+                                          interpret=True))
+    np.testing.assert_allclose(got, dense @ b, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sq,sk,d,causal", [
+    (128, 128, 64, True),
+    (128, 256, 64, False),
+    (256, 256, 128, True),
+])
+def test_flash_attention_vs_ref(sq, sk, d, causal):
+    rng = np.random.default_rng(0)
+    bh = 2
+    q = jnp.asarray(rng.normal(size=(bh, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(bh, sk, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(bh, sk, d)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.flash_attention_ref(q[:, None], k[:, None], v[:, None],
+                                   causal=causal)[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_mha_gqa_broadcast():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(2, 8, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 2, 128, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 2, 128, 64)), jnp.float32)
+    got = ops.flash_mha(q, k, v, causal=True, interpret=True)
+    kr = jnp.repeat(k, 4, axis=1)
+    vr = jnp.repeat(v, 4, axis=1)
+    want = ref.flash_attention_ref(q, kr, vr, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,94 @@
+"""Tests for the 10 reordering algorithms: every one must be a permutation,
+and structure-recovery sanity checks on matrices with known structure."""
+import numpy as np
+import pytest
+
+from repro.core.formats import HostCSR
+from repro.core.reorder import REORDERINGS, reorder
+from repro.core.suite import gen_banded, gen_block_diag, gen_caveman
+
+
+def _bandwidth(a: HostCSR) -> int:
+    row_ids = np.repeat(np.arange(a.nrows), a.row_nnz())
+    if row_ids.size == 0:
+        return 0
+    return int(np.abs(row_ids - a.indices.astype(np.int64)).max())
+
+
+@pytest.fixture(scope="module")
+def matrices():
+    rng = np.random.default_rng(0)
+    out = {}
+    band = gen_banded(256, 4, seed=1)
+    out["banded"] = band
+    perm = rng.permutation(256)
+    out["banded_scr"] = band.permute_symmetric(perm)
+    out["blockdiag"] = gen_block_diag(256, 8, seed=2)
+    out["caveman"] = gen_caveman(256, cave=16, seed=3)
+    dense = (rng.random((128, 128)) < 0.08).astype(np.float32)
+    out["er"] = HostCSR.from_dense(dense + dense.T + np.eye(128, dtype=np.float32))
+    return out
+
+
+@pytest.mark.parametrize("algo", sorted(REORDERINGS))
+@pytest.mark.parametrize("mat", ["banded_scr", "caveman", "er"])
+def test_is_permutation(algo, mat, matrices):
+    a = matrices[mat]
+    perm = REORDERINGS[algo](a, seed=0)
+    assert perm.shape == (a.nrows,)
+    assert np.array_equal(np.sort(perm), np.arange(a.nrows))
+
+
+@pytest.mark.parametrize("algo", sorted(REORDERINGS))
+def test_reorder_preserves_spectrum_of_pattern(algo, matrices):
+    """PAPᵀ must keep nnz and row-nnz multiset."""
+    a = matrices["er"]
+    b, perm = reorder(a, algo, seed=0)
+    assert b.nnz == a.nnz
+    assert np.array_equal(np.sort(b.row_nnz()), np.sort(a.row_nnz()))
+
+
+def test_rcm_reduces_bandwidth(matrices):
+    a = matrices["banded_scr"]
+    b, _ = reorder(a, "rcm", seed=0)
+    assert _bandwidth(b) < _bandwidth(a) / 2
+
+
+def test_random_is_seeded(matrices):
+    a = matrices["er"]
+    p1 = REORDERINGS["random"](a, seed=5)
+    p2 = REORDERINGS["random"](a, seed=5)
+    p3 = REORDERINGS["random"](a, seed=6)
+    assert np.array_equal(p1, p2)
+    assert not np.array_equal(p1, p3)
+
+
+def test_degree_sorts_descending(matrices):
+    a = matrices["caveman"]
+    perm = REORDERINGS["degree"](a, seed=0)
+    nnz = a.row_nnz()[perm]
+    assert np.all(np.diff(nnz) <= 0)
+
+
+def test_gp_improves_locality_on_caveman(matrices):
+    """Partitioning should place most edges near the diagonal on caveman."""
+    a = matrices["caveman"]
+    rng = np.random.default_rng(1)
+    scr = a.permute_symmetric(rng.permutation(a.nrows))
+    b, _ = reorder(scr, "gp", seed=0)
+
+    def mean_dist(m):
+        row_ids = np.repeat(np.arange(m.nrows), m.row_nnz())
+        return np.abs(row_ids - m.indices.astype(np.int64)).mean()
+
+    assert mean_dist(b) < mean_dist(scr)
+
+
+def test_rectangular_rows_handled():
+    rng = np.random.default_rng(2)
+    dense = (rng.random((40, 24)) < 0.2).astype(np.float32)
+    a = HostCSR.from_dense(dense)
+    for algo in sorted(REORDERINGS):
+        b, perm = reorder(a, algo, symmetric=False, seed=0)
+        assert np.array_equal(np.sort(perm), np.arange(40))
+        np.testing.assert_allclose(b.to_dense(), dense[perm], rtol=1e-6)

@@ -1,0 +1,113 @@
+"""Unit tests for the roofline tooling: jaxpr cost walker + HLO call-graph
+collective accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_graph import collective_stats
+from repro.launch.jaxpr_cost import jaxpr_cost, trace_cost
+
+
+def test_dot_flops_exact():
+    def f(a, b):
+        return a @ b
+    c = trace_cost(f, jax.ShapeDtypeStruct((8, 16), jnp.float32),
+                   jax.ShapeDtypeStruct((16, 32), jnp.float32))
+    assert c["flops"] == 2 * 8 * 16 * 32
+
+
+def test_batched_dot_flops():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+    c = trace_cost(f, jax.ShapeDtypeStruct((4, 8, 16), jnp.float32),
+                   jax.ShapeDtypeStruct((4, 16, 32), jnp.float32))
+    assert c["flops"] == 4 * 2 * 8 * 16 * 32
+
+
+def test_scan_multiplies_by_length():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=13)
+        return y
+    c = trace_cost(f, jax.ShapeDtypeStruct((8, 8), jnp.float32),
+                   jax.ShapeDtypeStruct((8, 8), jnp.float32))
+    assert c["flops"] == 13 * 2 * 8 * 8 * 8
+
+
+def test_grad_includes_backward_flops():
+    def f(w, x):
+        return jnp.sum(jnp.tanh(x @ w))
+    fwd = trace_cost(f, jax.ShapeDtypeStruct((8, 8), jnp.float32),
+                     jax.ShapeDtypeStruct((4, 8), jnp.float32))
+    bwd = trace_cost(jax.grad(f),
+                     jax.ShapeDtypeStruct((8, 8), jnp.float32),
+                     jax.ShapeDtypeStruct((4, 8), jnp.float32))
+    assert bwd["flops"] >= 2 * fwd["flops"]     # dgrad+wgrad ≈ 2× fwd
+
+
+def test_remat_recompute_counted():
+    def f(w, x):
+        def layer(h):
+            return jnp.tanh(h @ w)
+        return jnp.sum(jax.checkpoint(layer)(x))
+    plain = trace_cost(jax.grad(f, argnums=0),
+                       jax.ShapeDtypeStruct((8, 8), jnp.float32),
+                       jax.ShapeDtypeStruct((4, 8), jnp.float32))
+    assert plain["flops"] > 0
+    assert plain["bytes"] > 0
+
+
+def test_gather_counts_result_not_operand():
+    def f(table, idx):
+        return table[idx]
+    c = trace_cost(f, jax.ShapeDtypeStruct((100000, 8), jnp.float32),
+                   jax.ShapeDtypeStruct((4,), jnp.int32))
+    # gathers count 2×result (+indices), never the full 3.2MB table
+    assert c["bytes"] < 100000 * 8 * 4 / 10
+
+
+def test_collective_stats_parses_and_multiplies_loops():
+    hlo = """
+HloModule m
+
+%cond (p: (s32[], f32[4])) -> pred[] {
+  %p = (s32[], f32[4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p = (s32[], f32[4]) parameter(0)
+  %x = f32[4] get-tuple-element(%p), index=1
+  %ar = f32[4]{0} all-reduce(%x), replica_groups={}, to_apply=%sum
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[4]) tuple(%i, %ar)
+}
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %a = f32[4] parameter(0)
+  %ag = f32[8]{0} all-gather(%a), dimensions={0}
+  %init = (s32[], f32[4]) tuple-thing
+  %w = (s32[], f32[4]) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[4] get-tuple-element(%w), index=1
+}
+"""
+    stats = collective_stats(hlo)
+    assert stats["all-gather"]["count"] == 1
+    assert stats["all-gather"]["bytes"] == 8 * 4
+    assert stats["all-reduce"]["count"] == 5          # loop-multiplied
+    assert stats["all-reduce"]["bytes"] == 5 * 4 * 4
+    assert stats["all-reduce"]["wire_bytes"] == 2 * 5 * 4 * 4
+
+
+def test_model_flops_sanity():
+    from repro.configs.base import get_config
+    from repro.configs.shapes import SHAPES
+    from repro.launch.roofline import model_flops_for_cell
+    cfg = get_config("llama3-405b")
+    mf = model_flops_for_cell(cfg, SHAPES["train_4k"])
+    n = cfg.param_count()
+    assert 3.8e11 < n < 4.3e11                        # ≈405B params
+    assert mf == 6.0 * n * 4096 * 256
