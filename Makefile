@@ -1,0 +1,24 @@
+# Developer entry points. PYTHONPATH is injected so no editable install is
+# needed inside the container.
+PY        ?= python
+PYPATH    := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-quick bench-preprocess lint
+
+## tier-1 verification (the command CI runs)
+test:
+	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q
+
+## CI-speed smoke benchmark: row-wise reorder sweep + traffic model
+bench-quick:
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --tier quick --only fig2,traffic
+
+## segmented-CSR preprocessing engine vs the retained loop references
+bench-preprocess:
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --tier quick --only preprocess
+
+## byte-compile everything (catches syntax/indent errors; no linter deps
+## are baked into the container)
+lint:
+	$(PY) -m compileall -q src tests benchmarks examples
+	@echo "lint: compileall clean"

@@ -1,0 +1,90 @@
+"""Per-stage host-preprocessing benchmark: the segmented-CSR engine vs the
+retained loop references (the seed implementation), stage by stage.
+
+This is the measurement behind the PR's tentpole claim: preprocessing must
+itself be bandwidth-shaped (sort/segment/scan primitives) to amortize
+against SpGEMM. Reports, per quick/default-tier matrix, the wall time of
+each vectorized stage and its speedup over the loop reference, plus a
+per-stage geomean summary.
+
+Stages (new → reference):
+  * jaccard_topk   — ``similarity.jaccard_pairs_topk`` (Alg. 3 candidates)
+  * variable_cl    — ``clustering.variable_length_clusters`` (Alg. 2)
+  * csr_cluster    — ``formats.csr_cluster_from_host`` packing
+  * bcc_pack       — ``formats.bcc_from_host`` tile packing
+  * nbytes_exact   — ``formats.csr_cluster_nbytes_exact`` (Fig. 11 bytes)
+  * compact_stream — ``kernels.ops.bcc_compact_stream`` squeeze
+"""
+from __future__ import annotations
+
+from repro.benchlib import time_host_fn
+from repro.core.clustering import (variable_length_clusters,
+                                   variable_length_clusters_reference)
+from repro.core.formats import (bcc_from_host, bcc_from_host_reference,
+                                csr_cluster_from_host,
+                                csr_cluster_from_host_reference,
+                                csr_cluster_nbytes_exact,
+                                csr_cluster_nbytes_exact_reference)
+from repro.core.similarity import (jaccard_pairs_topk,
+                                   jaccard_pairs_topk_reference)
+from repro.core.suite import generate
+from repro.kernels.ops import (bcc_compact_stream,
+                               bcc_compact_stream_reference)
+
+from benchmarks.common import geomean, print_csv, tier_specs
+
+TOPK, JACC_TH = 7, 0.3
+
+
+def _stages(a):
+    """[(stage, new_fn, ref_fn, args...)] closures over one matrix."""
+    vl = variable_length_clusters(a)
+    bounds = vl.boundaries.tolist()
+    bcc = bcc_from_host(a)
+    return [
+        ("jaccard_topk",
+         lambda: jaccard_pairs_topk(a, TOPK, JACC_TH),
+         lambda: jaccard_pairs_topk_reference(a, TOPK, JACC_TH)),
+        ("variable_cl",
+         lambda: variable_length_clusters(a),
+         lambda: variable_length_clusters_reference(a)),
+        ("csr_cluster",
+         lambda: csr_cluster_from_host(a, bounds, vl.max_cluster),
+         lambda: csr_cluster_from_host_reference(a, bounds, vl.max_cluster)),
+        ("bcc_pack",
+         lambda: bcc_from_host(a),
+         lambda: bcc_from_host_reference(a)),
+        ("nbytes_exact",
+         lambda: csr_cluster_nbytes_exact(a, bounds),
+         lambda: csr_cluster_nbytes_exact_reference(a, bounds)),
+        ("compact_stream",
+         lambda: bcc_compact_stream(bcc),
+         lambda: bcc_compact_stream_reference(bcc)),
+    ]
+
+
+def run(tier: str = "default") -> dict:
+    specs = tier_specs(tier)
+    rows = []
+    speedups: dict[str, list[float]] = {}
+    for spec in specs:
+        a = generate(spec)
+        row = {"matrix": spec.name, "nnz": a.nnz}
+        for stage, new_fn, ref_fn in _stages(a):
+            t_new = time_host_fn(new_fn, reps=3)
+            t_ref = time_host_fn(ref_fn, reps=1)   # warmed, like t_new
+            sp = t_ref / max(t_new, 1e-9)
+            row[f"{stage}_ms"] = t_new * 1e3
+            row[f"{stage}_x"] = sp
+            speedups.setdefault(stage, []).append(sp)
+        rows.append(row)
+    print_csv(rows, "preprocess_stage_time_and_speedup")
+    print_csv([{"stage": s, "gm_speedup": geomean(v),
+                "min": min(v), "max": max(v)}
+               for s, v in speedups.items()],
+              "preprocess_speedup_summary")
+    return {"speedups": speedups}
+
+
+if __name__ == "__main__":
+    run()

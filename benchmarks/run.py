@@ -16,8 +16,9 @@ import time
 from repro import benchlib
 
 from benchmarks import (bench_clusterwise, bench_kernels, bench_memory,
-                        bench_overhead, bench_reorder_rowwise,
-                        bench_tallskinny, bench_traffic, roofline_report)
+                        bench_overhead, bench_preprocess,
+                        bench_reorder_rowwise, bench_tallskinny,
+                        bench_traffic, roofline_report)
 
 TABLES = {
     "fig2": ("Fig.2/Table2 row-wise reorder", bench_reorder_rowwise.run),
@@ -27,6 +28,8 @@ TABLES = {
     "fig11": ("Fig.11 memory", bench_memory.run),
     "traffic": ("B-fetch traffic model (mechanism)", bench_traffic.run),
     "kernels": ("BCC kernel occupancy/VMEM", bench_kernels.run),
+    "preprocess": ("Segmented-CSR preprocessing engine vs loop references",
+                   bench_preprocess.run),
     "roofline": ("TPU roofline (from dry-run)", roofline_report.run),
 }
 

@@ -36,14 +36,15 @@ from repro.core.formats import (HostCSR, csr_cluster_from_host,
                                 csr_cluster_nbytes_exact, csr_from_host,
                                 csr_nbytes)
 from repro.core.reorder import reorder
-from repro.core.spgemm import (flops_spgemm, spgemm_clusterwise_dense,
-                               spgemm_rowwise_dense, spmm_clusterwise,
+from repro.core.spgemm import (flops_spgemm, length_bins,
+                               spgemm_clusterwise_dense_binned,
+                               spgemm_rowwise_dense_binned, spmm_clusterwise,
                                spmm_rowwise)
 from repro.core.suite import SUITE, MatrixSpec
 
 __all__ = ["BenchResult", "bench_rowwise_on", "bench_clusterwise_on",
            "bench_tallskinny_on", "representative_subset", "save_cache",
-           "load_cache", "CACHE_PATH", "time_fn", "pad_host"]
+           "load_cache", "CACHE_PATH", "time_fn", "time_host_fn", "pad_host"]
 
 CACHE_PATH = os.path.join(os.path.dirname(__file__), "..", "..",
                           "experiments", "bench_cache.json")
@@ -80,6 +81,20 @@ def time_fn(fn: Callable, *args, reps: int = 3, warmup: int = 1) -> float:
     return best
 
 
+def time_host_fn(fn: Callable, *args, reps: int = 3, warmup: int = 1,
+                 **kwargs) -> float:
+    """Best-of-``reps`` wall time of a *host-side* (numpy) function — the
+    preprocessing analogue of :func:`time_fn` (no device sync needed)."""
+    for _ in range(warmup):
+        fn(*args, **kwargs)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args, **kwargs)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
 def pad_host(a: HostCSR, nrows: int) -> HostCSR:
     """Zero-pad to (nrows, nrows) — padding rows/cols are empty."""
     if nrows == a.nrows:
@@ -89,8 +104,13 @@ def pad_host(a: HostCSR, nrows: int) -> HostCSR:
     return HostCSR(indptr, a.indices, a.data, (nrows, nrows))
 
 
+# bump when the measured kernels change so stale caches can't serve
+# timings of a different kernel generation (v2 = length-binned passes)
+_KERNEL_GEN = "v2"
+
+
 def _key(spec_name: str, algo: str, scheme: str, workload: str) -> str:
-    return f"{spec_name}|{algo}|{scheme}|{workload}"
+    return f"{spec_name}|{algo}|{scheme}|{workload}|{_KERNEL_GEN}"
 
 
 def load_cache() -> None:
@@ -131,9 +151,12 @@ def bench_rowwise_on(a: HostCSR, algo: str, *, name: str = "",
         b, t_pre = _prep_reorder(a, algo)
         n = _bucket(b.nrows)
         bp = pad_host(b, n)
-        max_row = _bucket(int(bp.row_nnz().max() or 1))
         dev = csr_from_host(bp, nnz_cap=_bucket(bp.nnz))
-        t = time_fn(lambda: spgemm_rowwise_dense(dev, dev, max_row_b=max_row),
+        # skew-aware slot binning: each nonzero pays the gather/scatter
+        # width of the B row it actually fetches, not the global max
+        bins = length_bins(bp.row_nnz()[bp.indices],
+                           pad_sentinel=dev.nnz_cap)
+        t = time_fn(lambda: spgemm_rowwise_dense_binned(dev, dev, bins),
                     reps=reps)
         return BenchResult(kernel_s=t, preprocess_s=t_pre, nnz=b.nnz,
                            flops=flops_spgemm(b, b), mem_bytes=csr_nbytes(b))
@@ -172,9 +195,13 @@ def bench_clusterwise_on(a: HostCSR, algo: str, scheme: str, *,
                                    max_cluster=cl.max_cluster,
                                    slot_cap=_bucket(arp.nnz + len(extra)))
         dev_b = csr_from_host(arp, nnz_cap=_bucket(arp.nnz))
-        max_row = _bucket(int(arp.row_nnz().max() or 1))
-        t = time_fn(lambda: spgemm_clusterwise_dense(cc, dev_b,
-                                                     max_row_b=max_row),
+        total = int(np.asarray(cc.cluster_ptr)[-1])
+        slot_cols = np.asarray(cc.cols)[:total].astype(np.int64)
+        row_len = arp.row_nnz()
+        lens = np.where(slot_cols < arp.ncols,
+                        row_len[np.clip(slot_cols, 0, arp.nrows - 1)], 0)
+        bins = length_bins(lens, pad_sentinel=cc.slot_cap)
+        t = time_fn(lambda: spgemm_clusterwise_dense_binned(cc, dev_b, bins),
                     reps=reps)
         mem = csr_cluster_nbytes_exact(ar, bounds,
                                        fixed_length=(scheme == "fixed"))

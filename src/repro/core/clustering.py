@@ -8,22 +8,35 @@ makes its clusters consecutive. This uniform output feeds directly into
 * :func:`fixed_length_clusters` — every R consecutive rows (paper §3.2).
 * :func:`variable_length_clusters` — Alg. 2: greedy scan, join the open
   cluster iff Jaccard(representative, row) ≥ jacc_th, cap at max_cluster_th.
+  The scan is *batched*: a representative can live at most max_cluster_th−1
+  rows behind any member, so all Jaccard scores the scan can ever consult
+  are ``J(i−d, i)`` for d < max_cluster_th — computed in max_cluster_th−1
+  vectorized sorted-merge passes (:func:`pairwise_jaccard_offset`); the
+  boundary sequence is then a successor chase with O(1) work per cluster.
 * :func:`hierarchical_clusters` — Alg. 3: candidate pairs from binarized
-  SpGEMM(A·Aᵀ) top-K, max-heap + union–find merging with lazy rescoring,
-  clusters used directly (reordering is implicit in the cluster layout).
+  SpGEMM(A·Aᵀ) top-K (the vectorized COO-join generator), max-heap +
+  union–find merging with lazy rescoring, and a fully vectorized final
+  layout (pointer-jumping root resolution + one lexsort).
+
+The original per-row scan is retained as
+:func:`variable_length_clusters_reference` for the equivalence property
+tests and the preprocessing benchmark.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+from typing import Callable
 
 import numpy as np
 
 from repro.core.formats import HostCSR
-from repro.core.similarity import jaccard_pairs_topk
+from repro.core.segment import boundary_mask
+from repro.core.similarity import jaccard_pairs_topk, pairwise_jaccard_offset
 
 __all__ = ["Clustering", "fixed_length_clusters", "variable_length_clusters",
-           "hierarchical_clusters", "DEFAULT_JACC_TH", "DEFAULT_MAX_CLUSTER"]
+           "variable_length_clusters_reference", "hierarchical_clusters",
+           "DEFAULT_JACC_TH", "DEFAULT_MAX_CLUSTER"]
 
 DEFAULT_JACC_TH = 0.3      # paper §3.2
 DEFAULT_MAX_CLUSTER = 8    # paper §3.2
@@ -61,7 +74,47 @@ def variable_length_clusters(a: HostCSR,
                              jacc_th: float = DEFAULT_JACC_TH,
                              max_cluster_th: int = DEFAULT_MAX_CLUSTER
                              ) -> Clustering:
-    """Alg. 2 — representative-row greedy scan, no reordering."""
+    """Alg. 2 — representative-row greedy scan, no reordering (batched).
+
+    A cluster opened at row r absorbs rows r+1, r+2, … while
+    ``J(r, i) ≥ jacc_th`` and ``i − r < max_cluster_th``; the next boundary
+    after r is therefore ``r + min(first d with J(r, r+d) < jacc_th,
+    max_cluster_th)``. All J(i−d, i) are precomputed vectorized (one
+    sorted-merge pass per offset d), the successor of *every* possible
+    start row is derived in one argmax, and the scan reduces to chasing
+    successors — O(1) Python work per emitted cluster, zero per-row
+    similarity loops. Boundary-for-boundary identical to
+    :func:`variable_length_clusters_reference`.
+    """
+    n = a.nrows
+    d_max = max_cluster_th
+    if n <= 1 or d_max == 1:
+        return variable_length_clusters_reference(a, jacc_th, max_cluster_th)
+    # fail[d-1, r] — True iff row r+d does NOT join a cluster whose
+    # representative is row r (score below threshold at distance d)
+    fail = np.zeros((d_max - 1, n), dtype=bool)
+    for d in range(1, min(d_max, n)):
+        jd = pairwise_jaccard_offset(a, d)            # jd[r] = J(r, r+d)
+        fail[d - 1, : n - d] = jd < jacc_th
+    # successor[r] = next cluster boundary if a cluster starts at row r
+    any_fail = fail.any(axis=0)
+    first_fail = np.where(any_fail, fail.argmax(axis=0) + 1, d_max)
+    successor = np.arange(n, dtype=np.int64) + first_fail
+    bounds = [0]
+    r = 0
+    while successor[r] < n:                           # one step per cluster
+        r = int(successor[r])
+        bounds.append(r)
+    return Clustering(boundaries=np.asarray(bounds, dtype=np.int64),
+                      perm=np.arange(n, dtype=np.int64),
+                      max_cluster=max_cluster_th)
+
+
+def variable_length_clusters_reference(a: HostCSR,
+                                       jacc_th: float = DEFAULT_JACC_TH,
+                                       max_cluster_th: int =
+                                       DEFAULT_MAX_CLUSTER) -> Clustering:
+    """Loop reference for Alg. 2 (property-test oracle)."""
     bounds = [0]
     rep = 0
     size = 1
@@ -102,11 +155,21 @@ class _UnionFind:
         self.size[rx] += self.size[ry]
         return rx
 
+    def roots(self) -> np.ndarray:
+        """Root of every element at once — vectorized pointer jumping."""
+        parent = self.parent
+        while True:
+            grand = parent[parent]
+            if np.array_equal(grand, parent):
+                return parent
+            parent = grand
+
 
 def hierarchical_clusters(a: HostCSR,
                           jacc_th: float = DEFAULT_JACC_TH,
-                          max_cluster_th: int = DEFAULT_MAX_CLUSTER
-                          ) -> Clustering:
+                          max_cluster_th: int = DEFAULT_MAX_CLUSTER,
+                          *, pairs_fn: Callable[..., list] =
+                          jaccard_pairs_topk) -> Clustering:
     """Alg. 3 — SpGEMM-driven candidate pairs + union–find merging.
 
     Follows the paper: top-K (= max_cluster_th − 1) candidate pairs per row
@@ -116,10 +179,19 @@ def hierarchical_clusters(a: HostCSR,
     ``candidate_pairs``) and re-inserted if still above threshold. Cluster
     size is capped at ``max_cluster_th``. The final clusters are laid out
     contiguously (the implicit reordering the paper exploits), members in
-    original-row order, clusters sequenced by their smallest member row.
+    original-row order, clusters sequenced by their smallest member row —
+    the layout is computed vectorized from the union–find roots.
+
+    ``pairs_fn`` is the candidate-generator seam: the vectorized
+    :func:`~repro.core.similarity.jaccard_pairs_topk` by default, swap in
+    ``jaccard_pairs_topk_reference`` to time/test the loop path.
     """
+    if a.nrows == 0:
+        return Clustering(boundaries=np.zeros(1, dtype=np.int64),
+                          perm=np.zeros(0, dtype=np.int64),
+                          max_cluster=max_cluster_th)
     topk = max(max_cluster_th - 1, 1)
-    cand = jaccard_pairs_topk(a, topk, jacc_th)
+    cand = pairs_fn(a, topk, jacc_th)
     seen: set[tuple[int, int]] = {(i, j) for _, i, j in cand}
     heap = [(-s, i, j) for s, i, j in cand]
     heapq.heapify(heap)
@@ -143,14 +215,13 @@ def hierarchical_clusters(a: HostCSR,
         if score > jacc_th and uf.size[lo] + uf.size[hi] <= max_cluster_th:
             heapq.heappush(heap, (-score, lo, hi))
 
-    # lay clusters out contiguously: members sorted, clusters by min member
-    roots: dict[int, list[int]] = {}
-    for v in range(a.nrows):
-        roots.setdefault(uf.find(v), []).append(v)
-    groups = sorted(roots.values(), key=lambda g: g[0])
-    perm = np.fromiter((v for g in groups for v in g), dtype=np.int64,
-                       count=a.nrows)
-    sizes = np.fromiter((len(g) for g in groups), dtype=np.int64)
-    bounds = np.concatenate([[0], np.cumsum(sizes)[:-1]])
-    return Clustering(boundaries=bounds.astype(np.int64), perm=perm,
+    # vectorized layout: members sorted, clusters by min member
+    root = uf.roots()
+    min_member = np.full(a.nrows, a.nrows, dtype=np.int64)
+    np.minimum.at(min_member, root, np.arange(a.nrows, dtype=np.int64))
+    key = min_member[root]
+    perm = np.lexsort((np.arange(a.nrows, dtype=np.int64), key))
+    bounds = np.flatnonzero(boundary_mask(key[perm]))
+    return Clustering(boundaries=bounds.astype(np.int64),
+                      perm=perm.astype(np.int64),
                       max_cluster=max_cluster_th)

@@ -24,6 +24,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.segment import (boundary_mask, expand_indptr,
+                                ragged_gather_indices, segmented_count)
+
 __all__ = [
     "HostCSR",
     "CSR",
@@ -31,8 +34,11 @@ __all__ = [
     "BCC",
     "csr_from_host",
     "csr_cluster_from_host",
+    "csr_cluster_from_host_reference",
     "bcc_from_host",
+    "bcc_from_host_reference",
     "csr_cluster_nbytes_exact",
+    "csr_cluster_nbytes_exact_reference",
     "csr_nbytes",
 ]
 
@@ -93,9 +99,7 @@ class HostCSR:
 
     def to_dense(self) -> np.ndarray:
         out = np.zeros(self.shape, dtype=np.float32)
-        for i in range(self.shape[0]):
-            s, e = self.indptr[i], self.indptr[i + 1]
-            out[i, self.indices[s:e]] = self.data[s:e]
+        out[expand_indptr(self.indptr), self.indices] = self.data
         return out
 
     # -- basic properties ----------------------------------------------------
@@ -146,14 +150,9 @@ class HostCSR:
         counts = self.row_nnz()[perm]
         indptr = np.zeros(self.nrows + 1, dtype=np.int64)
         np.cumsum(counts, out=indptr[1:])
-        indices = np.empty(self.nnz, dtype=np.int32)
-        data = np.empty(self.nnz, dtype=np.float32)
-        for new_i, old_i in enumerate(perm):
-            s, e = self.indptr[old_i], self.indptr[old_i + 1]
-            d = indptr[new_i]
-            indices[d:d + e - s] = self.indices[s:e]
-            data[d:d + e - s] = self.data[s:e]
-        return HostCSR(indptr, indices, data, self.shape)
+        gather = ragged_gather_indices(self.indptr[perm], counts)
+        return HostCSR(indptr, self.indices[gather], self.data[gather],
+                       self.shape)
 
     def permute_symmetric(self, perm: np.ndarray) -> "HostCSR":
         """Return PAPᵀ — rows and columns permuted together (square only)."""
@@ -163,16 +162,13 @@ class HostCSR:
         inv = np.empty_like(perm)
         inv[perm] = np.arange(perm.shape[0])
         rowperm = self.permute_rows(perm)
-        # remap and re-sort column ids within each row
+        # remap then segmented-sort column ids within each row: one lexsort
+        # keyed (row, newcol) re-sorts every row at once
         newcols = inv[rowperm.indices.astype(np.int64)].astype(np.int32)
-        indices = np.empty_like(newcols)
-        data = np.empty_like(rowperm.data)
-        for i in range(self.nrows):
-            s, e = rowperm.indptr[i], rowperm.indptr[i + 1]
-            o = np.argsort(newcols[s:e], kind="stable")
-            indices[s:e] = newcols[s:e][o]
-            data[s:e] = rowperm.data[s:e][o]
-        return HostCSR(rowperm.indptr, indices, data, self.shape)
+        rows = expand_indptr(rowperm.indptr)
+        order = np.lexsort((newcols, rows))
+        return HostCSR(rowperm.indptr, newcols[order], rowperm.data[order],
+                       self.shape)
 
     def jaccard(self, i: int, j: int) -> float:
         """Jaccard similarity of the column-id sets of rows i and j."""
@@ -363,7 +359,60 @@ def csr_cluster_from_host(h: HostCSR, boundaries: Sequence[int],
     """Build CSR_Cluster from consecutive-row clusters.
 
     ``boundaries`` — cluster start rows, ending sentinel nrows implied.
+
+    Vectorized: one searchsorted maps every nonzero to its cluster, one
+    argsort over the (cluster, column) key discovers the deduplicated
+    column slots, and the whole value slab fills with a single
+    fancy-indexed assignment at (slot, row − row_base). Identical layout
+    to :func:`csr_cluster_from_host_reference`.
     """
+    bounds = np.asarray(list(boundaries) + [h.nrows], dtype=np.int64)
+    ncl = bounds.shape[0] - 1
+    sizes = np.diff(bounds)
+    over = sizes > max_cluster
+    if over.any():
+        raise ValueError(f"cluster {int(np.argmax(over))} larger than "
+                         "max_cluster")
+    row_base = bounds[:-1].astype(np.int32)
+    csize = sizes.astype(np.int32)
+
+    rows = expand_indptr(h.indptr)
+    cols = h.indices.astype(np.int64)
+    cl = np.searchsorted(bounds, rows, side="right") - 1
+    key = cl * max(h.ncols, 1) + cols
+    order = np.argsort(key, kind="stable")
+    skey = key[order]
+    first = boundary_mask(skey)
+    slot_sorted = np.cumsum(first) - 1          # slot id per sorted nnz
+    ukey = skey[first]                          # one key per (cluster, col)
+    per_cluster = segmented_count(ukey // max(h.ncols, 1), ncl)
+    ptr = np.zeros(ncl + 1, dtype=np.int64)
+    np.cumsum(per_cluster, out=ptr[1:])
+    total = int(ptr[-1])
+    cap = _round_up(max(total, 1), 8) if slot_cap is None else slot_cap
+    if cap < total:
+        raise ValueError(f"slot_cap {cap} < required {total}")
+    cols_out = np.full(cap, h.ncols, dtype=np.int32)
+    values = np.zeros((cap, max_cluster), dtype=np.float32)
+    if total:
+        cols_out[:total] = (ukey % max(h.ncols, 1)).astype(np.int32)
+        slot = np.empty(h.nnz, dtype=np.int64)
+        slot[order] = slot_sorted
+        values[slot, rows - bounds[cl]] = h.data
+    return CSRCluster(
+        cluster_ptr=jnp.asarray(ptr.astype(np.int32)),
+        cols=jnp.asarray(cols_out),
+        values=jnp.asarray(values, dtype),
+        row_base=jnp.asarray(row_base),
+        cluster_size=jnp.asarray(csize),
+        nrows=h.nrows, ncols=h.ncols, max_cluster=max_cluster)
+
+
+def csr_cluster_from_host_reference(h: HostCSR, boundaries: Sequence[int],
+                                    max_cluster: int,
+                                    slot_cap: int | None = None,
+                                    dtype=jnp.float32) -> CSRCluster:
+    """Loop reference for :func:`csr_cluster_from_host` (test oracle)."""
     bounds = list(boundaries) + [h.nrows]
     ncl = len(bounds) - 1
     ptr = [0]
@@ -409,10 +458,53 @@ def csr_cluster_from_host(h: HostCSR, boundaries: Sequence[int],
 def bcc_from_host(h: HostCSR, block_r: int = 8, block_k: int = 128,
                   tiles_per_block: int | None = None,
                   dtype=jnp.float32) -> BCC:
-    """Pack a (reordered) HostCSR into BCC tiles."""
+    """Pack a (reordered) HostCSR into BCC tiles.
+
+    Vectorized: per-block tile discovery is one argsort over the
+    ``block_id * nk + col // block_k`` key; slab fill is one fancy-indexed
+    assignment at (tile_slot, row % block_r, col % block_k). Identical
+    layout to :func:`bcc_from_host_reference`.
+    """
     nb = (h.nrows + block_r - 1) // block_r
     nk = (h.ncols + block_k - 1) // block_k
-    dense = None  # built per-block below, never full-matrix
+    rows = expand_indptr(h.indptr)
+    cols = h.indices.astype(np.int64)
+    key = (rows // block_r) * nk + cols // block_k
+    order = np.argsort(key, kind="stable")
+    skey = key[order]
+    first = boundary_mask(skey)
+    slot_sorted = np.cumsum(first) - 1          # live-tile id per sorted nnz
+    ukey = skey[first]
+    ublk = ukey // nk                           # block of each live tile
+    per_block = segmented_count(ublk, nb)       # live tiles per block
+    max_live = max(1, int(per_block.max()) if nb else 1)
+    tpb = max_live if tiles_per_block is None else tiles_per_block
+    if tpb < max_live:
+        raise ValueError(f"tiles_per_block {tpb} < max live {max_live}")
+    # padded flat position of each live tile: block * tpb + rank-in-block
+    offs = np.zeros(nb, dtype=np.int64)
+    np.cumsum(per_block[:-1], out=offs[1:])
+    rank = np.arange(ublk.shape[0], dtype=np.int64) - offs[ublk]
+    flat = ublk * tpb + rank
+    tile_ids = np.zeros(nb * tpb, dtype=np.int32)
+    tile_ids[flat] = (ukey % nk).astype(np.int32)
+    values = np.zeros((nb * tpb, block_r, block_k), dtype=np.float32)
+    nnz_flat = np.empty(h.nnz, dtype=np.int64)
+    nnz_flat[order] = flat[slot_sorted]
+    values[nnz_flat, rows % block_r, cols % block_k] = h.data
+    ntiles = per_block.astype(np.int32)
+    return BCC(tile_ids=jnp.asarray(tile_ids),
+               values=jnp.asarray(values, dtype),
+               ntiles=jnp.asarray(ntiles),
+               nrows=h.nrows, ncols=h.ncols,
+               block_r=block_r, block_k=block_k, tiles_per_block=tpb)
+
+
+def bcc_from_host_reference(h: HostCSR, block_r: int = 8, block_k: int = 128,
+                            tiles_per_block: int | None = None,
+                            dtype=jnp.float32) -> BCC:
+    """Loop reference for :func:`bcc_from_host` (test oracle)."""
+    nb = (h.nrows + block_r - 1) // block_r
     per_block_tiles: list[np.ndarray] = []
     per_block_slabs: list[np.ndarray] = []
     max_live = 1
@@ -468,7 +560,36 @@ def csr_cluster_nbytes_exact(h: HostCSR, boundaries: Sequence[int],
     Per cluster: one col-id per *distinct* column + a value slab of
     (distinct_cols × cluster_size). Variable-length additionally stores the
     cluster-size array and a value-pointer array; fixed-length does not.
+
+    Vectorized: distinct (cluster, column) pairs are counted from one
+    ``np.unique`` over the joint key — no per-cluster merging. Identical
+    byte counts to :func:`csr_cluster_nbytes_exact_reference`.
     """
+    bounds = np.asarray(list(boundaries) + [h.nrows], dtype=np.int64)
+    ncl = bounds.shape[0] - 1
+    sizes = np.diff(bounds)
+    rows = expand_indptr(h.indptr)
+    cl = np.searchsorted(bounds, rows, side="right") - 1
+    key = cl * max(h.ncols, 1) + h.indices.astype(np.int64)
+    ucl = np.unique(key) // max(h.ncols, 1)
+    distinct = segmented_count(ucl, ncl)
+    total_cols = int(distinct.sum())
+    total_vals = int((distinct * sizes).sum())
+    n = (ncl + 1) * ptr_bytes + total_cols * index_bytes \
+        + total_vals * value_bytes
+    if not fixed_length:
+        n += ncl * index_bytes          # cluster sizes
+        n += (ncl + 1) * ptr_bytes      # value pointers
+    return n
+
+
+def csr_cluster_nbytes_exact_reference(h: HostCSR,
+                                       boundaries: Sequence[int],
+                                       *, fixed_length: bool = False,
+                                       index_bytes: int = 4,
+                                       value_bytes: int = 4,
+                                       ptr_bytes: int = 8) -> int:
+    """Loop reference for :func:`csr_cluster_nbytes_exact` (test oracle)."""
     bounds = list(boundaries) + [h.nrows]
     ncl = len(bounds) - 1
     total_cols = 0

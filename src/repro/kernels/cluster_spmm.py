@@ -39,6 +39,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 ships this as TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 __all__ = ["cluster_spmm", "cluster_spmm_compact"]
 
 
@@ -100,7 +104,7 @@ def cluster_spmm(tile_ids: jax.Array, a_values: jax.Array, b: jax.Array,
         _spmm_kernel_padded,
         grid_spec=spec,
         out_shape=jax.ShapeDtypeStruct((nblocks * block_r, n), b.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(tile_ids, a_values, b)
@@ -165,7 +169,7 @@ def cluster_spmm_compact(block_ids: jax.Array, tile_ids: jax.Array,
         _spmm_kernel_compact,
         grid_spec=spec,
         out_shape=jax.ShapeDtypeStruct((nblocks * block_r, n), b.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(block_ids, tile_ids, a_values, b)

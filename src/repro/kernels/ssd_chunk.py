@@ -27,6 +27,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 ships this as TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 __all__ = ["ssd_chunk_scan"]
 
 
@@ -105,7 +109,7 @@ def ssd_chunk_scan(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
             jax.ShapeDtypeStruct((bh, n, p), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, a, b, c)

@@ -6,7 +6,10 @@ from repro.core.formats import (HostCSR, bcc_from_host,
                                 csr_cluster_from_host,
                                 csr_cluster_nbytes_exact, csr_from_host)
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # pragma: no cover - container without hypothesis
+    from _hypo_shim import given, settings, st
 
 
 def rand_host(n, m, density, seed):

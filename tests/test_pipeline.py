@@ -20,8 +20,8 @@ _SCRIPT = textwrap.dedent("""
     import numpy as np
     from repro.distributed.pipeline import pipeline_apply
 
-    mesh = jax.make_mesh((4,), ("pipe",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import _make_mesh   # jax<0.5 lacks AxisType
+    mesh = _make_mesh((4,), ("pipe",))
     rng = np.random.default_rng(0)
     P_, M, B, D, F = 4, 6, 2, 16, 32
     w1 = jnp.asarray(rng.standard_normal((P_, D, F)) * 0.3, jnp.float32)

@@ -1,0 +1,155 @@
+"""Equivalence property tests: the segmented-CSR (vectorized) preprocessing
+engine must produce *identical* outputs — same pairs and scores, same
+boundaries, same permutations, same tile layouts, same byte counts — as the
+retained loop references, across random COO matrices and the quick-tier
+benchmark suite."""
+import numpy as np
+import pytest
+
+from repro.core.clustering import (variable_length_clusters,
+                                   variable_length_clusters_reference)
+from repro.core.formats import (HostCSR, bcc_from_host,
+                                bcc_from_host_reference,
+                                csr_cluster_from_host,
+                                csr_cluster_from_host_reference,
+                                csr_cluster_nbytes_exact,
+                                csr_cluster_nbytes_exact_reference)
+from repro.core.similarity import (jaccard_pairs_topk,
+                                   jaccard_pairs_topk_reference,
+                                   pairwise_jaccard_consecutive,
+                                   pairwise_jaccard_consecutive_reference)
+from repro.kernels.ops import (bcc_compact_stream,
+                               bcc_compact_stream_reference)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # pragma: no cover - container without hypothesis
+    from _hypo_shim import given, settings, st
+
+
+def rand_coo_host(n, m, nnz, seed) -> HostCSR:
+    """Random COO (with duplicate coordinates, exercising from_coo's dedup)."""
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, n, nnz)
+    cols = rng.integers(0, m, nnz)
+    vals = rng.uniform(0.5, 2.0, nnz).astype(np.float32)
+    return HostCSR.from_coo(rows, cols, vals, (n, m))
+
+
+def quick_tier_matrices():
+    from repro.benchlib import representative_subset
+    from repro.core.suite import generate
+    return [(s.name, generate(s)) for s in representative_subset(8)]
+
+
+def assert_same_pairs(a: HostCSR, topk: int, th: float, **kw):
+    """Both candidate-counting backends (scipy SpGEMM and the pure-numpy
+    ragged join) must match the loop reference — the fallback would
+    otherwise ship untested on scipy-equipped containers."""
+    import repro.core.similarity as similarity
+    want = sorted(jaccard_pairs_topk_reference(a, topk, th, **kw))
+    assert sorted(jaccard_pairs_topk(a, topk, th, **kw)) == want
+    saved = similarity._sparse
+    similarity._sparse = None
+    try:
+        assert sorted(jaccard_pairs_topk(a, topk, th, **kw)) == want
+    finally:
+        similarity._sparse = saved
+
+
+def assert_same_bcc(a: HostCSR, block_r: int, block_k: int):
+    got = bcc_from_host(a, block_r=block_r, block_k=block_k)
+    want = bcc_from_host_reference(a, block_r=block_r, block_k=block_k)
+    assert got.tiles_per_block == want.tiles_per_block
+    np.testing.assert_array_equal(np.asarray(got.tile_ids),
+                                  np.asarray(want.tile_ids))
+    np.testing.assert_array_equal(np.asarray(got.ntiles),
+                                  np.asarray(want.ntiles))
+    np.testing.assert_array_equal(np.asarray(got.values),
+                                  np.asarray(want.values))
+    for g, w in zip(bcc_compact_stream(got), bcc_compact_stream_reference(want)):
+        np.testing.assert_array_equal(g, w)
+
+
+def assert_same_csr_cluster(a: HostCSR, bounds, max_cluster: int):
+    got = csr_cluster_from_host(a, bounds, max_cluster=max_cluster)
+    want = csr_cluster_from_host_reference(a, bounds, max_cluster=max_cluster)
+    for f in ("cluster_ptr", "cols", "values", "row_base", "cluster_size"):
+        np.testing.assert_array_equal(np.asarray(getattr(got, f)),
+                                      np.asarray(getattr(want, f)),
+                                      err_msg=f)
+    for fixed in (False, True):
+        assert (csr_cluster_nbytes_exact(a, bounds, fixed_length=fixed)
+                == csr_cluster_nbytes_exact_reference(a, bounds,
+                                                      fixed_length=fixed))
+
+
+# ---------------------------------------------------------------------------
+# random COO matrices (property tests)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 40), st.integers(0, 200),
+       st.integers(0, 10_000), st.integers(1, 8), st.floats(0.0, 0.6))
+def test_property_equivalence_random_coo(n, m, nnz, seed, topk, th):
+    a = rand_coo_host(n, m, nnz, seed)
+    assert_same_pairs(a, topk, th)
+    np.testing.assert_array_equal(pairwise_jaccard_consecutive(a),
+                                  pairwise_jaccard_consecutive_reference(a))
+    assert_same_bcc(a, block_r=4, block_k=8)
+    k = max(1, topk)
+    assert_same_csr_cluster(a, list(range(0, n, k)), k)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 40), st.integers(0, 10_000), st.floats(0.0, 0.9),
+       st.integers(1, 10))
+def test_property_variable_clusters_equivalence(n, seed, th, max_cluster):
+    a = rand_coo_host(n, n, 4 * n, seed)
+    got = variable_length_clusters(a, th, max_cluster)
+    want = variable_length_clusters_reference(a, th, max_cluster)
+    assert got.boundaries.tolist() == want.boundaries.tolist()
+    assert got.max_cluster == want.max_cluster
+    np.testing.assert_array_equal(got.perm, want.perm)
+
+
+def test_col_cap_equivalence():
+    """col_cap-skipped hub columns must be skipped identically."""
+    dense = np.zeros((30, 10), np.float32)
+    dense[:, 0] = 1.0                     # ultra-dense hub column
+    dense[::3, 3] = 1.0
+    dense[::2, 7] = 1.0
+    a = HostCSR.from_dense(dense)
+    assert_same_pairs(a, 5, 0.1, col_cap=8)
+    assert_same_pairs(a, 5, 0.1, col_cap=4096)
+
+
+def test_empty_and_degenerate_matrices():
+    for shape in [(1, 1), (5, 3), (3, 5)]:
+        a = HostCSR.from_coo([], [], [], shape)
+        assert_same_pairs(a, 3, 0.0)
+        assert_same_bcc(a, 2, 4)
+        assert_same_csr_cluster(a, [0], shape[0])
+        got = variable_length_clusters(a, 0.3, 4)
+        want = variable_length_clusters_reference(a, 0.3, 4)
+        assert got.boundaries.tolist() == want.boundaries.tolist()
+
+
+# ---------------------------------------------------------------------------
+# quick-tier benchmark suite (the matrices the paper tables run on)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,a", quick_tier_matrices(),
+                         ids=lambda v: v if isinstance(v, str) else "")
+def test_quick_tier_equivalence(name, a):
+    assert_same_pairs(a, 7, 0.3)
+    np.testing.assert_array_equal(pairwise_jaccard_consecutive(a),
+                                  pairwise_jaccard_consecutive_reference(a))
+    got = variable_length_clusters(a)
+    want = variable_length_clusters_reference(a)
+    assert got.boundaries.tolist() == want.boundaries.tolist()
+    assert_same_bcc(a, block_r=8, block_k=128)
+    bounds = got.boundaries.tolist()
+    assert_same_csr_cluster(a, bounds, got.max_cluster)

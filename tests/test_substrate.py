@@ -17,7 +17,10 @@ from repro.distributed.elastic import (NaNGuard, StragglerMonitor,
 from repro.optim.adamw import (AdamWConfig, adamw_update, clip_by_global_norm,
                                global_norm, init_opt_state, warmup_cosine)
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # pragma: no cover - container without hypothesis
+    from _hypo_shim import given, settings, st
 
 
 # ---------------------------------------------------------------------------
