@@ -3,19 +3,34 @@
 PY        ?= python
 PYPATH    := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-quick bench-preprocess lint
+.PHONY: test test-slow bench-quick bench-preprocess bench-planner \
+        bench-trajectory lint
 
-## tier-1 verification (the command CI runs)
+## tier-1 verification (the command CI runs; pytest.ini excludes -m slow)
 test:
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q
 
+## the slow split: planner sweep tests and other benchmark-sized tests
+test-slow:
+	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q -m slow
+
 ## CI-speed smoke benchmark: row-wise reorder sweep + traffic model
 bench-quick:
-	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --tier quick --only fig2,traffic
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --tier quick --only fig2,traffic --no-artifact
 
 ## segmented-CSR preprocessing engine vs the retained loop references
 bench-preprocess:
-	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --tier quick --only preprocess
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --tier quick --only preprocess --no-artifact
+
+## planner vs best/worst-static acceptance table (quick tier)
+bench-planner:
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --tier quick --only fig2,fig3,planner --no-artifact
+
+## full quick-tier sweep -> BENCH_quick_<sha>.json, then diff against the
+## previous artifact; fails on a >10% geomean regression
+bench-trajectory:
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --tier quick
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.trajectory --tier quick --diff
 
 ## byte-compile everything (catches syntax/indent errors; no linter deps
 ## are baked into the container)

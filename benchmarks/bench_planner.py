@@ -1,0 +1,170 @@
+"""ISSUE-2 acceptance table: planner vs best-static vs worst-static.
+
+For every tier matrix we sweep the full static (reorder × scheme) grid
+through the benchlib cache (the same measurements Fig. 2/3 made), then let
+the planner — feature ranking, break-even gating, measured shortlist —
+pick its configuration with a measurer that *reads the same sweep*. Three
+claims are checked and exported to the BENCH artifact:
+
+* **regret**: geomean SpGEMM time of the planner's choices within 10% of
+  the per-matrix best-static choice;
+* **preprocessing economy**: the planner's total preprocessing spend
+  (everything its shortlist measured) is ≥2× below always-running
+  hierarchical clustering;
+* **cache**: a second ``plan_spgemm`` on the same fingerprint is a plan
+  cache hit with zero preprocessing.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.benchlib import bench_clusterwise_on, bench_rowwise_on
+from repro.core.suite import generate
+from repro.planner.cost_model import Candidate, Measurement
+from repro.planner.service import Planner
+
+from benchmarks.common import geomean, print_csv, tier_reorders, tier_specs
+
+REUSE_HINT = 20          # the serving scenario the table is scored at
+MEASURE_TOP = 5
+
+
+def candidate_space(tier: str) -> list[Candidate]:
+    reorders = ["original"] + tier_reorders(tier)
+    cands = [Candidate(r, s) for r in reorders
+             for s in ("rowwise", "fixed", "variable")]
+    cands.append(Candidate("original", "hierarchical"))
+    # identity first (the planner's baseline anchor)
+    cands.sort(key=lambda c: c.key != "original+rowwise")
+    return cands
+
+
+def _static_result(a, cand: Candidate, name: str):
+    if cand.scheme == "rowwise":
+        return bench_rowwise_on(a, cand.reorder, name=name)
+    return bench_clusterwise_on(a, cand.reorder, cand.scheme, name=name)
+
+
+def _planner_preprocess_spend(static: dict, measured: set[str]) -> float:
+    """Preprocessing the planner actually pays for its probes.
+
+    The planner materializes each reordering once per matrix and shares
+    it across scheme probes (service._materialize's reorder cache); the
+    benchlib sweep re-times the reorder inside every candidate, so the
+    naive sum double-counts it. Charge each reorder group its reorder
+    cost once (the r+rowwise preprocess — for rowwise benches that IS
+    the reorder time) plus each clustered probe's increment.
+    """
+    total = 0.0
+    by_reorder: dict[str, list[str]] = {}
+    for key in measured:
+        by_reorder.setdefault(key.split("+")[0], []).append(key)
+    for r, keys in by_reorder.items():
+        hier = [k for k in keys if k.endswith("+hierarchical")]
+        shared = [k for k in keys if not k.endswith("+hierarchical")]
+        total += sum(static[k].preprocess_s for k in hier)
+        if shared:
+            # one member pays the shared reorder in full, the others pay
+            # only their clustering increment over it. The reorder-only
+            # cost is estimated conservatively (never undercounting) as
+            # the smallest consistent bound: min of the group's members
+            # and the sweep's r+rowwise entry (whose preprocess IS the
+            # reorder time) → Σ pre − (n−1)·est with est ≤ min(pre)
+            pres = [static[k].preprocess_s for k in shared]
+            row_key = f"{r}+rowwise"
+            est = min(pres + ([static[row_key].preprocess_s]
+                              if row_key in static else []))
+            total += sum(pres) - (len(pres) - 1) * est
+    return float(total)
+
+
+def run(tier: str = "default") -> dict:
+    specs = tier_specs(tier)
+    cands = candidate_space(tier)
+    rows = []
+    regrets, planner_kernels, best_kernels, worst_kernels = [], [], [], []
+    planner_pre_total = 0.0
+    hier_pre_total = 0.0
+    cache_hits_ok = True
+    cache_hit_pre = 0.0
+
+    for spec in specs:
+        a = generate(spec)
+        static = {c.key: _static_result(a, c, spec.name) for c in cands}
+        best_key = min(static, key=lambda k: static[k].kernel_s)
+        worst_key = max(static, key=lambda k: static[k].kernel_s)
+
+        # the planner's measurer taps the identical sweep measurements —
+        # same-sweep reuse as the paper's Fig. 10
+        measured_keys: list[str] = []
+
+        def measurer(mat, cand, _name=spec.name, _static=static,
+                     _mk=measured_keys):
+            r = _static[cand.key] if cand.key in _static else \
+                _static_result(mat, cand, _name)
+            _mk.append(cand.key)
+            return Measurement(kernel_s=r.kernel_s,
+                               preprocess_s=r.preprocess_s)
+
+        planner = Planner(measurer=measurer, measure_top=MEASURE_TOP,
+                          candidates=cands)
+        plan = planner.plan(a, REUSE_HINT, measure=True)
+        chosen_key = f"{plan.reorder}+{plan.scheme}"
+        chosen = static[chosen_key]
+        best, worst = static[best_key], static[worst_key]
+        pre_spent = _planner_preprocess_spend(static, set(measured_keys))
+        hier_pre = static["original+hierarchical"].preprocess_s
+
+        # acceptance: same fingerprint again → cache hit, zero preprocessing
+        plan2 = planner.plan(a, REUSE_HINT)
+        cache_hits_ok &= plan2.from_cache and plan2.preprocess_s == 0.0
+        cache_hit_pre += plan2.preprocess_s
+
+        regret = chosen.kernel_s / max(best.kernel_s, 1e-12)
+        regrets.append(regret)
+        planner_kernels.append(chosen.kernel_s)
+        best_kernels.append(best.kernel_s)
+        worst_kernels.append(worst.kernel_s)
+        planner_pre_total += pre_spent
+        hier_pre_total += hier_pre
+        rows.append({
+            "matrix": spec.name,
+            "chosen": chosen_key,
+            "best_static": best_key,
+            "worst_static": worst_key,
+            "regret": regret,
+            "worst_regret": worst.kernel_s / max(best.kernel_s, 1e-12),
+            "planner_pre_ms": pre_spent * 1e3,
+            "hier_pre_ms": hier_pre * 1e3,
+            "kernel_ms": chosen.kernel_s * 1e3,
+            "best_ms": best.kernel_s * 1e3,
+        })
+
+    print_csv(rows, "planner_vs_static_per_matrix")
+    summary = {
+        "reuse_hint": REUSE_HINT,
+        "regret_gm": geomean(regrets),
+        "worst_static_regret_gm": geomean(
+            [r["worst_regret"] for r in rows]),
+        "planner_kernel_gm_s": geomean(planner_kernels),
+        "best_static_kernel_gm_s": geomean(best_kernels),
+        "worst_static_kernel_gm_s": geomean(worst_kernels),
+        "within_10pct_of_best": bool(
+            geomean(planner_kernels) <= 1.10 * geomean(best_kernels)),
+        "planner_pre_total_s": planner_pre_total,
+        "hier_pre_total_s": hier_pre_total,
+        "hier_over_planner_pre": hier_pre_total / max(planner_pre_total,
+                                                      1e-12),
+        "pre_at_least_2x_cheaper_than_hier": bool(
+            hier_pre_total >= 2.0 * planner_pre_total),
+        "second_call_cache_hit": bool(cache_hits_ok),
+        "second_call_preprocess_s": float(cache_hit_pre),
+    }
+    print_csv([{"metric": k, "value": float(v) if not isinstance(v, bool)
+                else float(v)} for k, v in summary.items()],
+              "planner_summary")
+    return {"per_matrix": rows, "summary": summary}
+
+
+if __name__ == "__main__":
+    run("quick")

@@ -13,6 +13,7 @@ def run(tier: str = "default") -> dict:
     specs = tier_specs("quick" if tier == "quick" else "default")[:10]
     reorders = tier_reorders(tier)
     rows = []
+    per_algo: dict[str, dict[str, float]] = {a_: {} for a_ in reorders}
     for spec in specs:
         a = generate(spec)
         base = bench_tallskinny_on(a, "original", "rowwise", name=spec.name)
@@ -20,6 +21,7 @@ def run(tier: str = "default") -> dict:
         for algo in reorders:
             r = bench_tallskinny_on(a, algo, "rowwise", name=spec.name)
             row[algo] = base.kernel_s / r.kernel_s
+            per_algo[algo][spec.name] = row[algo]
         rows.append(row)
     print_csv(rows, "table3_tallskinny_rowwise_reorder_speedup")
 
@@ -41,7 +43,8 @@ def run(tier: str = "default") -> dict:
         row["mean"] = sum(vals) / len(vals)
         rows4.append(row)
     print_csv(rows4, "table4_hierarchical_tallskinny_per_frontier")
-    return {}
+    return {"per_algo": per_algo,
+            "hier_per_frontier": {r["matrix"]: r["mean"] for r in rows4}}
 
 
 if __name__ == "__main__":

@@ -2,23 +2,28 @@
 
     PYTHONPATH=src python -m benchmarks.run [--tier quick|default|full]
                                             [--only fig2,fig3,...]
+                                            [--no-artifact]
 
 Tiers: quick (8 matrices, 5 reorderings — CI-speed), default (24 matrices,
 all 10 reorderings), full (the whole 110-matrix suite; hours on CPU).
 Measurements are cached in experiments/bench_cache.json so Table 2 / Fig. 10
-reuse the Fig. 2/3 sweep, like the paper does.
+reuse the Fig. 2/3 sweep, like the paper does. Full runs (no ``--only``)
+additionally emit a schema'd perf-trajectory artifact
+``experiments/BENCH_<tier>_<sha>.json`` (see benchmarks/trajectory.py) —
+tracked in git, diffed across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 from repro import benchlib
 
 from benchmarks import (bench_clusterwise, bench_kernels, bench_memory,
-                        bench_overhead, bench_preprocess,
+                        bench_overhead, bench_planner, bench_preprocess,
                         bench_reorder_rowwise, bench_tallskinny,
-                        bench_traffic, roofline_report)
+                        bench_traffic, roofline_report, trajectory)
 
 TABLES = {
     "fig2": ("Fig.2/Table2 row-wise reorder", bench_reorder_rowwise.run),
@@ -30,6 +35,7 @@ TABLES = {
     "kernels": ("BCC kernel occupancy/VMEM", bench_kernels.run),
     "preprocess": ("Segmented-CSR preprocessing engine vs loop references",
                    bench_preprocess.run),
+    "planner": ("ISSUE-2 planner vs best/worst-static", bench_planner.run),
     "roofline": ("TPU roofline (from dry-run)", roofline_report.run),
 }
 
@@ -39,24 +45,45 @@ def main() -> None:
     ap.add_argument("--tier", choices=["quick", "default", "full"],
                     default="quick")
     ap.add_argument("--only", help="comma-separated table keys")
+    ap.add_argument("--no-artifact", action="store_true",
+                    help="skip writing the BENCH_<tier>_<sha>.json artifact")
     args = ap.parse_args()
 
     keys = list(TABLES) if not args.only else args.only.split(",")
     benchlib.load_cache()
     t_all = time.time()
+    results: dict[str, dict] = {}
+    failures: list[str] = []
     for k in keys:
         title, fn = TABLES[k]
         print(f"\n===== {k}: {title} (tier={args.tier}) =====")
         t0 = time.time()
         try:
-            fn(args.tier)
+            results[k] = fn(args.tier)
         except Exception as e:    # keep the harness going; report at end
             print(f"# {k} FAILED: {type(e).__name__}: {e}")
-            raise
+            failures.append(k)
         finally:
             benchlib.save_cache()
         print(f"# {k} done in {time.time()-t0:.1f}s")
     print(f"\n# all benchmarks done in {time.time()-t_all:.1f}s")
+    if failures:
+        # completed tables' measurements are cached, but an artifact must
+        # cover every table — the trajectory diff silently skips absent
+        # metrics, so a partial artifact would defeat the regression gate
+        print(f"# FAILED tables: {','.join(failures)} — no trajectory "
+              "artifact written")
+        sys.exit(1)
+    if args.no_artifact:
+        return
+    if args.only:
+        # a partial run must not overwrite the tier's full artifact
+        print("# trajectory artifact skipped (--only run; drop --only to "
+              "emit one)")
+        return
+    path = trajectory.write_artifact(
+        trajectory.build_artifact(args.tier, results))
+    print(f"# trajectory artifact: {path}")
 
 
 if __name__ == "__main__":

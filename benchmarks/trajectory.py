@@ -1,0 +1,269 @@
+"""Perf-trajectory artifacts: schema'd per-run summaries, diffable across PRs.
+
+``benchmarks/run.py`` calls :func:`build_artifact` after a sweep and writes
+``experiments/BENCH_<tier>_<git-sha>.json``. Tracked artifacts accumulate in
+git (one per PR that ran the tier), so speedup/overhead trends are diffed
+instead of recomputed — the ROADMAP's perf-trajectory item.
+
+Schema (``repro-bench-trajectory/v1``)::
+
+    {
+      "schema": "repro-bench-trajectory/v1",
+      "tier": "quick", "git_sha": "...", "kernel_gen": "v3",
+      "created_unix": 1234567890,
+      "tables": {
+        "fig2":    {"geomean_speedup_by_reorder": {...}},
+        "fig3":    {"geomean_speedup_by_scheme": {...}},
+        "fig10":   {"preprocess_ratio_median": ..., "frac_under_20x": ...},
+        "traffic": {"fetch_ratio_gm_by_scheme": {...}},
+        "fig11":   {"memory_ratio_median_by_scheme": {...}},
+        "planner": {"regret_gm": ..., "hier_over_planner_pre": ..., ...},
+        ...
+      }
+    }
+
+``python -m benchmarks.trajectory --tier quick --diff`` compares the two
+newest artifacts of a tier and exits non-zero on a >10% geomean regression
+(``make bench-trajectory`` runs the sweep then this gate).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+SCHEMA = "repro-bench-trajectory/v1"
+EXPERIMENTS_DIR = os.path.join(os.path.dirname(__file__), "..",
+                               "experiments")
+REGRESSION_THRESHOLD = 0.10
+
+# metrics compared by the diff gate: (table, key-path, higher_is_better)
+_GATED = [
+    ("fig2", ("geomean_speedup_by_reorder",), True),
+    ("fig3", ("geomean_speedup_by_scheme",), True),
+    ("traffic", ("fetch_ratio_gm_by_scheme",), True),
+    ("preprocess", ("engine_speedup_gm_by_stage",), True),
+    ("planner", ("hier_over_planner_pre",), True),
+    ("planner", ("regret_gm",), False),
+]
+
+
+def git_sha() -> str:
+    """Short HEAD sha, suffixed ``-dirty`` when the tree has uncommitted
+    changes — an artifact generated mid-PR must not be attributed to the
+    previous PR's commit."""
+    cwd = os.path.dirname(__file__)
+    try:
+        sha = subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=cwd,
+            stderr=subprocess.DEVNULL).decode().strip()
+    except Exception:
+        return "nogit"
+    try:
+        dirty = subprocess.run(
+            ["git", "diff-index", "--quiet", "HEAD", "--"], cwd=cwd,
+            stderr=subprocess.DEVNULL).returncode != 0
+    except Exception:
+        dirty = False
+    return f"{sha}-dirty" if dirty else sha
+
+
+def _geomean(xs) -> float:
+    from benchmarks.common import geomean
+    return geomean([x for x in xs if x])
+
+
+# ---------------------------------------------------------------------------
+# per-table summarizers: raw run() return → schema'd metrics
+# ---------------------------------------------------------------------------
+
+
+def _sum_fig2(res: dict) -> dict:
+    per_algo = res.get("per_algo", {})
+    return {"geomean_speedup_by_reorder": {
+        algo: _geomean(list(sp.values())) for algo, sp in per_algo.items()}}
+
+
+def _sum_fig3(res: dict) -> dict:
+    per_scheme = res.get("per_scheme", {})
+    return {"geomean_speedup_by_scheme": {
+        s: _geomean(list(sp.values())) for s, sp in per_scheme.items()}}
+
+
+def _sum_fig10(res: dict) -> dict:
+    ratios = np.asarray(res.get("preprocess_ratios", []), dtype=np.float64)
+    out = {}
+    if ratios.size:
+        out["preprocess_ratio_median"] = float(np.median(ratios))
+        out["frac_under_20x"] = float((ratios <= 20.0).mean())
+    methods = res.get("methods", {})
+    out["amortize_within_20_by_method"] = {
+        m: float((np.asarray(v) <= 20.0).mean())
+        for m, v in methods.items() if len(v)}
+    return out
+
+
+def _sum_ratio_map(key_in: str, key_out: str):
+    def f(res: dict) -> dict:
+        return {key_out: {k: _geomean(v)
+                          for k, v in res.get(key_in, {}).items()}}
+    return f
+
+
+def _sum_fig11(res: dict) -> dict:
+    return {"memory_ratio_median_by_scheme": {
+        k: float(np.median(np.asarray(v)))
+        for k, v in res.get("ratios", {}).items() if len(v)}}
+
+
+def _sum_planner(res: dict) -> dict:
+    return dict(res.get("summary", {}))
+
+
+def _sum_tallskinny(res: dict) -> dict:
+    per_algo = res.get("per_algo", {})
+    return {"geomean_speedup_by_reorder": {
+        algo: _geomean(list(sp.values())) for algo, sp in per_algo.items()}}
+
+
+_SUMMARIZERS = {
+    "fig2": _sum_fig2,
+    "fig3": _sum_fig3,
+    "fig10": _sum_fig10,
+    "fig11": _sum_fig11,
+    "traffic": _sum_ratio_map("ratios", "fetch_ratio_gm_by_scheme"),
+    "planner": _sum_planner,
+    "table3": _sum_tallskinny,
+    "preprocess": _sum_ratio_map("speedups", "engine_speedup_gm_by_stage"),
+}
+
+
+def build_artifact(tier: str, results: dict[str, dict]) -> dict:
+    from repro import benchlib
+    tables = {}
+    for key, res in results.items():
+        if not isinstance(res, dict):
+            continue
+        fn = _SUMMARIZERS.get(key)
+        try:
+            tables[key] = fn(res) if fn else {"raw_keys": sorted(res)}
+        except Exception as e:          # a summary must never kill the sweep
+            tables[key] = {"summary_error": f"{type(e).__name__}: {e}"}
+    return {
+        "schema": SCHEMA,
+        "tier": tier,
+        "git_sha": git_sha(),
+        "kernel_gen": getattr(benchlib, "_KERNEL_GEN", "unknown"),
+        "created_unix": int(time.time()),
+        "tables": tables,
+    }
+
+
+def artifact_path(tier: str, sha: str) -> str:
+    return os.path.join(EXPERIMENTS_DIR, f"BENCH_{tier}_{sha}.json")
+
+
+def write_artifact(artifact: dict) -> str:
+    os.makedirs(EXPERIMENTS_DIR, exist_ok=True)
+    path = artifact_path(artifact["tier"], artifact["git_sha"])
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def list_artifacts(tier: str) -> list[str]:
+    """Committed-state artifacts of a tier, oldest first. ``-dirty``
+    snapshots (mid-PR runs, gitignored) never serve as baselines."""
+    paths = [p for p in glob.glob(
+        os.path.join(EXPERIMENTS_DIR, f"BENCH_{tier}_*.json"))
+        if not p.endswith("-dirty.json")]
+    return sorted(paths, key=lambda p: json.load(open(p)).get(
+        "created_unix", 0))
+
+
+# ---------------------------------------------------------------------------
+# the diff gate
+# ---------------------------------------------------------------------------
+
+
+def _metric_values(artifact: dict, table: str, path: tuple) -> dict:
+    """Flatten a gated metric into {leaf_name: value} (scalars and maps)."""
+    node = artifact.get("tables", {}).get(table, {})
+    for k in path:
+        node = node.get(k, {}) if isinstance(node, dict) else {}
+    if isinstance(node, dict):
+        return {k: v for k, v in node.items()
+                if isinstance(v, (int, float)) and np.isfinite(v)}
+    if isinstance(node, (int, float)) and np.isfinite(node):
+        return {path[-1]: float(node)}
+    return {}
+
+
+def compare(old: dict, new: dict,
+            threshold: float = REGRESSION_THRESHOLD) -> list[str]:
+    """Regressions of ``new`` vs ``old``: >threshold drop on a gated
+    geomean (or rise, for lower-is-better metrics like planner regret)."""
+    regressions = []
+    for table, path, higher_better in _GATED:
+        ov = _metric_values(old, table, path)
+        nv = _metric_values(new, table, path)
+        for k in sorted(set(ov) & set(nv)):
+            o, n = ov[k], nv[k]
+            if o <= 0:
+                continue
+            change = (n - o) / o
+            bad = change < -threshold if higher_better \
+                else change > threshold
+            if bad:
+                regressions.append(
+                    f"{table}.{'.'.join(path)}.{k}: {o:.4g} -> {n:.4g} "
+                    f"({change:+.1%})")
+    return regressions
+
+
+def diff_latest(tier: str, threshold: float = REGRESSION_THRESHOLD) -> int:
+    paths = list_artifacts(tier)
+    if len(paths) < 2:
+        print(f"# trajectory: {len(paths)} artifact(s) for tier '{tier}' — "
+              "need 2 to diff; passing")
+        return 0
+    old_p, new_p = paths[-2], paths[-1]
+    with open(old_p) as f:
+        old = json.load(f)
+    with open(new_p) as f:
+        new = json.load(f)
+    print(f"# trajectory diff: {os.path.basename(old_p)} -> "
+          f"{os.path.basename(new_p)}")
+    regs = compare(old, new, threshold)
+    if regs:
+        print(f"# {len(regs)} regression(s) beyond {threshold:.0%}:")
+        for r in regs:
+            print(f"#   REGRESSION {r}")
+        return 1
+    print("# no geomean regressions beyond threshold")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tier", default="quick")
+    ap.add_argument("--diff", action="store_true",
+                    help="compare the two newest artifacts of the tier")
+    ap.add_argument("--threshold", type=float,
+                    default=REGRESSION_THRESHOLD)
+    args = ap.parse_args()
+    if args.diff:
+        sys.exit(diff_latest(args.tier, args.threshold))
+    for p in list_artifacts(args.tier):
+        print(p)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,57 +1,58 @@
-"""Quickstart: the paper's full pipeline on one matrix, in ~60 lines.
+"""Quickstart: the planner-driven SpGEMM pipeline on one matrix.
 
     PYTHONPATH=src python examples/quickstart.py
 
 1. Generate a structured sparse matrix (scrambled caveman graph).
-2. Reorder it (RCM) — the paper's §2.3 preprocessing.
-3. Cluster it three ways (fixed / variable / hierarchical) — §3.2–3.3.
-4. Run row-wise vs cluster-wise SpGEMM (A²) and check they agree — §3.1.
+2. ``plan_spgemm`` at reuse_hint=1 — the break-even logic keeps identity
+   row-wise for a single-shot call.
+3. ``plan_spgemm`` at reuse_hint=50 — now preprocessing amortizes and the
+   planner picks a reorder/cluster scheme from the matrix's features.
+4. ``execute`` the plan (A²) and check against the dense oracle; a second
+   plan on the same pattern is a cache hit with zero preprocessing.
 5. Run the TPU-native BCC Pallas kernel (interpret mode) on the
-   square × tall-skinny workload — §4.4.
+   square × tall-skinny workload — paper §4.4.
 """
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (bcc_from_host, csr_cluster_from_host, csr_from_host,
-                        fixed_length_clusters, hierarchical_clusters,
-                        reorder, spgemm_clusterwise_dense, spgemm_reference,
-                        spgemm_rowwise_dense, variable_length_clusters)
+from repro.core import bcc_from_host, hierarchical_clusters, spgemm_reference
 from repro.core.suite import gen_caveman
 from repro.kernels import ops
+from repro.planner import Planner, extract_features, fingerprint
 
 # 1. a community-structured matrix whose row order has been destroyed
 a = gen_caveman(512, cave=16, seed=0)
 a = a.permute_symmetric(np.random.default_rng(0).permutation(a.nrows))
 print(f"matrix: {a.nrows}×{a.ncols}, nnz={a.nnz}")
+feats = extract_features(a)
+print(f"features: latent similarity={feats.similar_frac * feats.similar_mean:.2f}, "
+      f"consecutive Jaccard={feats.consec_jaccard:.3f}, "
+      f"row-length CV={feats.row_cv:.2f}")
 
-# 2. reorder (RCM)
-a_rcm, perm = reorder(a, "rcm")
+# 2–3. the planner decides per reuse count (one planner = one plan cache)
+planner = Planner()
+single = planner.plan(a, reuse_hint=1)
+print(f"reuse_hint=1  -> {single.reorder}+{single.scheme} "
+      "(single-shot: nothing amortizes)")
+serving = planner.plan(a, reuse_hint=50)
+print(f"reuse_hint=50 -> {serving.reorder}+{serving.scheme} "
+      f"(preprocessed in {serving.preprocess_s * 1e3:.1f} ms, predicted "
+      f"break-even at {serving.predicted['break_even']:.1f} calls)")
 
-# 3. three clusterings
-fixed = fixed_length_clusters(a_rcm, 8)
-var = variable_length_clusters(a_rcm)
-hier = hierarchical_clusters(a)             # does its own reordering
-a_hier = a.permute_symmetric(hier.perm)
-print(f"clusters: fixed={fixed.nclusters} variable={var.nclusters} "
-      f"hierarchical={hier.nclusters}")
-
-# 4. row-wise vs cluster-wise A² (must agree with the dense oracle)
-max_row = int(a_rcm.row_nnz().max())
-dev_csr = csr_from_host(a_rcm)
-c_row = np.asarray(spgemm_rowwise_dense(dev_csr, dev_csr, max_row_b=max_row))
-cc = csr_cluster_from_host(a_hier, hier.boundaries.tolist(),
-                           max_cluster=hier.max_cluster)
-c_clu = np.asarray(spgemm_clusterwise_dense(
-    cc, csr_from_host(a_hier), max_row_b=int(a_hier.row_nnz().max())))
-want_row = spgemm_reference(a_rcm, a_rcm)
-want_clu = spgemm_reference(a_hier, a_hier)
-np.testing.assert_allclose(c_row, want_row, rtol=1e-4, atol=1e-4)
-np.testing.assert_allclose(c_clu, want_clu, rtol=1e-4, atol=1e-4)
-print("row-wise and cluster-wise SpGEMM match the dense oracle ✓")
+# 4. execute and verify; replan on the same fingerprint is a cache hit
+c = planner.execute(serving, a)
+np.testing.assert_allclose(c, spgemm_reference(a, a), rtol=1e-3, atol=1e-3)
+print("planned A² matches the dense oracle ✓")
+again = planner.plan(a, reuse_hint=50)
+assert again.from_cache and again.preprocess_s == 0.0
+print(f"same fingerprint ({fingerprint(a)[:16]}…) replanned: cache hit, "
+      "zero preprocessing ✓")
 
 # 5. BCC Pallas kernel (square × tall-skinny), interpret mode on CPU
+hier = hierarchical_clusters(a)
+a_hier = a.permute_symmetric(hier.perm)
 bcc = bcc_from_host(a_hier, block_r=8, block_k=128)
 b_dense = jnp.asarray(
     np.random.default_rng(1).standard_normal((a.ncols, 64)), jnp.float32)

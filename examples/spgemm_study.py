@@ -1,19 +1,22 @@
-"""Mini reproduction of the paper's headline study on a 12-matrix subset:
-10 reorderings × {row-wise, fixed, variable, hierarchical} on A².
+"""Mini reproduction of the paper's headline study, planner edition:
+on a 12-matrix subset, compare the planner's per-matrix choice against the
+static (reorder × scheme) grid it chooses from.
 
     PYTHONPATH=src python examples/spgemm_study.py [--limit 12]
 
-Prints a per-matrix speedup table relative to row-wise/original order —
-the shape of paper Fig. 2 / Fig. 3 / Table 2 (full suite: benchmarks/).
+Prints, per matrix: speedup of each static config relative to
+row-wise/original order (the shape of paper Fig. 2 / Fig. 3 / Table 2),
+then the planner's pick and its regret vs the best static config.
+Full-suite version: ``python -m benchmarks.run --only planner``.
 """
 import argparse
-import time
 
-import numpy as np
-
+from repro import benchlib
 from repro.benchlib import (bench_clusterwise_on, bench_rowwise_on,
                             representative_subset)
 from repro.core.suite import generate
+from repro.planner.cost_model import Candidate, Measurement
+from repro.planner.service import Planner
 
 
 def main() -> None:
@@ -21,22 +24,50 @@ def main() -> None:
     ap.add_argument("--limit", type=int, default=12)
     ap.add_argument("--reorders", nargs="*",
                     default=["original", "rcm", "gp", "degree"])
+    ap.add_argument("--reuse-hint", type=int, default=20)
     args = ap.parse_args()
 
+    schemes = ["rowwise", "fixed", "variable"]
+    cands = [Candidate(r, s) for r in args.reorders for s in schemes]
+    cands += [Candidate("original", "hierarchical")]
+    cands.sort(key=lambda c: c.key != "original+rowwise")
+
+    benchlib.load_cache()            # reuse the sweep, like the paper
     specs = representative_subset(args.limit)
     print(f"{'matrix':<18}" + "".join(f"{r:>10}" for r in args.reorders)
-          + f"{'fixed':>10}{'variable':>10}{'hier':>10}")
+          + f"{'fixed':>10}{'variable':>10}{'hier':>10}"
+          + f"{'planner':>24}{'regret':>8}")
     for spec in specs:
         a = generate(spec)
-        base = bench_rowwise_on(a, "original")
+        base = bench_rowwise_on(a, "original", name=spec.name)
+
+        def static(cand, _a=a, _n=spec.name):
+            if cand.scheme == "rowwise":
+                return bench_rowwise_on(_a, cand.reorder, name=_n)
+            return bench_clusterwise_on(_a, cand.reorder, cand.scheme,
+                                        name=_n)
+
+        def measurer(mat, cand):
+            r = static(cand)
+            return Measurement(kernel_s=r.kernel_s,
+                               preprocess_s=r.preprocess_s)
+
+        planner = Planner(measurer=measurer, candidates=cands)
+        plan = planner.plan(a, args.reuse_hint, measure=True)
+        chosen = static(Candidate(plan.reorder, plan.scheme))
+        best = min((static(c) for c in cands), key=lambda r: r.kernel_s)
+
         row = [spec.name[:17]]
         for algo in args.reorders:
-            t = bench_rowwise_on(a, algo)
+            t = bench_rowwise_on(a, algo, name=spec.name)
             row.append(f"{base.kernel_s / t.kernel_s:9.2f}x")
         for scheme in ("fixed", "variable", "hierarchical"):
-            t = bench_clusterwise_on(a, "original", scheme)
+            t = bench_clusterwise_on(a, "original", scheme, name=spec.name)
             row.append(f"{base.kernel_s / t.kernel_s:9.2f}x")
+        row.append(f"{plan.reorder}+{plan.scheme:<12}".rjust(24))
+        row.append(f"{chosen.kernel_s / best.kernel_s:7.2f}x")
         print(f"{row[0]:<18}" + "".join(row[1:]))
+    benchlib.save_cache()
 
 
 if __name__ == "__main__":

@@ -105,8 +105,10 @@ def pad_host(a: HostCSR, nrows: int) -> HostCSR:
 
 
 # bump when the measured kernels change so stale caches can't serve
-# timings of a different kernel generation (v2 = length-binned passes)
-_KERNEL_GEN = "v2"
+# timings of a different kernel generation (v2 = length-binned passes;
+# v3 = planner lands — PR-1-era measurements must not leak into planner
+# scores or BENCH_* trajectory artifacts)
+_KERNEL_GEN = "v3"
 
 
 def _key(spec_name: str, algo: str, scheme: str, workload: str) -> str:

@@ -18,17 +18,30 @@ propagation cannot invent). Design:
 
 The stage function must be shape-preserving ((B, ...) → (B, ...)), which
 covers transformer blocks — the embedding/head live outside the pipe.
+
+Sparse pipelines additionally route their per-stage operators through the
+SpGEMM planner (:func:`plan_pipeline_stages` / :func:`pipeline_spmm_apply`):
+a pipeline is the canonical amortization case — each stage's sparse matrix
+multiplies *every* microbatch of *every* pass, so ``reuse_hint =
+microbatches × passes`` and the planner picks per-stage schemes instead of
+the pipeline hardcoding one.
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-__all__ = ["pipeline_apply", "bubble_fraction"]
+from repro.core.formats import HostCSR
+from repro.planner.plan_cache import Plan
+from repro.planner.service import Planner, default_planner
+
+__all__ = ["pipeline_apply", "bubble_fraction", "plan_pipeline_stages",
+           "pipeline_spmm_apply"]
 
 
 def bubble_fraction(num_stages: int, num_microbatches: int) -> float:
@@ -94,3 +107,62 @@ def pipeline_apply(stage_fn: Callable, stage_params, x: jax.Array, *,
         mapped = _shard_map(body, mesh=mesh, in_specs=in_specs,
                             out_specs=P(), check_rep=False)
     return mapped(stage_params, x)
+
+
+# ---------------------------------------------------------------------------
+# planner-driven sparse pipeline stages
+# ---------------------------------------------------------------------------
+
+
+def plan_pipeline_stages(stage_mats: Sequence[HostCSR],
+                         num_microbatches: int, *,
+                         passes: int = 1,
+                         planner: Optional[Planner] = None,
+                         measure: bool = False) -> list[Plan]:
+    """Plan every stage's sparse operator for pipelined reuse.
+
+    Each stage matrix is applied to all ``num_microbatches × passes``
+    microbatch activations, so that product is the stage's amortization
+    budget — expensive preprocessing that a single call could never
+    justify becomes worthwhile exactly when the pipeline is deep enough.
+    Stages sharing a sparsity pattern hit the same cached plan. Defaults
+    to the process-wide planner so plans and packed formats persist
+    across calls; pass the same explicit planner to both this and
+    :func:`pipeline_spmm_apply` to isolate them.
+    """
+    planner = planner if planner is not None else default_planner()
+    reuse = max(num_microbatches * passes, 1)
+    return [planner.plan(m, reuse, measure=measure) for m in stage_mats]
+
+
+def pipeline_spmm_apply(plans: Sequence[Plan],
+                        stage_mats: Sequence[HostCSR],
+                        x: np.ndarray, *,
+                        planner: Optional[Planner] = None) -> np.ndarray:
+    """Run microbatches through planned sparse stages (host orchestration).
+
+    Args:
+      plans: per-stage plans from :func:`plan_pipeline_stages`.
+      stage_mats: per-stage square (F, F) ``HostCSR`` operators.
+      x: (M, B, F) microbatched activations.
+
+    Returns (M, B, F): each microbatch after ``y = A_s @ y`` for every
+    stage ``s`` in order — the same schedule :func:`pipeline_apply` runs
+    spatially, with each stage's scheme chosen by the planner instead of
+    hardcoded. The packed per-stage formats live in the planner's execute
+    cache (the process-wide planner by default), so all microbatches of
+    all passes reuse one packing.
+    """
+    if len(plans) != len(stage_mats):
+        raise ValueError("one plan per stage required")
+    planner = planner if planner is not None else default_planner()
+    m, bsz, feat = x.shape
+    acts = np.asarray(x, dtype=np.float32)
+    for plan, mat in zip(plans, stage_mats):
+        if mat.nrows != mat.ncols or mat.ncols != feat:
+            raise ValueError("stage matrices must be (F, F)")
+        # one (F, M·B) SpMM per stage: microbatches ride the dense width
+        flat = acts.reshape(m * bsz, feat).T            # (F, M·B)
+        out = planner.execute(plan, mat, flat)          # (F, M·B)
+        acts = out.T.reshape(m, bsz, feat)
+    return acts

@@ -1,0 +1,29 @@
+"""Amortization-aware SpGEMM planner.
+
+Turns the repo's menu of reorderings × clusterings into a self-tuning
+service: structural features (:mod:`repro.planner.features`) feed a
+heuristic-plus-measured cost model (:mod:`repro.planner.cost_model`) whose
+break-even logic decides — per matrix, per reuse count — which
+preprocessing to run; materialized plans live in a fingerprint-keyed
+cache (:mod:`repro.planner.plan_cache`); :mod:`repro.planner.service`
+exposes the public ``plan_spgemm`` / ``execute`` API.
+"""
+from repro.planner.cost_model import (Candidate, CostModel,
+                                      DEFAULT_CANDIDATES, IDENTITY,
+                                      Measurement, ScoredCandidate,
+                                      amortizes, break_even_reuse)
+from repro.planner.features import (MatrixFeatures, extract_features,
+                                    fingerprint)
+from repro.planner.plan_cache import (Plan, PlanCache, PLAN_CACHE_VERSION,
+                                      reuse_bucket)
+from repro.planner.service import (Planner, default_planner, execute,
+                                   plan_spgemm, reset_default_planner)
+
+__all__ = [
+    "Candidate", "CostModel", "DEFAULT_CANDIDATES", "IDENTITY",
+    "Measurement", "ScoredCandidate", "amortizes", "break_even_reuse",
+    "MatrixFeatures", "extract_features", "fingerprint",
+    "Plan", "PlanCache", "PLAN_CACHE_VERSION", "reuse_bucket",
+    "Planner", "default_planner", "execute", "plan_spgemm",
+    "reset_default_planner",
+]

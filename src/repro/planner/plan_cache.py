@@ -1,0 +1,167 @@
+"""Fingerprint-keyed plan cache: pay preprocessing once, serve it forever.
+
+A :class:`Plan` is the full output of preprocessing — the chosen
+(reorder, scheme), the row permutation, the cluster boundaries and the
+timings that justified the choice. The cache keys plans by
+``(pattern fingerprint, reuse bucket, PLAN_CACHE_VERSION)``:
+
+* the *fingerprint* (see :func:`repro.planner.features.fingerprint`) is
+  value-independent, so re-serving the same sparsity pattern with new
+  numeric values is a hit;
+* the *reuse bucket* (log-decade of the caller's ``reuse_hint``) keeps
+  single-shot plans (identity) from shadowing high-reuse plans (clustered)
+  for the same matrix;
+* the *version* is bumped whenever plan semantics change, like
+  ``benchlib``'s kernel-generation cache key — a stale on-disk plan from
+  an older planner can never be served.
+
+Storage: in-memory dict in front of an optional on-disk directory of
+``.npz`` files (permutation + boundaries arrays, JSON metadata sidecar in
+the same archive). Everything is a plain file per key — no index to
+corrupt, safe to delete at any time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import math
+import os
+
+import numpy as np
+
+__all__ = ["Plan", "PlanCache", "PLAN_CACHE_VERSION", "reuse_bucket",
+           "DEFAULT_CACHE_DIR"]
+
+PLAN_CACHE_VERSION = "plan-v1"
+
+DEFAULT_CACHE_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "experiments", "plan_cache")
+
+
+def reuse_bucket(reuse_hint: int) -> int:
+    """Log-decade bucket: 1 → 0, 2–9 → 1, 10–99 → 2, 100–999 → 3, ..."""
+    r = max(int(reuse_hint), 1)
+    return 0 if r == 1 else int(math.log10(r)) + 1
+
+
+@dataclasses.dataclass
+class Plan:
+    """A fully-materialized preprocessing decision for one matrix."""
+
+    fingerprint: str
+    reorder: str                      # name in REORDERINGS
+    scheme: str                       # rowwise | fixed | variable | hierarchical
+    reuse_hint: int
+    max_cluster: int = 8
+    perm: np.ndarray | None = None        # new row -> old row (None: identity)
+    boundaries: np.ndarray | None = None  # cluster starts (None: rowwise)
+    preprocess_s: float = 0.0             # wall time spent materializing
+    predicted: dict = dataclasses.field(default_factory=dict)
+    measured: dict = dataclasses.field(default_factory=dict)
+    from_cache: bool = False
+    version: str = PLAN_CACHE_VERSION
+
+    @property
+    def is_identity(self) -> bool:
+        return self.reorder == "original" and self.scheme == "rowwise"
+
+    @property
+    def key(self) -> str:
+        return PlanCache.key(self.fingerprint, self.reuse_hint)
+
+    # -- (de)serialization ---------------------------------------------------
+
+    def to_npz_bytes(self) -> bytes:
+        meta = {
+            "fingerprint": self.fingerprint, "reorder": self.reorder,
+            "scheme": self.scheme, "reuse_hint": self.reuse_hint,
+            "max_cluster": self.max_cluster,
+            "preprocess_s": self.preprocess_s, "predicted": self.predicted,
+            "measured": self.measured, "version": self.version,
+        }
+        arrays = {"meta": np.frombuffer(
+            json.dumps(meta).encode(), dtype=np.uint8)}
+        if self.perm is not None:
+            arrays["perm"] = np.asarray(self.perm, dtype=np.int64)
+        if self.boundaries is not None:
+            arrays["boundaries"] = np.asarray(self.boundaries, dtype=np.int64)
+        buf = io.BytesIO()
+        np.savez(buf, **arrays)
+        return buf.getvalue()
+
+    @classmethod
+    def from_npz_bytes(cls, raw: bytes) -> "Plan":
+        with np.load(io.BytesIO(raw)) as z:
+            meta = json.loads(bytes(z["meta"].tobytes()).decode())
+            perm = z["perm"] if "perm" in z.files else None
+            bounds = z["boundaries"] if "boundaries" in z.files else None
+            if perm is not None:
+                perm = np.array(perm)
+            if bounds is not None:
+                bounds = np.array(bounds)
+        return cls(fingerprint=meta["fingerprint"], reorder=meta["reorder"],
+                   scheme=meta["scheme"], reuse_hint=meta["reuse_hint"],
+                   max_cluster=meta["max_cluster"], perm=perm,
+                   boundaries=bounds, preprocess_s=meta["preprocess_s"],
+                   predicted=meta["predicted"], measured=meta["measured"],
+                   version=meta["version"])
+
+
+class PlanCache:
+    """In-memory + optional on-disk plan store with hit/miss accounting."""
+
+    def __init__(self, path: str | None = None):
+        self.path = path
+        self._mem: dict[str, Plan] = {}
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def key(fingerprint: str, reuse_hint: int) -> str:
+        return f"{fingerprint}|r{reuse_bucket(reuse_hint)}|{PLAN_CACHE_VERSION}"
+
+    def _file(self, key: str) -> str | None:
+        if self.path is None:
+            return None
+        return os.path.join(self.path, key.replace("|", "_") + ".npz")
+
+    def get(self, fingerprint: str, reuse_hint: int) -> Plan | None:
+        key = self.key(fingerprint, reuse_hint)
+        plan = self._mem.get(key)
+        if plan is None:
+            f = self._file(key)
+            if f is not None and os.path.exists(f):
+                with open(f, "rb") as fh:
+                    plan = Plan.from_npz_bytes(fh.read())
+                if plan.version != PLAN_CACHE_VERSION:   # stale generation
+                    plan = None
+                else:
+                    self._mem[key] = plan
+        if plan is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        hit = dataclasses.replace(plan, from_cache=True, preprocess_s=0.0)
+        return hit
+
+    def put(self, plan: Plan) -> None:
+        key = self.key(plan.fingerprint, plan.reuse_hint)
+        self._mem[key] = dataclasses.replace(plan, from_cache=False)
+        f = self._file(key)
+        if f is not None:
+            os.makedirs(self.path, exist_ok=True)
+            tmp = f + ".tmp"
+            with open(tmp, "wb") as fh:
+                fh.write(plan.to_npz_bytes())
+            os.replace(tmp, f)
+
+    def clear_memory(self) -> None:
+        """Drop the in-memory layer (keeps disk) — used by tests to force
+        an on-disk round-trip."""
+        self._mem.clear()
+
+    @property
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._mem)}

@@ -1,0 +1,464 @@
+"""The planner service: ``plan_spgemm(A, reuse_hint) -> Plan`` and
+``execute(plan, A, B)``.
+
+This is the layer that turns the repo's menu of 10 reorderings × 3
+clusterings into a *decision*: extract features, rank candidates with the
+amortization-aware cost model, optionally measure a shortlist on the real
+matrix, materialize the winner (permutation + cluster boundaries — the
+expensive part), and cache the whole plan under the matrix's pattern
+fingerprint so the cost is paid once per pattern, not once per call.
+
+Typical serving flow::
+
+    plan = plan_spgemm(a, reuse_hint=50)      # cache miss: preprocesses
+    c    = execute(plan, a)                   # A² under the chosen scheme
+    ...
+    plan2 = plan_spgemm(a2, reuse_hint=50)    # same pattern: cache hit,
+                                              # zero preprocessing
+
+``execute`` accepts ``b=None`` (the paper's A² workload), a second
+``HostCSR`` (general SpGEMM) or a dense ``(ncols, width)`` array (the
+tall-skinny SpMM workload) and always returns the product in the
+*original* row/column order — permutations are internal to the plan.
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from typing import Callable, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clustering import (DEFAULT_MAX_CLUSTER,
+                                   fixed_length_clusters,
+                                   hierarchical_clusters,
+                                   variable_length_clusters)
+from repro.core.formats import HostCSR, csr_cluster_from_host, csr_from_host
+from repro.core.reorder import reorder as apply_reorder
+from repro.core.spgemm import (length_bins, spgemm_clusterwise_dense_binned,
+                               spgemm_rowwise_dense_binned, spmm_clusterwise,
+                               spmm_rowwise)
+from repro.planner.cost_model import (Candidate, CostModel,
+                                      DEFAULT_CANDIDATES, IDENTITY,
+                                      Measurement, ScoredCandidate)
+from repro.planner.features import extract_features, fingerprint
+from repro.planner.plan_cache import DEFAULT_CACHE_DIR, Plan, PlanCache
+
+__all__ = ["Planner", "plan_spgemm", "execute", "default_planner",
+           "reset_default_planner"]
+
+
+# ---------------------------------------------------------------------------
+# plan materialization: run the chosen reorder + clustering for real
+# ---------------------------------------------------------------------------
+
+
+def _materialize(a: HostCSR, cand: Candidate,
+                 max_cluster: int = DEFAULT_MAX_CLUSTER,
+                 reorder_cache: Optional[dict] = None
+                 ) -> tuple[Optional[np.ndarray], Optional[np.ndarray],
+                            int, float]:
+    """Returns (perm, boundaries, max_cluster, wall seconds).
+
+    ``reorder_cache`` ({reorder name: (reordered matrix, perm)}) shares a
+    materialized reordering across the scheme probes of one planning pass
+    — a reorder is paid once per matrix, not once per candidate.
+    """
+    t0 = time.perf_counter()
+    perm: Optional[np.ndarray] = None
+    boundaries: Optional[np.ndarray] = None
+    if cand.scheme == "hierarchical":
+        cl = hierarchical_clusters(a, max_cluster_th=max_cluster)
+        perm, boundaries = cl.perm, cl.boundaries
+    else:
+        work = a
+        if cand.reorder != "original":
+            hit = (reorder_cache or {}).get(cand.reorder)
+            if hit is not None:
+                work, perm = hit
+            else:
+                work, perm = apply_reorder(a, cand.reorder)
+                if reorder_cache is not None:
+                    reorder_cache[cand.reorder] = (work, perm)
+        if cand.scheme == "fixed":
+            boundaries = fixed_length_clusters(work, max_cluster).boundaries
+        elif cand.scheme == "variable":
+            boundaries = variable_length_clusters(
+                work, max_cluster_th=max_cluster).boundaries
+    return perm, boundaries, max_cluster, time.perf_counter() - t0
+
+
+def _value_digest(h: HostCSR) -> str:
+    """Cheap digest of a matrix's numeric values (pattern excluded)."""
+    d = hashlib.blake2b(digest_size=8)
+    d.update(np.ascontiguousarray(h.data, dtype=np.float32).tobytes())
+    return d.hexdigest()
+
+
+def _plan_digest(plan: Plan) -> str:
+    """Digest of what determines a plan's packed layout: scheme params,
+    the permutation and the cluster boundaries. Two plans on the same
+    fingerprint may still differ in all of these (replans, per-call
+    candidate overrides), so the exec cache must key on them. Memoized on
+    the plan — perm/boundaries never change after materialization, and
+    the serving hot path calls this per execute."""
+    memo = getattr(plan, "_layout_digest", None)
+    if memo is not None:
+        return memo
+    d = hashlib.blake2b(digest_size=8)
+    d.update(f"{plan.reorder}|{plan.scheme}|{plan.max_cluster}".encode())
+    if plan.perm is not None:
+        d.update(np.ascontiguousarray(plan.perm, dtype=np.int64).tobytes())
+    if plan.boundaries is not None:
+        d.update(np.ascontiguousarray(plan.boundaries,
+                                      dtype=np.int64).tobytes())
+    out = d.hexdigest()
+    plan._layout_digest = out
+    return out
+
+
+def _apply_plan_perm(a: HostCSR, plan: Plan, *, symmetric: bool) -> HostCSR:
+    if plan.perm is None:
+        return a
+    if symmetric and a.nrows == a.ncols:
+        return a.permute_symmetric(plan.perm)
+    return a.permute_rows(plan.perm)
+
+
+# ---------------------------------------------------------------------------
+# the planner
+# ---------------------------------------------------------------------------
+
+
+class Planner:
+    """Feature-driven plan selection with a fingerprint-keyed cache.
+
+    Args:
+      cache: a :class:`PlanCache` (defaults to in-memory only — pass
+        ``PlanCache(path=...)`` for an on-disk tier).
+      cost_model: shared :class:`CostModel`; measurements accumulate here.
+      measurer: ``(a, candidate) -> Measurement`` used by measured mode.
+        Defaults to a direct on-device timing of the candidate. Benchmarks
+        inject a measurer that reads the benchlib sweep cache instead.
+      measure_top: how many shortlisted candidates measured mode probes.
+    """
+
+    def __init__(self, cache: Optional[PlanCache] = None,
+                 cost_model: Optional[CostModel] = None,
+                 measurer: Optional[Callable[[HostCSR, Candidate],
+                                             Measurement]] = None,
+                 measure_top: int = 4,
+                 measure_budget: float = 1.3,
+                 candidates: Sequence[Candidate] = DEFAULT_CANDIDATES):
+        self.cache = cache if cache is not None else PlanCache()
+        self.cost_model = cost_model if cost_model is not None else CostModel()
+        self.measurer = measurer if measurer is not None else self._measure
+        self.measure_top = measure_top
+        self.measure_budget = measure_budget
+        self.candidates = tuple(candidates)
+        # (fingerprint, candidate.key) -> materialization artifacts, so a
+        # measured candidate's preprocessing is never run twice
+        self._artifacts: dict[tuple[str, str], tuple] = {}
+        # fingerprint -> {reorder: (matrix, perm)} shared across one
+        # planning pass's probes (dropped with the artifacts)
+        self._reorders: dict[str, dict] = {}
+        # (plan key, value digest) -> packed device operands for execute()
+        self._exec_cache: dict[str, tuple] = {}
+        self._exec_cache_cap = 64
+
+    # -- planning ------------------------------------------------------------
+
+    def plan(self, a: HostCSR, reuse_hint: int = 1, *,
+             measure: bool = False,
+             candidates: Optional[Sequence[Candidate]] = None,
+             use_cache: bool = True) -> Plan:
+        """Choose and materialize a (reorder, scheme) plan for ``a``.
+
+        The do-nothing identity plan (original order, row-wise) is the
+        implicit fallback whenever no candidate amortizes, even when it
+        is not in ``candidates``.
+        """
+        reuse_hint = max(int(reuse_hint), 1)
+        fp = fingerprint(a)
+        cands = tuple(candidates) if candidates is not None else self.candidates
+        if use_cache:
+            hit = self.cache.get(fp, reuse_hint)
+            if hit is not None:
+                # a per-call candidate restriction must hold on hits too:
+                # a cached plan outside the caller's set is replanned
+                # fresh (without evicting the general cached plan)
+                if candidates is None or any(
+                        c.reorder == hit.reorder and c.scheme == hit.scheme
+                        for c in cands) or hit.is_identity:
+                    return hit
+                use_cache = False
+        feats = extract_features(a)
+        ranked = self.cost_model.rank(feats, reuse_hint, cands, fp)
+        if measure:
+            # the identity baseline normalizes every other measurement —
+            # probe it even when the caller's candidate set omits it
+            if self.cost_model.measurement(fp, IDENTITY) is None:
+                m = self.measurer(a, IDENTITY)
+                self.cost_model.observe(fp, IDENTITY,
+                                        m.kernel_s, m.preprocess_s)
+            for sc in self._shortlist(ranked):
+                if self.cost_model.measurement(fp, sc.candidate) is None:
+                    m = self.measurer(a, sc.candidate)
+                    self.cost_model.observe(fp, sc.candidate,
+                                            m.kernel_s, m.preprocess_s)
+            ranked = self.cost_model.rank(feats, reuse_hint, cands, fp)
+            # evidence only: an unmeasured candidate's optimistic heuristic
+            # must not outrank the measured shortlist (identity is always
+            # measured, so this pool is never empty)
+            pool = [s for s in ranked if s.measured]
+        else:
+            pool = ranked
+        chosen = next((s for s in pool if s.amortizes),
+                      self.cost_model.score(feats, IDENTITY, reuse_hint, fp))
+
+        cand = chosen.candidate
+        art = self._artifacts.pop((fp, cand.key), None)
+        if art is None:
+            art = _materialize(a, cand,
+                               reorder_cache=self._reorders.get(fp))
+        perm, boundaries, max_cluster, t_pre = art
+        plan = Plan(
+            fingerprint=fp, reorder=cand.reorder, scheme=cand.scheme,
+            reuse_hint=reuse_hint, max_cluster=max_cluster,
+            perm=perm, boundaries=boundaries, preprocess_s=t_pre,
+            predicted={
+                "kernel_rel": chosen.kernel_rel,
+                "preprocess_rel": chosen.preprocess_rel,
+                "total_rel": chosen.total_rel,
+                "break_even": (chosen.break_even
+                               if np.isfinite(chosen.break_even) else -1.0),
+                "measured": chosen.measured,
+            },
+            measured={
+                s.candidate.key: {"kernel_rel": s.kernel_rel,
+                                  "preprocess_rel": s.preprocess_rel}
+                for s in ranked if s.measured
+            })
+        self._artifacts = {k: v for k, v in self._artifacts.items()
+                           if k[0] != fp}          # drop losers' artifacts
+        self._reorders.pop(fp, None)
+        if use_cache:
+            self.cache.put(plan)
+        return plan
+
+    def _shortlist(self, ranked: list[ScoredCandidate]
+                   ) -> list[ScoredCandidate]:
+        """Identity (the baseline anchor) + the best amortizing candidates.
+
+        Two gates keep probing cheap: non-amortizing candidates are never
+        measured (the break-even rule), and the cumulative *predicted*
+        preprocessing of the shortlist is capped at ``measure_budget``
+        SpGEMM-equivalents — the planner must not spend more measuring
+        than the plans it produces can save.
+        """
+        out = [s for s in ranked if s.candidate.key == IDENTITY.key]
+        spent = 0.0
+        for s in ranked:
+            if len(out) >= self.measure_top:
+                break
+            if not s.amortizes or s.candidate.key == IDENTITY.key:
+                continue
+            if spent + s.preprocess_rel > self.measure_budget:
+                continue
+            spent += s.preprocess_rel
+            out.append(s)
+        return out
+
+    # -- direct measurement (default measurer) -------------------------------
+
+    def _measure(self, a: HostCSR, cand: Candidate, *,
+                 reps: int = 2) -> Measurement:
+        """Time preprocessing + one-call kernel of ``cand`` on ``a``.
+
+        Probes of one planning pass share materialized reorders (see
+        ``_materialize``): the second scheme probed under the same reorder
+        pays only its clustering increment.
+        """
+        fp = fingerprint(a)
+        rcache = self._reorders.setdefault(fp, {})
+        perm, boundaries, max_cluster, t_pre = _materialize(
+            a, cand, reorder_cache=rcache)
+        self._artifacts[(fp, cand.key)] = (perm, boundaries, max_cluster,
+                                           t_pre)
+        plan = Plan(fingerprint=fp, reorder=cand.reorder, scheme=cand.scheme,
+                    reuse_hint=1, max_cluster=max_cluster, perm=perm,
+                    boundaries=boundaries)
+        # square matrices probe the paper's A² workload; rectangular ones
+        # (planner supports them via execute(plan, a, b)) probe the
+        # tall-skinny SpMM instead
+        probe_b = None
+        if a.nrows != a.ncols:
+            probe_b = np.asarray(
+                np.random.default_rng(0).standard_normal((a.ncols, 32)),
+                dtype=np.float32)
+        runner = self._build_runner(plan, a, probe_b)
+        runner()                                        # compile + warm
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            np.asarray(runner())
+            best = min(best, time.perf_counter() - t0)
+        return Measurement(kernel_s=best, preprocess_s=t_pre)
+
+    # -- execution -----------------------------------------------------------
+
+    def execute(self, plan: Plan, a: HostCSR,
+                b: HostCSR | np.ndarray | None = None) -> np.ndarray:
+        """Run the planned product; returns dense C in original order.
+
+        ``b=None`` → A² (the paper workload). A second ``HostCSR`` → A·B
+        with A row-permuted only. A dense array → tall-skinny SpMM.
+        The packed device operands are cached per (plan, workload), so
+        repeated calls — the whole point of planning — skip packing too.
+        """
+        runner = self._build_runner(plan, a, b)
+        return np.asarray(runner())
+
+    def _build_runner(self, plan: Plan, a: HostCSR,
+                      b: HostCSR | np.ndarray | None):
+        dense_b = isinstance(b, np.ndarray) or (
+            b is not None and not isinstance(b, HostCSR))
+        squared = b is None
+        if squared and a.nrows != a.ncols:
+            raise ValueError("A² workload needs a square matrix")
+        # the plan fingerprint is value-independent by design; the packed
+        # device operands are not — key them by the operand values (and
+        # for a second sparse operand, its pattern too) AND by the plan's
+        # layout (perm/boundaries), which can differ between plans
+        # sharing a fingerprint
+        vk = _value_digest(a) if squared or dense_b \
+            else f"{_value_digest(a)}|{fingerprint(b)}|{_value_digest(b)}"
+        ck = f"{plan.fingerprint}|{_plan_digest(plan)}" \
+             f"|{'sq' if squared else 'ab'}" \
+             f"|{'dense' if dense_b else 'csr'}|{vk}"
+        cached = self._exec_cache.get(ck)
+
+        # the O(nnz) permutes only run on a packing miss — a cache hit
+        # goes straight to the packed kernel (the serving steady state)
+        perm = plan.perm
+
+        if dense_b:
+            bd = jnp.asarray(np.asarray(b, dtype=np.float32))
+            if cached is None:
+                ap = _apply_plan_perm(a, plan, symmetric=False)
+                if plan.scheme == "rowwise":
+                    dev = csr_from_host(ap)
+                    cached = ("spmm_row", dev)
+                else:
+                    cc = csr_cluster_from_host(
+                        ap, self._bounds(plan, ap),
+                        max_cluster=plan.max_cluster)
+                    cached = ("spmm_cluster", cc)
+                self._exec_put(ck, cached)
+            kind, op = cached
+            if kind == "spmm_row":
+                out = lambda: spmm_rowwise(op, bd)         # noqa: E731
+            else:
+                out = lambda: spmm_clusterwise(op, bd)     # noqa: E731
+            return self._unpermuted(out, perm, rows_only=True)
+
+        if cached is None:
+            if squared:
+                ap = _apply_plan_perm(a, plan, symmetric=True)
+                bh = ap
+            else:
+                ap = _apply_plan_perm(a, plan, symmetric=False)
+                bh = b
+            dev_b = csr_from_host(bh)
+            b_lens = bh.row_nnz()
+            if plan.scheme == "rowwise":
+                dev_a = csr_from_host(ap)
+                fetch = np.zeros(dev_a.nnz_cap, dtype=np.int64)
+                fetch[: ap.nnz] = b_lens[ap.indices.astype(np.int64)]
+                bins = length_bins(fetch, pad_sentinel=dev_a.nnz_cap)
+                cached = ("row", dev_a, dev_b, bins)
+            else:
+                cc = csr_cluster_from_host(ap, self._bounds(plan, ap),
+                                           max_cluster=plan.max_cluster)
+                total = int(np.asarray(cc.cluster_ptr)[-1])
+                slot_cols = np.asarray(cc.cols)[:total].astype(np.int64)
+                fetch = np.zeros(cc.slot_cap, dtype=np.int64)
+                fetch[:total] = np.where(
+                    slot_cols < bh.nrows, b_lens[
+                        np.clip(slot_cols, 0, bh.nrows - 1)], 0)
+                bins = length_bins(fetch, pad_sentinel=cc.slot_cap)
+                cached = ("cluster", cc, dev_b, bins)
+            self._exec_put(ck, cached)
+        kind, op_a, op_b, bins = cached
+        if kind == "row":
+            out = lambda: spgemm_rowwise_dense_binned(op_a, op_b, bins)  # noqa: E731
+        else:
+            out = lambda: spgemm_clusterwise_dense_binned(op_a, op_b, bins)  # noqa: E731
+        return self._unpermuted(out, perm, rows_only=not squared)
+
+    def _exec_put(self, key: str, packed: tuple) -> None:
+        while len(self._exec_cache) >= self._exec_cache_cap:
+            self._exec_cache.pop(next(iter(self._exec_cache)))
+        self._exec_cache[key] = packed
+
+    @staticmethod
+    def _bounds(plan: Plan, ap: HostCSR) -> list[int]:
+        if plan.boundaries is None:
+            raise ValueError(f"plan scheme {plan.scheme} has no boundaries")
+        return np.asarray(plan.boundaries, dtype=np.int64).tolist()
+
+    @staticmethod
+    def _unpermuted(run, perm: Optional[np.ndarray], *, rows_only: bool):
+        if perm is None:
+            return lambda: np.asarray(run())
+        p = np.asarray(perm, dtype=np.int64)
+
+        def wrapped():
+            cp = np.asarray(run())
+            out = np.empty_like(cp)
+            if rows_only:
+                out[p] = cp
+            else:
+                out[np.ix_(p, p)] = cp
+            return out
+        return wrapped
+
+    @property
+    def stats(self) -> dict:
+        return {**self.cache.stats, "exec_entries": len(self._exec_cache)}
+
+
+# ---------------------------------------------------------------------------
+# module-level convenience API (the issue's public surface)
+# ---------------------------------------------------------------------------
+
+
+_DEFAULT: Optional[Planner] = None
+
+
+def default_planner() -> Planner:
+    """The process-wide serving planner: plans persist across processes
+    in ``experiments/plan_cache/`` (gitignored, versioned keys). Construct
+    ``Planner()`` directly for an in-memory-only instance."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = Planner(cache=PlanCache(path=DEFAULT_CACHE_DIR))
+    return _DEFAULT
+
+
+def reset_default_planner() -> None:
+    global _DEFAULT
+    _DEFAULT = None
+
+
+def plan_spgemm(a: HostCSR, reuse_hint: int = 1, *,
+                measure: bool = False, **kwargs) -> Plan:
+    """Plan an SpGEMM on ``a`` expected to be reused ``reuse_hint`` times."""
+    return default_planner().plan(a, reuse_hint, measure=measure, **kwargs)
+
+
+def execute(plan: Plan, a: HostCSR,
+            b: HostCSR | np.ndarray | None = None) -> np.ndarray:
+    """Execute a planned product (see :meth:`Planner.execute`)."""
+    return default_planner().execute(plan, a, b)

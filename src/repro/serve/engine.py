@@ -1,23 +1,35 @@
-"""Serving engine: batched prefill + decode with continuous batching slots.
+"""Serving engine: batched prefill + decode with continuous batching slots,
+plus the planner-driven SpGEMM serving front end.
 
 ``make_serve_step`` returns the jittable one-token step used by the dry-run
 (``decode_*`` / ``long_*`` shapes). ``ServingEngine`` is the host-side loop:
 fixed-size slot table, per-slot position tracking, greedy/temperature
 sampling, slot recycling on EOS — the standard continuous-batching skeleton,
 kept dependency-free.
+
+``SpGEMMServer`` is the sparse-workload analogue: requests are (matrix,
+operand, reuse hint) triples and the serving path no longer hardcodes one
+reorder/cluster scheme — every pattern goes through
+``repro.planner.plan_spgemm``, so the first request for a pattern pays
+feature extraction + preprocessing once and every later request (same
+fingerprint, any values) is a plan-cache hit straight into the packed
+kernel.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.formats import HostCSR
 from repro.models.transformer import decode_step, init_cache, prefill
+from repro.planner.service import Planner
 
-__all__ = ["make_serve_step", "ServingEngine"]
+__all__ = ["make_serve_step", "ServingEngine", "SpGEMMServer"]
 
 
 def make_serve_step(cfg, *, sample: bool = False,
@@ -33,6 +45,62 @@ def make_serve_step(cfg, *, sample: bool = False,
         return tok, cache
 
     return serve_step
+
+
+# ---------------------------------------------------------------------------
+# planner-driven SpGEMM serving
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SpGEMMResponse:
+    result: np.ndarray
+    fingerprint: str
+    reorder: str
+    scheme: str
+    plan_cache_hit: bool
+    plan_s: float              # planning + preprocessing wall time (0-ish on hit)
+    execute_s: float
+
+
+class SpGEMMServer:
+    """Serve repeated sparse products through the plan cache.
+
+    One planner (one plan cache + one cost model) is shared across all
+    requests; ``reuse_hint`` defaults to the server-level expectation of
+    how often a pattern recurs in the traffic (per-request override wins).
+    """
+
+    def __init__(self, planner: Optional[Planner] = None, *,
+                 default_reuse_hint: int = 20, measure: bool = False):
+        self.planner = planner if planner is not None else Planner()
+        self.default_reuse_hint = default_reuse_hint
+        self.measure = measure
+        self.requests = 0
+        self.plan_hits = 0
+
+    def submit(self, a: HostCSR,
+               b: HostCSR | np.ndarray | None = None, *,
+               reuse_hint: Optional[int] = None) -> SpGEMMResponse:
+        """Plan (or fetch the cached plan for) ``a``, then execute a·b."""
+        self.requests += 1
+        hint = self.default_reuse_hint if reuse_hint is None else reuse_hint
+        t0 = time.perf_counter()
+        plan = self.planner.plan(a, hint, measure=self.measure)
+        t1 = time.perf_counter()
+        out = self.planner.execute(plan, a, b)
+        t2 = time.perf_counter()
+        if plan.from_cache:
+            self.plan_hits += 1
+        return SpGEMMResponse(
+            result=out, fingerprint=plan.fingerprint, reorder=plan.reorder,
+            scheme=plan.scheme, plan_cache_hit=plan.from_cache,
+            plan_s=t1 - t0, execute_s=t2 - t1)
+
+    @property
+    def stats(self) -> dict:
+        return {"requests": self.requests, "plan_hits": self.plan_hits,
+                **self.planner.stats}
 
 
 @dataclasses.dataclass

@@ -1,0 +1,299 @@
+"""Planner subsystem tests (ISSUE 2).
+
+Covers the four contracted behaviors:
+  * fingerprint stability under value perturbation (pattern-keyed cache);
+  * plan cache hit/miss accounting + on-disk round-trip;
+  * break-even monotonicity in ``reuse_hint``;
+  * planner-never-worse-than-identity (by total measured cost) on four
+    suite families — the sweep-sized variant is marked ``slow`` and stays
+    out of tier-1.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.formats import HostCSR
+from repro.core.spgemm import spgemm_reference
+from repro.core.suite import (gen_block_diag, gen_caveman, gen_er,
+                              gen_mesh2d, gen_powerlaw)
+from repro.planner import (Candidate, CostModel, DEFAULT_CANDIDATES,
+                           IDENTITY, Plan, PlanCache, Planner, amortizes,
+                           break_even_reuse, extract_features, fingerprint,
+                           reuse_bucket)
+
+
+def _scrambled_caveman(n=384, cave=16, seed=0):
+    a = gen_caveman(n, cave=cave, seed=seed)
+    return a.permute_symmetric(np.random.default_rng(seed).permutation(n))
+
+
+# ---------------------------------------------------------------------------
+# fingerprint
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_stable_under_value_perturbation():
+    a = _scrambled_caveman()
+    rng = np.random.default_rng(3)
+    perturbed = HostCSR(a.indptr, a.indices,
+                        a.data * (1 + rng.normal(0, 0.5, a.nnz)
+                                  ).astype(np.float32), a.shape)
+    assert fingerprint(perturbed) == fingerprint(a)
+
+
+def test_fingerprint_sensitive_to_pattern():
+    a = _scrambled_caveman()
+    fp = fingerprint(a)
+    # drop one nonzero: different pattern, different fingerprint
+    b = HostCSR(np.concatenate([a.indptr[:-1], [a.indptr[-1] - 1]]),
+                a.indices[:-1], a.data[:-1], a.shape)
+    assert fingerprint(b) != fp
+    # different shape, same arrays
+    c = HostCSR(a.indptr, a.indices, a.data, (a.nrows, a.ncols + 1))
+    assert fingerprint(c) != fp
+
+
+def test_features_are_finite_and_scale_free():
+    for gen in (lambda: gen_er(256, avg_deg=8, seed=1),
+                lambda: gen_mesh2d(16, seed=2),
+                _scrambled_caveman):
+        f = extract_features(gen())
+        for k, v in f.to_dict().items():
+            assert np.isfinite(v), k
+        assert 0.0 <= f.density <= 1.0
+        assert 0.0 <= f.row_gini <= 1.0
+        assert 0.0 <= f.bandwidth_mean <= 1.0
+
+
+def test_features_empty_matrix():
+    a = HostCSR(np.zeros(9, np.int64), np.zeros(0, np.int32),
+                np.zeros(0, np.float32), (8, 8))
+    f = extract_features(a)
+    assert f.nnz == 0 and np.isfinite(f.consec_jaccard)
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_miss_and_zero_preprocess():
+    a = _scrambled_caveman()
+    planner = Planner()
+    p1 = planner.plan(a, reuse_hint=10)
+    assert not p1.from_cache
+    p2 = planner.plan(a, reuse_hint=10)
+    assert p2.from_cache and p2.preprocess_s == 0.0
+    assert p2.reorder == p1.reorder and p2.scheme == p1.scheme
+    assert planner.cache.hits == 1 and planner.cache.misses == 1
+    # same pattern, new values: still a hit (fingerprint is pattern-keyed)
+    a2 = HostCSR(a.indptr, a.indices, a.data * 2.0, a.shape)
+    assert planner.plan(a2, reuse_hint=10).from_cache
+
+
+def test_cache_reuse_buckets_are_separate():
+    a = _scrambled_caveman()
+    planner = Planner()
+    planner.plan(a, reuse_hint=1)
+    p = planner.plan(a, reuse_hint=100)       # other bucket: not a hit
+    assert not p.from_cache
+    assert reuse_bucket(1) != reuse_bucket(100)
+    assert reuse_bucket(2) == reuse_bucket(9)
+
+
+def test_cache_disk_round_trip(tmp_path):
+    a = _scrambled_caveman()
+    cache = PlanCache(path=str(tmp_path / "plans"))
+    planner = Planner(cache=cache)
+    p1 = planner.plan(a, reuse_hint=50)
+    cache.clear_memory()                       # force the on-disk tier
+    p2 = planner.plan(a, reuse_hint=50)
+    assert p2.from_cache and p2.preprocess_s == 0.0
+    assert p2.reorder == p1.reorder and p2.scheme == p1.scheme
+    if p1.perm is not None:
+        np.testing.assert_array_equal(p2.perm, p1.perm)
+    if p1.boundaries is not None:
+        np.testing.assert_array_equal(p2.boundaries, p1.boundaries)
+    # a fresh cache object reads the same files
+    cache2 = PlanCache(path=str(tmp_path / "plans"))
+    p3 = cache2.get(fingerprint(a), 50)
+    assert p3 is not None and p3.scheme == p1.scheme
+
+
+def test_plan_npz_round_trip_preserves_metadata():
+    plan = Plan(fingerprint="fp1-abc", reorder="rcm", scheme="variable",
+                reuse_hint=7, max_cluster=8,
+                perm=np.arange(5)[::-1].copy(),
+                boundaries=np.array([0, 2, 4]),
+                preprocess_s=0.5, predicted={"kernel_rel": 0.7},
+                measured={"rcm+variable": {"kernel_rel": 0.7,
+                                           "preprocess_rel": 0.1}})
+    back = Plan.from_npz_bytes(plan.to_npz_bytes())
+    assert back.reorder == "rcm" and back.scheme == "variable"
+    assert back.reuse_hint == 7 and back.preprocess_s == 0.5
+    assert back.predicted == plan.predicted
+    assert back.measured == plan.measured
+    np.testing.assert_array_equal(back.perm, plan.perm)
+    np.testing.assert_array_equal(back.boundaries, plan.boundaries)
+
+
+# ---------------------------------------------------------------------------
+# break-even / amortization
+# ---------------------------------------------------------------------------
+
+
+def test_amortization_calculator():
+    # reuse × gain > preprocess
+    assert amortizes(10, 0.2, 1.0)
+    assert not amortizes(4, 0.2, 1.0)
+    assert amortizes(3, 0.5, 0.0)              # free preprocessing
+    assert not amortizes(1000, -0.1, 0.5)      # slower kernel never pays
+    assert break_even_reuse(0.2, 1.0) == pytest.approx(5.0)
+    assert break_even_reuse(0.0, 1.0) == np.inf
+    assert break_even_reuse(0.5, 0.0) == 0.0
+
+
+def test_single_shot_chooses_identity():
+    model = CostModel()
+    for gen in (lambda: gen_er(256, avg_deg=8, seed=1),
+                lambda: gen_mesh2d(16, seed=2),
+                lambda: gen_powerlaw(256, avg_deg=8, seed=3),
+                _scrambled_caveman):
+        f = extract_features(gen())
+        chosen = model.choose(f, reuse=1)
+        assert chosen.candidate.key == IDENTITY.key
+
+
+def test_break_even_monotone_in_reuse_hint():
+    model = CostModel()
+    f = extract_features(_scrambled_caveman())
+    prev_set: set[str] = set()
+    prev_per_call = np.inf
+    for reuse in (1, 2, 5, 10, 20, 50, 100, 500):
+        ranked = model.rank(f, reuse)
+        amortizing = {s.candidate.key for s in ranked if s.amortizes}
+        # the amortizing set only grows with reuse
+        assert prev_set <= amortizing, (reuse, prev_set - amortizing)
+        prev_set = amortizing
+        # the chosen per-call cost only improves with reuse
+        chosen = model.choose(f, reuse)
+        per_call = chosen.total_rel / reuse
+        assert per_call <= prev_per_call + 1e-12
+        prev_per_call = per_call
+
+
+def test_measured_overrides_heuristic():
+    a = _scrambled_caveman()
+    f = extract_features(a)
+    fp = fingerprint(a)
+    model = CostModel()
+    cand = Candidate("original", "fixed")
+    model.observe(fp, IDENTITY, kernel_s=1.0, preprocess_s=0.0)
+    model.observe(fp, cand, kernel_s=0.4, preprocess_s=0.3)
+    s = model.score(f, cand, reuse=2, fingerprint=fp)
+    assert s.measured
+    assert s.kernel_rel == pytest.approx(0.4)
+    assert s.preprocess_rel == pytest.approx(0.3)
+    # measured gain 0.6/call: pays for 0.3 preprocessing within 2 calls
+    assert s.amortizes
+    assert model.choose(f, 2, fingerprint=fp).candidate.key == cand.key
+
+
+# ---------------------------------------------------------------------------
+# service: execution correctness + never-worse-than-identity
+# ---------------------------------------------------------------------------
+
+
+FAMILIES = {
+    "blockdiag": lambda: gen_block_diag(256, block=8, seed=0),
+    "caveman_scr": lambda: _scrambled_caveman(256, cave=16, seed=1),
+    "er": lambda: gen_er(256, avg_deg=8, seed=2),
+    "mesh": lambda: gen_mesh2d(16, seed=3),
+}
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_execute_matches_oracle_across_reuse(family):
+    a = FAMILIES[family]()
+    planner = Planner()
+    want = spgemm_reference(a, a)
+    for reuse in (1, 50):
+        plan = planner.plan(a, reuse_hint=reuse)
+        got = planner.execute(plan, a)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_execute_spmm_and_ab_paths():
+    a = FAMILIES["caveman_scr"]()
+    planner = Planner()
+    plan = planner.plan(a, reuse_hint=50)
+    bd = np.random.default_rng(0).standard_normal(
+        (a.ncols, 16)).astype(np.float32)
+    np.testing.assert_allclose(planner.execute(plan, a, bd),
+                               a.to_dense() @ bd, rtol=1e-3, atol=1e-3)
+    b = gen_er(a.ncols, avg_deg=6, seed=9)
+    np.testing.assert_allclose(planner.execute(plan, a, b),
+                               spgemm_reference(a, b),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_planner_never_worse_than_identity_measured(family):
+    """Measured mode: total cost of the chosen plan ≤ identity's total —
+    identity is always in the shortlist and selection is argmin."""
+    a = FAMILIES[family]()
+    planner = Planner(measure_top=4)
+    reuse = 20
+    plan = planner.plan(a, reuse_hint=reuse, measure=True)
+    meas = plan.measured
+    assert "original+rowwise" in meas          # identity always probed
+    ident = meas["original+rowwise"]
+    chosen_key = f"{plan.reorder}+{plan.scheme}"
+    chosen = meas.get(chosen_key)
+    assert chosen is not None, chosen_key
+    total = chosen["preprocess_rel"] + reuse * chosen["kernel_rel"]
+    total_ident = ident["preprocess_rel"] + reuse * ident["kernel_rel"]
+    assert total <= total_ident + 1e-9
+    # and the plan still computes the right product
+    np.testing.assert_allclose(planner.execute(plan, a),
+                               spgemm_reference(a, a), rtol=1e-3, atol=1e-3)
+
+
+def test_plan_records_predictions_and_identity_fallback():
+    a = FAMILIES["er"]()
+    planner = Planner()
+    plan = planner.plan(a, reuse_hint=1)
+    assert plan.is_identity
+    assert plan.perm is None and plan.boundaries is None
+    assert "total_rel" in plan.predicted
+
+
+def test_serve_engine_spgemm_server_stats():
+    from repro.serve.engine import SpGEMMServer
+    a = FAMILIES["blockdiag"]()
+    srv = SpGEMMServer(default_reuse_hint=10)
+    r1 = srv.submit(a)
+    r2 = srv.submit(HostCSR(a.indptr, a.indices, a.data * 0.5, a.shape))
+    assert not r1.plan_cache_hit and r2.plan_cache_hit
+    assert srv.stats["requests"] == 2 and srv.stats["plan_hits"] == 1
+    np.testing.assert_allclose(r2.result, 0.25 * spgemm_reference(a, a),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_pipeline_planned_stages():
+    from repro.distributed.pipeline import (pipeline_spmm_apply,
+                                            plan_pipeline_stages)
+    mats = [gen_block_diag(48, block=8, seed=s) for s in range(2)]
+    planner = Planner()
+    plans = plan_pipeline_stages(mats, num_microbatches=3, passes=2,
+                                 planner=planner)
+    assert all(p.reuse_hint == 6 for p in plans)
+    x = np.random.default_rng(1).standard_normal((3, 2, 48)).astype(
+        np.float32)
+    y = pipeline_spmm_apply(plans, mats, x, planner=planner)
+    want = x
+    for m in mats:
+        want = np.einsum("fk,mbk->mbf", m.to_dense(), want)
+    np.testing.assert_allclose(y, want, rtol=1e-3, atol=1e-3)
