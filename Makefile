@@ -14,9 +14,10 @@ test:
 test-slow:
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q -m slow
 
-## CI-speed smoke benchmark: row-wise reorder sweep + traffic model
+## CI-speed smoke benchmark: row-wise reorder sweep + traffic model +
+## the Pallas-vs-XLA Sp×Sp comparison
 bench-quick:
-	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --tier quick --only fig2,traffic --no-artifact
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --tier quick --only fig2,traffic,kernels --no-artifact
 
 ## segmented-CSR preprocessing engine vs the retained loop references
 bench-preprocess:

@@ -1,14 +1,28 @@
 """Paper Fig. 3 + Fig. 8 + Table 2 cluster columns: cluster-wise SpGEMM
 (fixed / variable / hierarchical), with and without reordering, relative to
-row-wise on the original order."""
+row-wise on the original order — plus the Pallas tiled path's modeled
+B-traffic ratio per matrix (the kernel-tier analogue of the same
+cluster-reuse comparison; wall-clock for it lives in ``bench_kernels``)."""
 from __future__ import annotations
 
 from repro.benchlib import bench_clusterwise_on, bench_rowwise_on
+from repro.core.formats import tiled_live_tiles
+from repro.core.reorder import reorder
+from repro.core.spgemm import b_bytes_tiled
 from repro.core.suite import generate
 
 from benchmarks.common import print_csv, summarize, tier_reorders, tier_specs
 
 SCHEMES = ["fixed", "variable", "hierarchical"]
+
+
+def _pallas_ratio(a) -> float:
+    """xla-B-bytes ÷ tiled-B-bytes (best of original/RCM order) — > 1 where
+    the Pallas Sp×Sp kernel's footprint beats the gather path's re-fetch."""
+    from benchmarks.bench_kernels import BLOCK_K, BN, _xla_b_bytes
+    tiled = min(b_bytes_tiled(tiled_live_tiles(ar, BLOCK_K, BN), BLOCK_K, BN)
+                for ar in (a, reorder(a, "rcm")[0]))
+    return _xla_b_bytes(a) / max(tiled, 1)
 
 
 def run(tier: str = "default") -> dict:
@@ -17,6 +31,7 @@ def run(tier: str = "default") -> dict:
     rows = []
     # clustering without reordering (Fig. 3 "Original" boxes + hierarchical)
     per_scheme: dict[str, dict[str, float]] = {s: {} for s in SCHEMES}
+    pallas_ratios: dict[str, float] = {}
     for spec in specs:
         a = generate(spec)
         base = bench_rowwise_on(a, "original", name=spec.name)
@@ -28,6 +43,8 @@ def run(tier: str = "default") -> dict:
             row[scheme] = sp
             row[f"{scheme}_pre_x"] = r.preprocess_s / max(base.kernel_s,
                                                           1e-9)
+        row["pallas_bfetch_ratio"] = pallas_ratios[spec.name] = \
+            _pallas_ratio(a)
         rows.append(row)
     print_csv(rows, "fig3_clusterwise_no_reorder_speedup")
     print_csv([{"scheme": s, **summarize(per_scheme[s])} for s in SCHEMES],
@@ -46,7 +63,7 @@ def run(tier: str = "default") -> dict:
             summary.append({"algo": algo, "scheme": scheme,
                             **summarize(sp)})
     print_csv(summary, "table2_cluster_columns_GM_Pos_+GM")
-    return {"per_scheme": per_scheme}
+    return {"per_scheme": per_scheme, "pallas_bfetch": pallas_ratios}
 
 
 if __name__ == "__main__":

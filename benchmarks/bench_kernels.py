@@ -1,13 +1,29 @@
-"""TPU-kernel-facing benchmark (beyond paper): BCC cluster_spmm occupancy
-statistics + interpret-mode validation timing, and the jnp SpMM baselines.
+"""TPU-kernel-facing benchmark (beyond paper): the Pallas Sp×Sp tier vs the
+XLA gather/scatter tier, plus BCC cluster_spmm occupancy statistics.
 
-On real TPU hardware the same harness times compiled kernels; here
-(CPU-only) the *derived* quantities are the point:
+Two tables:
 
-* padding fraction of the padded-grid kernel (v1) vs compact stream (v2) —
-  the exact MXU-issue-slot waste the compact variant removes;
-* VMEM working set per grid step vs the 16 MiB budget;
-* arithmetic intensity of the kernel's inner loop.
+``spgemm_pallas_vs_xla`` — the tentpole comparison, per quick/default-tier
+matrix:
+
+* **B-bytes-fetched per output flop** of each path, counted from the
+  formats themselves (:func:`repro.core.spgemm.b_bytes_rowwise_binned` /
+  :func:`b_bytes_tiled`): the XLA path re-fetches 8 B (index+value) per
+  padded gather element per A nonzero; the tiled path streams each live
+  dense ``(128, 128)`` B tile into VMEM once. The *routed* column picks
+  the footprint-optimal path per matrix over the planner's pallas reorder
+  menu (original/rcm) — the oracle the cost model's ``tile128_fill`` gate
+  approximates — its geomean is the acceptance gate (≥ 1.2×).
+* **padding occupancy**: fill of B's live tile lattice and the A-side BCC
+  padding fraction — the two waste terms the cost model trades off.
+* **gather volume**: per-element gathers of the XLA path vs MXU-step
+  count of the compact stream.
+* wall-clock Pallas-vs-XLA speedup on a TPU backend (interpret mode is
+  correctness-only and orders of magnitude slow, so CPU runs validate one
+  small matrix against ``spgemm_reference`` instead of timing).
+
+``bcc_kernel_occupancy_and_vmem`` — the PR-1-era SpMM occupancy table
+(padded-grid vs compact-stream waste, VMEM budget check), unchanged.
 """
 from __future__ import annotations
 
@@ -17,18 +33,128 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.benchlib import representative_subset, time_fn
-from repro.core.formats import bcc_from_host
-from repro.core.reorder import reorder
 from repro.core.clustering import hierarchical_clusters
+from repro.core.formats import (bcc_from_host, csr_from_host,
+                                tiled_csr_from_host, tiled_live_tiles)
+from repro.core.reorder import reorder
+from repro.core.spgemm import (b_bytes_rowwise_binned, b_bytes_tiled,
+                               flops_spgemm, length_bins, slot_rows_host,
+                               spgemm_reference, spgemm_rowwise_dense_binned)
 from repro.core.suite import generate
 from repro.kernels import ops
 
-from benchmarks.common import print_csv
+from benchmarks.common import geomean, print_csv, tier_specs
 
 VMEM_BUDGET = 16 * 2**20
+BLOCK_R, BLOCK_K, BN = 8, 128, 128
 
 
-def run(tier: str = "default") -> dict:
+def _xla_b_bytes(a) -> int:
+    lens = a.row_nnz()[a.indices]
+    bins = length_bins(lens)
+    return b_bytes_rowwise_binned(bins, int(lens.shape[0]))
+
+
+def _tiled_candidates(a) -> dict[str, "np.ndarray"]:
+    """The tiled path's reorder menu — exactly the planner's pallas
+    candidates (DEFAULT_CANDIDATES: original, rcm), so the routed column
+    below only counts traffic wins the serving path can actually ship."""
+    return {"original": a, "rcm": reorder(a, "rcm")[0]}
+
+
+def _spgemm_pallas_vs_xla(tier: str) -> dict:
+    specs = tier_specs(tier)
+    rows = []
+    ratios_tiled, ratios_routed = [], []
+    smallest = None              # (nnz, HostCSR) for the parity check below
+    for spec in specs:
+        a = generate(spec)
+        if smallest is None or a.nnz < smallest[0]:
+            smallest = (a.nnz, a)
+        fl = max(flops_spgemm(a, a), 1)
+        xla_b = _xla_b_bytes(a)
+        best_name, best_b, best_live, best_mat = None, None, None, None
+        for name, ar in _tiled_candidates(a).items():
+            live = tiled_live_tiles(ar, BLOCK_K, BN)
+            tb = b_bytes_tiled(live, BLOCK_K, BN)
+            if best_b is None or tb < best_b:
+                best_name, best_b, best_live, best_mat = name, tb, live, ar
+        bcc = bcc_from_host(best_mat, block_r=BLOCK_R, block_k=BLOCK_K)
+        stream = ops.bcc_compact_stream(bcc, cover_all_blocks=True)
+        routed_b = min(xla_b, best_b)
+        ratio_tiled = xla_b / max(best_b, 1)
+        ratio_routed = xla_b / max(routed_b, 1)
+        ratios_tiled.append(ratio_tiled)
+        ratios_routed.append(ratio_routed)
+        tile_fill = a.nnz / max(best_live * BLOCK_K * BN, 1)
+        a_pad = 1 - a.nnz / max(stream[2].size, 1)
+        row = {
+            "matrix": spec.name,
+            "xla_b_bytes_per_flop": xla_b / fl,
+            "tiled_b_bytes_per_flop": best_b / fl,
+            "tiled_reorder": best_name,
+            "routed": "pallas" if best_b < xla_b else "xla",
+            "ratio_tiled": ratio_tiled,
+            "ratio_routed": ratio_routed,
+            "b_tile_fill": tile_fill,
+            "a_slab_pad_frac": a_pad,
+            "gathers_xla": a.nnz,
+            "mxu_steps": int(stream[0].shape[0]),
+        }
+        if ops.on_tpu():
+            # compiled wall-clock — only meaningful on the real MXU
+            tiled_b_op = tiled_csr_from_host(best_mat, BLOCK_K, BN)
+            t_pal = time_fn(
+                lambda: ops.bcc_spgemm_tiled(bcc, tiled_b_op, stream=stream))
+            dev = csr_from_host(a)
+            bins = length_bins(a.row_nnz()[a.indices],
+                               pad_sentinel=dev.nnz_cap)
+            srows = slot_rows_host(np.asarray(dev.indptr), dev.nnz_cap)
+            t_xla = time_fn(
+                lambda: spgemm_rowwise_dense_binned(dev, dev, bins, srows))
+            row["pallas_speedup"] = t_xla / max(t_pal, 1e-12)
+        rows.append(row)
+    print_csv(rows, "spgemm_pallas_vs_xla_b_traffic")
+
+    # interpret-mode parity check (CPU CI): one small matrix end-to-end
+    sm = _principal_submatrix(smallest[1], 192)
+    bcc = bcc_from_host(sm, block_r=BLOCK_R, block_k=BLOCK_K)
+    tiled = tiled_csr_from_host(sm, BLOCK_K, BN)
+    t0 = time.perf_counter()
+    got = np.asarray(ops.bcc_spgemm_tiled(bcc, tiled, interpret=True))
+    t_interp = time.perf_counter() - t0
+    err = float(np.abs(got - spgemm_reference(sm, sm)).max())
+    summary = {
+        "b_bytes_ratio_tiled_gm": geomean(ratios_tiled),
+        "b_bytes_ratio_routed_gm": geomean(ratios_routed),
+        "routed_pallas_pct": 100.0 * sum(r["routed"] == "pallas"
+                                         for r in rows) / max(len(rows), 1),
+        "interp_parity_max_err": err,
+        "interp_validate_s": t_interp,
+    }
+    if ops.on_tpu():
+        sp = [r["pallas_speedup"] for r in rows if "pallas_speedup" in r]
+        summary["pallas_wallclock_speedup_gm"] = geomean(sp)
+    print_csv([summary], "spgemm_pallas_vs_xla_summary")
+    return {"rows": rows, "summary": summary}
+
+
+def _principal_submatrix(a, n: int):
+    """Leading n×n principal submatrix (keeps interpret-mode validation
+    grids small enough for CI)."""
+    from repro.core.formats import HostCSR
+    n = min(n, a.nrows)
+    cut = int(a.indptr[n])
+    keep = a.indices[:cut] < n
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(np.bincount(
+        np.repeat(np.arange(n), np.diff(a.indptr[:n + 1]))[keep],
+        minlength=n), out=indptr[1:])
+    return HostCSR(indptr, a.indices[:cut][keep], a.data[:cut][keep],
+                   (n, n))
+
+
+def _occupancy(tier: str) -> dict:
     n = 4 if tier == "quick" else 8
     specs = representative_subset(n)
     rows = []
@@ -64,6 +190,13 @@ def run(tier: str = "default") -> dict:
         })
     print_csv(rows, "bcc_kernel_occupancy_and_vmem")
     return {"rows": rows}
+
+
+def run(tier: str = "default") -> dict:
+    spgemm = _spgemm_pallas_vs_xla(tier)
+    occ = _occupancy(tier)
+    return {"spgemm": spgemm["rows"], "summary": spgemm["summary"],
+            "occupancy": occ["rows"]}
 
 
 if __name__ == "__main__":

@@ -32,7 +32,8 @@ TABLES = {
     "fig10": ("Fig.10 amortization", bench_overhead.run),
     "fig11": ("Fig.11 memory", bench_memory.run),
     "traffic": ("B-fetch traffic model (mechanism)", bench_traffic.run),
-    "kernels": ("BCC kernel occupancy/VMEM", bench_kernels.run),
+    "kernels": ("Pallas Sp×Sp vs XLA + BCC occupancy/VMEM",
+                bench_kernels.run),
     "preprocess": ("Segmented-CSR preprocessing engine vs loop references",
                    bench_preprocess.run),
     "planner": ("ISSUE-2 planner vs best/worst-static", bench_planner.run),

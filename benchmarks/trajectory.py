@@ -51,6 +51,10 @@ _GATED = [
     ("preprocess", ("engine_speedup_gm_by_stage",), True),
     ("planner", ("hier_over_planner_pre",), True),
     ("planner", ("regret_gm",), False),
+    # Pallas Sp×Sp tier: B traffic of the planner-routed path vs the XLA
+    # gather path (and compiled wall-clock, present on TPU backends only)
+    ("kernels", ("b_bytes_ratio_routed_gm",), True),
+    ("kernels", ("pallas_wallclock_speedup_gm",), True),
 ]
 
 
@@ -132,6 +136,14 @@ def _sum_tallskinny(res: dict) -> dict:
         algo: _geomean(list(sp.values())) for algo, sp in per_algo.items()}}
 
 
+def _sum_kernels(res: dict) -> dict:
+    s = res.get("summary", {})
+    keys = ("b_bytes_ratio_tiled_gm", "b_bytes_ratio_routed_gm",
+            "routed_pallas_pct", "interp_parity_max_err",
+            "pallas_wallclock_speedup_gm")
+    return {k: float(s[k]) for k in keys if k in s}
+
+
 _SUMMARIZERS = {
     "fig2": _sum_fig2,
     "fig3": _sum_fig3,
@@ -141,6 +153,7 @@ _SUMMARIZERS = {
     "planner": _sum_planner,
     "table3": _sum_tallskinny,
     "preprocess": _sum_ratio_map("speedups", "engine_speedup_gm_by_stage"),
+    "kernels": _sum_kernels,
 }
 
 

@@ -36,7 +36,7 @@ from repro.core.formats import (HostCSR, csr_cluster_from_host,
                                 csr_cluster_nbytes_exact, csr_from_host,
                                 csr_nbytes)
 from repro.core.reorder import reorder
-from repro.core.spgemm import (flops_spgemm, length_bins,
+from repro.core.spgemm import (flops_spgemm, length_bins, slot_rows_host,
                                spgemm_clusterwise_dense_binned,
                                spgemm_rowwise_dense_binned, spmm_clusterwise,
                                spmm_rowwise)
@@ -107,8 +107,9 @@ def pad_host(a: HostCSR, nrows: int) -> HostCSR:
 # bump when the measured kernels change so stale caches can't serve
 # timings of a different kernel generation (v2 = length-binned passes;
 # v3 = planner lands — PR-1-era measurements must not leak into planner
-# scores or BENCH_* trajectory artifacts)
-_KERNEL_GEN = "v3"
+# scores or BENCH_* trajectory artifacts; v4 = hoisted slot→row maps +
+# the Pallas Sp×Sp tier)
+_KERNEL_GEN = "v4"
 
 
 def _key(spec_name: str, algo: str, scheme: str, workload: str) -> str:
@@ -158,7 +159,10 @@ def bench_rowwise_on(a: HostCSR, algo: str, *, name: str = "",
         # width of the B row it actually fetches, not the global max
         bins = length_bins(bp.row_nnz()[bp.indices],
                            pad_sentinel=dev.nnz_cap)
-        t = time_fn(lambda: spgemm_rowwise_dense_binned(dev, dev, bins),
+        # slot→row ids precomputed once per packed operand, not per call
+        srows = slot_rows_host(np.asarray(dev.indptr), dev.nnz_cap)
+        t = time_fn(lambda: spgemm_rowwise_dense_binned(dev, dev, bins,
+                                                        srows),
                     reps=reps)
         return BenchResult(kernel_s=t, preprocess_s=t_pre, nnz=b.nnz,
                            flops=flops_spgemm(b, b), mem_bytes=csr_nbytes(b))
@@ -203,7 +207,9 @@ def bench_clusterwise_on(a: HostCSR, algo: str, scheme: str, *,
         lens = np.where(slot_cols < arp.ncols,
                         row_len[np.clip(slot_cols, 0, arp.nrows - 1)], 0)
         bins = length_bins(lens, pad_sentinel=cc.slot_cap)
-        t = time_fn(lambda: spgemm_clusterwise_dense_binned(cc, dev_b, bins),
+        sclust = slot_rows_host(np.asarray(cc.cluster_ptr), cc.slot_cap)
+        t = time_fn(lambda: spgemm_clusterwise_dense_binned(cc, dev_b, bins,
+                                                            sclust),
                     reps=reps)
         mem = csr_cluster_nbytes_exact(ar, bounds,
                                        fixed_length=(scheme == "fixed"))

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.segment import (boundary_mask, expand_indptr,
+from repro.core.segment import (boundary_mask, expand_indptr, key_table,
                                 ragged_gather_indices, segmented_count)
 
 __all__ = [
@@ -32,11 +32,15 @@ __all__ = [
     "CSR",
     "CSRCluster",
     "BCC",
+    "TiledCSR",
     "csr_from_host",
     "csr_cluster_from_host",
     "csr_cluster_from_host_reference",
     "bcc_from_host",
     "bcc_from_host_reference",
+    "tiled_csr_from_host",
+    "tiled_csr_from_host_reference",
+    "tiled_live_tiles",
     "csr_cluster_nbytes_exact",
     "csr_cluster_nbytes_exact_reference",
     "csr_nbytes",
@@ -329,6 +333,73 @@ class BCC:
         return out[: self.nrows, : self.ncols]
 
 
+@_register
+@dataclasses.dataclass(frozen=True)
+class TiledCSR:
+    """Tiled-sparse B operand for the Pallas Sp×Sp kernel.
+
+    B is cut into a ``(nkb × nnb)`` lattice of ``(block_k, bn)`` tiles;
+    only *live* tiles (those holding at least one nonzero) are stored, as
+    dense MXU-ready slabs. Layout::
+
+        tiles : (tile_cap, block_k, bn)   tiles[0] is the reserved all-zero
+                                          tile; live tiles occupy 1..ntiles
+        table : (nkb * nnb,) int32        (k-block kb, n-tile nb) → tile
+                                          slot at table[kb * nnb + nb];
+                                          0 = dead (points at the zero tile)
+
+    The flat ``table`` is what a Pallas kernel scalar-prefetches: together
+    with a BCC A's ``tile_ids`` stream it forms the double indirection
+    "A's live (block, k-tile) → B's resident tile" of
+    :func:`repro.kernels.cluster_spgemm.cluster_spgemm_tiled`. Dense tiles
+    carry no column indices — the 8 B/nonzero (index+value) of the CSR
+    gather path becomes 4 B/slot of pure values.
+    """
+
+    _static = ("nrows", "ncols", "block_k", "bn")
+
+    tiles: jax.Array         # (tile_cap, block_k, bn)
+    table: jax.Array         # (nkb * nnb,) int32, 0 = dead
+    nrows: int
+    ncols: int
+    block_k: int
+    bn: int
+
+    @property
+    def nkb(self) -> int:
+        return (self.nrows + self.block_k - 1) // self.block_k
+
+    @property
+    def nnb(self) -> int:
+        return (self.ncols + self.bn - 1) // self.bn
+
+    @property
+    def tile_cap(self) -> int:
+        return self.tiles.shape[0]
+
+    @property
+    def ntiles_live(self) -> int:
+        """Live tiles (excludes the reserved zero tile)."""
+        return int((np.asarray(self.table) > 0).sum())
+
+    def nbytes_tiles(self) -> int:
+        """HBM footprint of the tile store — what one full streaming of B
+        into VMEM costs the kernel."""
+        return int(self.tiles.size * self.tiles.dtype.itemsize)
+
+    def to_dense(self) -> jax.Array:
+        nkb, nnb = self.nkb, self.nnb
+        table = self.table.reshape(nkb, nnb)
+        out = jnp.zeros((nkb * self.block_k, nnb * self.bn),
+                        self.tiles.dtype)
+        for kb in range(nkb):
+            for nb in range(nnb):
+                out = jax.lax.dynamic_update_slice(
+                    out, self.tiles[table[kb, nb]],
+                    (kb * self.block_k, nb * self.bn))
+        return out[: self.nrows, : self.ncols]
+
+
 # ---------------------------------------------------------------------------
 # Host → device conversions
 # ---------------------------------------------------------------------------
@@ -540,6 +611,90 @@ def bcc_from_host_reference(h: HostCSR, block_r: int = 8, block_k: int = 128,
                ntiles=jnp.asarray(ntiles),
                nrows=h.nrows, ncols=h.ncols,
                block_r=block_r, block_k=block_k, tiles_per_block=tpb)
+
+
+def tiled_csr_from_host(h: HostCSR, block_k: int = 128, bn: int = 128,
+                        tile_cap: int | None = None,
+                        dtype=jnp.float32) -> TiledCSR:
+    """Pack a HostCSR into the tiled-sparse device format.
+
+    Vectorized: live-tile discovery is one argsort over the
+    ``(row // block_k) * nnb + col // bn`` key; the table is one
+    :func:`repro.core.segment.key_table` scatter (``base=1`` — slot 0 is
+    the reserved zero tile); the slab fill is one fancy-indexed assignment
+    at (slot, row % block_k, col % bn). Identical layout to
+    :func:`tiled_csr_from_host_reference`.
+    """
+    nkb = (h.nrows + block_k - 1) // block_k
+    nnb = (h.ncols + bn - 1) // bn
+    rows = expand_indptr(h.indptr)
+    cols = h.indices.astype(np.int64)
+    key = (rows // block_k) * nnb + cols // bn
+    order = np.argsort(key, kind="stable")
+    skey = key[order]
+    first = boundary_mask(skey)
+    slot_sorted = np.cumsum(first)              # live-tile slot (1-based)
+    ukey = skey[first]
+    nlive = int(ukey.shape[0])
+    cap = nlive + 1 if tile_cap is None else tile_cap
+    if cap < nlive + 1:
+        raise ValueError(f"tile_cap {cap} < live tiles + zero tile "
+                         f"{nlive + 1}")
+    table = key_table(ukey, nkb * nnb, base=1)
+    tiles = np.zeros((cap, block_k, bn), dtype=np.float32)
+    if h.nnz:
+        slot = np.empty(h.nnz, dtype=np.int64)
+        slot[order] = slot_sorted
+        tiles[slot, rows % block_k, cols % bn] = h.data
+    return TiledCSR(tiles=jnp.asarray(tiles, dtype),
+                    table=jnp.asarray(table),
+                    nrows=h.nrows, ncols=h.ncols, block_k=block_k, bn=bn)
+
+
+def tiled_csr_from_host_reference(h: HostCSR, block_k: int = 128,
+                                  bn: int = 128,
+                                  tile_cap: int | None = None,
+                                  dtype=jnp.float32) -> TiledCSR:
+    """Loop reference for :func:`tiled_csr_from_host` (test oracle)."""
+    nkb = (h.nrows + block_k - 1) // block_k
+    nnb = (h.ncols + bn - 1) // bn
+    live: dict[tuple[int, int], int] = {}
+    slabs: list[np.ndarray] = []
+    for i in range(h.nrows):
+        ci, vi = h.row(i)
+        for c, v in zip(ci, vi):
+            tk = (i // block_k, int(c) // bn)
+            if tk not in live:
+                live[tk] = len(slabs) + 1
+                slabs.append(np.zeros((block_k, bn), dtype=np.float32))
+            slabs[live[tk] - 1][i % block_k, int(c) % bn] = v
+    # the vectorized packer enumerates tiles in sorted key order
+    order = sorted(live, key=lambda t: t[0] * nnb + t[1])
+    nlive = len(order)
+    cap = nlive + 1 if tile_cap is None else tile_cap
+    if cap < nlive + 1:
+        raise ValueError(f"tile_cap {cap} < live tiles + zero tile "
+                         f"{nlive + 1}")
+    table = np.zeros(nkb * nnb, dtype=np.int32)
+    tiles = np.zeros((cap, block_k, bn), dtype=np.float32)
+    for s, tk in enumerate(order):
+        table[tk[0] * nnb + tk[1]] = s + 1
+        tiles[s + 1] = slabs[live[tk] - 1]
+    return TiledCSR(tiles=jnp.asarray(tiles, dtype),
+                    table=jnp.asarray(table),
+                    nrows=h.nrows, ncols=h.ncols, block_k=block_k, bn=bn)
+
+
+def tiled_live_tiles(h: HostCSR, block_k: int = 128, bn: int = 128) -> int:
+    """Number of live ``(block_k, bn)`` tiles of ``h`` — the analytic
+    footprint counter (no tile materialization): the tiled kernel streams
+    exactly this many dense tiles of B into VMEM."""
+    if h.nnz == 0:
+        return 0
+    rows = expand_indptr(h.indptr)
+    nnb = (h.ncols + bn - 1) // bn
+    key = (rows // block_k) * nnb + h.indices.astype(np.int64) // bn
+    return int(np.unique(key).size)
 
 
 # ---------------------------------------------------------------------------

@@ -37,6 +37,7 @@ __all__ = [
     "segmented_count",
     "segmented_sum",
     "topk_mask",
+    "key_table",
 ]
 
 
@@ -129,3 +130,19 @@ def topk_mask(sorted_seg: np.ndarray, k: int) -> np.ndarray:
     """Keep-mask of the first ``k`` elements of each segment; sort by
     (segment, -score) first to make this a segmented top-k by score."""
     return rank_in_segment(sorted_seg) < k
+
+
+def key_table(unique_keys: np.ndarray, table_size: int, *,
+              base: int = 0) -> np.ndarray:
+    """Dense int32 lookup table: ``table[unique_keys[i]] = base + i``,
+    everything else 0.
+
+    The inverse of a compaction — turns a sorted list of live keys into
+    the O(1) key→slot map a scalar-prefetched kernel indexes (``base=1``
+    reserves slot 0 for the "dead key" sentinel, the convention of
+    :class:`repro.core.formats.TiledCSR`)."""
+    unique_keys = np.asarray(unique_keys, dtype=np.int64)
+    table = np.zeros(table_size, dtype=np.int32)
+    table[unique_keys] = base + np.arange(unique_keys.shape[0],
+                                          dtype=np.int32)
+    return table

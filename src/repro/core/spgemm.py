@@ -1,4 +1,5 @@
-"""SpGEMM / SpMM compute: row-wise (Gustavson) and cluster-wise (Alg. 1).
+"""SpGEMM / SpMM compute: row-wise (Gustavson) and cluster-wise (Alg. 1) —
+the XLA gather/scatter tier, and the fallback of the Pallas kernel tier.
 
 All functions are shape-static and jittable. Outputs are dense accumulators
 (M×N) — on TPU the sparse-hash accumulator of the CPU algorithm has no
@@ -17,6 +18,17 @@ Dataflow correspondence (paper → here):
   :func:`spmm_clusterwise`). The gather-volume reduction is the TPU analogue
   of the paper's cache-reuse win.
 
+Relation to the Pallas kernel tier (``repro.kernels.cluster_spgemm``): the
+planner scores a ``pallas`` scheme — BCC(A) × TiledCSR(B) on the MXU —
+alongside these XLA paths. The Pallas path wins when the (reordered)
+pattern is block-dense enough that B's live-tile footprint
+(:func:`b_bytes_tiled`) undercuts the gather path's per-nonzero re-fetch
+volume (:func:`b_bytes_rowwise_binned`) — hub/community/RMAT structure;
+the gather paths here remain both the interpret/CPU fallback and the
+winner on patterns whose 128-lane tiles stay mostly dead (banded/ER). The
+``b_bytes_*`` counters are the decision's measurable core and feed the
+``kernels`` benchmark table.
+
 ``flops_*`` helpers report the multiply-add count each variant performs
 (including padding waste for the clustered format) — used by the benchmark
 harness and the §Roofline analysis.
@@ -34,10 +46,11 @@ from repro.core.formats import CSR, CSRCluster, HostCSR
 __all__ = [
     "spgemm_rowwise_dense", "spgemm_clusterwise_dense",
     "spgemm_rowwise_dense_binned", "spgemm_clusterwise_dense_binned",
-    "length_bins",
+    "length_bins", "slot_rows_host",
     "spmm_rowwise", "spmm_clusterwise",
     "spgemm_reference", "symbolic_nnz", "flops_spgemm",
     "gathers_rowwise", "gathers_clusterwise",
+    "b_bytes_rowwise_binned", "b_bytes_tiled",
 ]
 
 
@@ -51,6 +64,15 @@ def _slot_rows(indptr: jax.Array, cap: int) -> jax.Array:
     return jnp.searchsorted(indptr,
                             jnp.arange(cap, dtype=indptr.dtype),
                             side="right").astype(jnp.int32) - 1
+
+
+def slot_rows_host(indptr: np.ndarray, cap: int) -> np.ndarray:
+    """Host-side :func:`_slot_rows`: row id of each of ``cap`` storage
+    slots. Precomputed once per packed operand and threaded through the
+    binned drivers so no per-bin pass re-derives it."""
+    return (np.searchsorted(np.asarray(indptr),
+                            np.arange(cap, dtype=np.int64),
+                            side="right") - 1).astype(np.int32)
 
 
 def _gather_b_row(b: CSR, k: jax.Array, max_row_b: int
@@ -176,10 +198,10 @@ def length_bins(fetch_lens: np.ndarray, *, floor: int = 8,
 
 @functools.partial(jax.jit, static_argnames=("max_row_b",), donate_argnums=3)
 def _rowwise_pass(a: CSR, b: CSR, slots: jax.Array, c: jax.Array,
-                  max_row_b: int) -> jax.Array:
+                  slot_rows: jax.Array, max_row_b: int) -> jax.Array:
     valid_slot = slots < a.nnz_cap
     sl = jnp.clip(slots, 0, a.nnz_cap - 1)
-    rows = _slot_rows(a.indptr, a.nnz_cap)[sl]
+    rows = slot_rows[sl]
     ks = jnp.where(valid_slot, a.indices[sl], a.ncols)
     data = jnp.where(valid_slot, a.data[sl], 0.0)
     valid = ks < a.ncols
@@ -194,24 +216,31 @@ def _rowwise_pass(a: CSR, b: CSR, slots: jax.Array, c: jax.Array,
 
 
 def spgemm_rowwise_dense_binned(a: CSR, b: CSR,
-                                bins: list[tuple[np.ndarray, int]]
+                                bins: list[tuple[np.ndarray, int]],
+                                slot_rows: np.ndarray | None = None
                                 ) -> jax.Array:
     """Row-wise SpGEMM with per-bin gather widths; equals
-    :func:`spgemm_rowwise_dense` for any valid slot partition."""
+    :func:`spgemm_rowwise_dense` for any valid slot partition.
+
+    ``slot_rows`` — optional precomputed slot→row map
+    (:func:`slot_rows_host`); computed once here otherwise, and shared by
+    every bin pass instead of being re-derived per bin.
+    """
+    if slot_rows is None:
+        slot_rows = slot_rows_host(np.asarray(a.indptr), a.nnz_cap)
+    sr = jnp.asarray(slot_rows)
     c = jnp.zeros((a.nrows, b.ncols + 1), a.data.dtype)
     for slots, w in bins:
-        c = _rowwise_pass(a, b, jnp.asarray(slots), c, w)
+        c = _rowwise_pass(a, b, jnp.asarray(slots), c, sr, w)
     return c[:, : b.ncols]
 
 
 @functools.partial(jax.jit, static_argnames=("max_row_b",), donate_argnums=3)
 def _clusterwise_pass(a: CSRCluster, b: CSR, slots: jax.Array, c: jax.Array,
-                      max_row_b: int) -> jax.Array:
+                      slot_clusters: jax.Array, max_row_b: int) -> jax.Array:
     valid_slot = slots < a.slot_cap
     sl = jnp.clip(slots, 0, a.slot_cap - 1)
-    slot_cluster = jnp.searchsorted(a.cluster_ptr, sl,
-                                    side="right").astype(jnp.int32) - 1
-    cl = jnp.clip(slot_cluster, 0, a.nclusters - 1)
+    cl = jnp.clip(slot_clusters[sl], 0, a.nclusters - 1)
     ks = jnp.where(valid_slot, a.cols[sl], a.ncols)
     slab = jnp.where(valid_slot[:, None], a.values[sl], 0.0)
     valid = ks < a.ncols
@@ -232,13 +261,22 @@ def _clusterwise_pass(a: CSRCluster, b: CSR, slots: jax.Array, c: jax.Array,
 
 
 def spgemm_clusterwise_dense_binned(a: CSRCluster, b: CSR,
-                                    bins: list[tuple[np.ndarray, int]]
+                                    bins: list[tuple[np.ndarray, int]],
+                                    slot_clusters: np.ndarray | None = None
                                     ) -> jax.Array:
     """Cluster-wise SpGEMM with per-bin gather widths; equals
-    :func:`spgemm_clusterwise_dense` for any valid slot partition."""
+    :func:`spgemm_clusterwise_dense` for any valid slot partition.
+
+    ``slot_clusters`` — optional precomputed slot→cluster map
+    (:func:`slot_rows_host` over ``cluster_ptr``); computed once here
+    otherwise and shared across the bin passes.
+    """
+    if slot_clusters is None:
+        slot_clusters = slot_rows_host(np.asarray(a.cluster_ptr), a.slot_cap)
+    sc = jnp.asarray(slot_clusters)
     c = jnp.zeros((a.nrows + a.max_cluster, b.ncols + 1), a.values.dtype)
     for slots, w in bins:
-        c = _clusterwise_pass(a, b, jnp.asarray(slots), c, w)
+        c = _clusterwise_pass(a, b, jnp.asarray(slots), c, sc, w)
     return c[: a.nrows, : b.ncols]
 
 
@@ -311,3 +349,23 @@ def gathers_clusterwise(nslots: int) -> int:
     """Number of B-row fetches the cluster-wise dataflow performs
     (= deduplicated (cluster, column) slots)."""
     return nslots
+
+
+def b_bytes_rowwise_binned(bins: list[tuple[np.ndarray, int]],
+                           nslots: int) -> int:
+    """B bytes the binned XLA gather path moves per A² call: every live
+    slot fetches its B row padded to the bin width — 8 B (int32 index +
+    f32 value) per fetched element, re-fetched per A nonzero (the gather
+    machinery provides no cross-row reuse)."""
+    total = 0
+    for slots, w in bins:
+        total += int((np.asarray(slots) < nslots).sum()) * w * 8
+    return total
+
+
+def b_bytes_tiled(nlive_tiles: int, block_k: int = 128,
+                  bn: int = 128) -> int:
+    """B bytes the VMEM-resident Pallas tiled path moves per A² call: each
+    live dense tile streams HBM→VMEM exactly once (4 B/slot, no indices)
+    and is reused by every cluster slab that touches it."""
+    return nlive_tiles * block_k * bn * 4

@@ -132,7 +132,11 @@ def plan_pipeline_stages(stage_mats: Sequence[HostCSR],
     """
     planner = planner if planner is not None else default_planner()
     reuse = max(num_microbatches * passes, 1)
-    return [planner.plan(m, reuse, measure=measure) for m in stage_mats]
+    # pipeline stages apply sparse weights to dense activations — the
+    # tall-skinny workload, so plans are scored (and in measured mode,
+    # probed) on the SpMM kernel menu, not A² proxies
+    return [planner.plan(m, reuse, measure=measure, workload="spmm")
+            for m in stage_mats]
 
 
 def pipeline_spmm_apply(plans: Sequence[Plan],

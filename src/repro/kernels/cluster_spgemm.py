@@ -1,0 +1,200 @@
+"""Pallas TPU kernel: cluster-wise sparse × sparse SpGEMM on the MXU.
+
+This is the TPU-native realization of the paper's cluster-wise dataflow for
+the sparse × sparse workload (§4.2–4.3, ``C = A·B`` with both operands
+sparse — the A² case in the paper): A is packed in BCC
+(block-clustered-columns, ``core.formats.BCC``) and B in the tiled-sparse
+``core.formats.TiledCSR`` — dense ``(block_k, bn)`` slabs for B's *live*
+tiles plus a flat (k-block, n-tile) → tile-slot lookup table.
+
+Dataflow ↔ paper correspondence
+  * a *cluster* is a ``block_r``-row block of the (reordered) A matrix;
+  * "keep the B rows in cache while processing all rows of the cluster"
+    becomes "keep the B tile in VMEM and contract it against the whole
+    ``(block_r × block_k)`` cluster slab on the MXU" — one B fetch serves
+    every row of the cluster at once;
+  * the row-wise baseline's per-nonzero B-row gather (8 B of index+value
+    per element, re-fetched per A nonzero) becomes a dense, index-free
+    tile stream.
+
+The **double indirection** is the heart of the kernel: the compact
+(block, k-tile) stream of A (``bcc_compact_stream``) is scalar-prefetched,
+and each step chases A's k-tile id through B's tile table to find the B
+slab to multiply::
+
+    slot = table[tile_ids[s] * nnb + j]      # 0 = dead → skip the MXU op
+
+Two variants, differing in where B lives:
+
+``cluster_spgemm_tiled``  (streamed B)
+    grid = (nnb, S). B tiles stay in HBM; the B BlockSpec's index_map
+    performs the table lookup, so each grid step DMAs exactly the one tile
+    it contracts (Pallas elides the copy when consecutive steps land on
+    the same tile). Scales to B far larger than VMEM.
+
+``cluster_spgemm_resident``  (VMEM-resident B)
+    Same grid, but the whole tile store is pinned in VMEM (constant
+    index_map → fetched from HBM exactly once) and the kernel indexes it
+    dynamically. For suite-sized operands this makes B's total HBM
+    traffic equal its live-tile footprint — the "pays the bandwidth of
+    *its* footprint" endpoint. Use when ``tiles.nbytes`` fits the VMEM
+    budget (the ops-layer wrapper auto-selects).
+
+Accumulator re-initialization on block-id change mirrors
+``cluster_spmm_compact``; dead table slots predicate away their MXU issue
+with ``pl.when`` so fully-sparse B column strips cost no FLOPs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 ships this as TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
+__all__ = ["cluster_spgemm_tiled", "cluster_spgemm_resident"]
+
+
+def _is_block_start(block_ids_ref, s):
+    return jnp.where(s == 0, True,
+                     block_ids_ref[s] != block_ids_ref[jnp.maximum(s - 1, 0)])
+
+
+# ---------------------------------------------------------------------------
+# v1: streamed B tiles (general case — B larger than VMEM)
+# ---------------------------------------------------------------------------
+
+
+def _spgemm_kernel_streamed(nnb, block_ids_ref, tile_ids_ref, table_ref,
+                            a_ref, b_ref, o_ref):
+    j = pl.program_id(0)
+    s = pl.program_id(1)
+
+    @pl.when(_is_block_start(block_ids_ref, s))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    slot = table_ref[tile_ids_ref[s] * nnb + j]
+
+    @pl.when(slot > 0)                     # dead B tile: no MXU issue
+    def _acc():
+        o_ref[...] += jnp.dot(a_ref[0], b_ref[0],
+                              preferred_element_type=jnp.float32
+                              ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_r", "block_k", "bn", "nblocks", "nnb", "interpret"))
+def cluster_spgemm_tiled(block_ids: jax.Array, tile_ids: jax.Array,
+                         table: jax.Array, a_values: jax.Array,
+                         b_tiles: jax.Array, *, block_r: int, block_k: int,
+                         bn: int, nblocks: int, nnb: int,
+                         interpret: bool = False) -> jax.Array:
+    """C = A_bcc @ B_tiled, streaming one B tile per grid step.
+
+    Args:
+      block_ids: (S,) int32, non-decreasing — owning row-block of each live
+        (block, k-tile) pair of A. Every row block MUST appear at least
+        once (pad empty blocks with a zero slab) so its C strip is zeroed.
+      tile_ids: (S,) int32 — A k-tile id per stream step.
+      table: (nkb * nnb,) int32 — B's tile lookup table (0 = dead).
+      a_values: (S, block_r, block_k) — A cluster slabs.
+      b_tiles: (tile_cap, block_k, bn) — B's dense live tiles; slab 0 is
+        the all-zero tile dead table entries point at.
+
+    Returns: (nblocks * block_r, nnb * bn) dense C.
+    """
+    s_total, br, bk = a_values.shape
+    assert (br, bk) == (block_r, block_k)
+    assert b_tiles.shape[1:] == (block_k, bn), (b_tiles.shape, block_k, bn)
+
+    grid = (nnb, s_total)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_r, block_k),
+                         lambda j, s, blks, ids, tbl: (s, 0, 0)),
+            pl.BlockSpec((1, block_k, bn),
+                         lambda j, s, blks, ids, tbl:
+                         (tbl[ids[s] * nnb + j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, bn),
+                               lambda j, s, blks, ids, tbl: (blks[s], j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_spgemm_kernel_streamed, nnb),
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((nblocks * block_r, nnb * bn),
+                                       b_tiles.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_ids, tile_ids, table, a_values, b_tiles)
+
+
+# ---------------------------------------------------------------------------
+# v2: VMEM-resident B (footprint-bound traffic — B fetched from HBM once)
+# ---------------------------------------------------------------------------
+
+
+def _spgemm_kernel_resident(nnb, block_ids_ref, tile_ids_ref, table_ref,
+                            a_ref, b_ref, o_ref):
+    j = pl.program_id(0)
+    s = pl.program_id(1)
+
+    @pl.when(_is_block_start(block_ids_ref, s))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    slot = table_ref[tile_ids_ref[s] * nnb + j]
+
+    @pl.when(slot > 0)
+    def _acc():
+        o_ref[...] += jnp.dot(a_ref[0], b_ref[slot],
+                              preferred_element_type=jnp.float32
+                              ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_r", "block_k", "bn", "nblocks", "nnb", "interpret"))
+def cluster_spgemm_resident(block_ids: jax.Array, tile_ids: jax.Array,
+                            table: jax.Array, a_values: jax.Array,
+                            b_tiles: jax.Array, *, block_r: int,
+                            block_k: int, bn: int, nblocks: int, nnb: int,
+                            interpret: bool = False) -> jax.Array:
+    """Same contract as :func:`cluster_spgemm_tiled`, but the whole B tile
+    store is pinned in VMEM (constant index_map — one HBM fetch total) and
+    the double indirection resolves to a dynamic VMEM index."""
+    s_total, br, bk = a_values.shape
+    assert (br, bk) == (block_r, block_k)
+    assert b_tiles.shape[1:] == (block_k, bn)
+    tile_cap = b_tiles.shape[0]
+
+    grid = (nnb, s_total)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_r, block_k),
+                         lambda j, s, blks, ids, tbl: (s, 0, 0)),
+            pl.BlockSpec((tile_cap, block_k, bn),
+                         lambda j, s, blks, ids, tbl: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, bn),
+                               lambda j, s, blks, ids, tbl: (blks[s], j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_spgemm_kernel_resident, nnb),
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((nblocks * block_r, nnb * bn),
+                                       b_tiles.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_ids, tile_ids, table, a_values, b_tiles)

@@ -13,14 +13,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import BCC
+from repro.core.formats import BCC, TiledCSR
+from repro.kernels.cluster_spgemm import (cluster_spgemm_resident,
+                                          cluster_spgemm_tiled)
 from repro.kernels.cluster_spmm import cluster_spmm, cluster_spmm_compact
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_chunk import ssd_chunk_scan
 
 __all__ = ["on_tpu", "bcc_spmm", "bcc_compact_stream",
            "bcc_compact_stream_reference", "bcc_spmm_compact",
-           "flash_mha", "fused_ssd"]
+           "bcc_spgemm_tiled", "flash_mha", "fused_ssd"]
+
+# VMEM budget for pinning TiledCSR's tile store on-chip (leave headroom for
+# the A slab / C tile double buffers out of the 16 MiB core budget)
+_RESIDENT_B_BUDGET = 8 * 2**20
 
 
 def on_tpu() -> bool:
@@ -53,12 +59,16 @@ def bcc_spmm(a: BCC, b: jax.Array, *, bn: int = 128,
     return out[: a.nrows, : n0]
 
 
-def bcc_compact_stream(a: BCC) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+def bcc_compact_stream(a: BCC, *, cover_all_blocks: bool = False
+                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Host-side: squeeze the padded (block, tile) lattice to live tiles.
 
     Returns (block_ids, tile_ids, values) sorted by block — the input of
     :func:`bcc_spmm_compact`. Tail-padded (repeating the last block with zero
-    slabs) to a multiple of 8 steps.
+    slabs) to a multiple of 8 steps. ``cover_all_blocks=True`` additionally
+    emits one zero-slab step for every block with *no* live tiles, so a
+    compact-grid kernel visits (and zero-initializes) every output strip —
+    required by the Sp×Sp kernel, whose C is dense over all row blocks.
 
     Vectorized: the live-slot mask is one broadcast compare against
     ``ntiles``; the squeeze is one ``flatnonzero`` + fancy gather.
@@ -68,7 +78,8 @@ def bcc_compact_stream(a: BCC) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     tpb = a.tiles_per_block
     tile_ids = np.asarray(a.tile_ids)
     values = np.asarray(a.values)
-    live_mask = np.arange(tpb, dtype=np.int64)[None, :] < ntiles[:, None]
+    eff = np.maximum(ntiles, 1) if cover_all_blocks else ntiles
+    live_mask = np.arange(tpb, dtype=np.int64)[None, :] < eff[:, None]
     keep = np.flatnonzero(live_mask.ravel())
     if keep.size == 0:   # fully empty matrix: single zero step
         keep = np.zeros(1, dtype=np.int64)
@@ -81,11 +92,14 @@ def bcc_compact_stream(a: BCC) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     vals = values[keep]
     if pad:
         vals[live:] = 0.0
+    # slabs of empty blocks (cover_all_blocks) are all-zero by construction
+    # in the padded lattice, so their steps contribute nothing
     return block_ids, tile_ids[keep].astype(np.int32), vals
 
 
-def bcc_compact_stream_reference(a: BCC) -> tuple[np.ndarray, np.ndarray,
-                                                  np.ndarray]:
+def bcc_compact_stream_reference(a: BCC, *, cover_all_blocks: bool = False
+                                 ) -> tuple[np.ndarray, np.ndarray,
+                                            np.ndarray]:
     """Loop reference for :func:`bcc_compact_stream` (test oracle)."""
     ntiles = np.asarray(a.ntiles)
     tpb = a.tiles_per_block
@@ -94,7 +108,10 @@ def bcc_compact_stream_reference(a: BCC) -> tuple[np.ndarray, np.ndarray,
     keep = []
     blocks = []
     for blk in range(ntiles.shape[0]):
-        for t in range(int(ntiles[blk])):
+        n = int(ntiles[blk])
+        if cover_all_blocks:
+            n = max(n, 1)
+        for t in range(n):
             keep.append(blk * tpb + t)
             blocks.append(blk)
     if not keep:   # fully empty matrix: single zero step
@@ -116,7 +133,9 @@ def bcc_spmm_compact(a: BCC, b: jax.Array, *, bn: int = 128,
     if interpret is None:
         interpret = not on_tpu()
     if stream is None:
-        stream = bcc_compact_stream(a)
+        # cover_all_blocks: a block with no live tiles must still appear
+        # once so the compact-grid kernel zero-initializes its C strip
+        stream = bcc_compact_stream(a, cover_all_blocks=True)
     block_ids, tile_ids, values = (jnp.asarray(s) for s in stream)
     k_needed = ((a.ncols + a.block_k - 1) // a.block_k) * a.block_k
     if b.shape[0] < k_needed:
@@ -130,6 +149,40 @@ def bcc_spmm_compact(a: BCC, b: jax.Array, *, bn: int = 128,
                                nblocks=nblocks, bn=bn_eff,
                                interpret=interpret)
     return out[: a.nrows, : n0]
+
+
+def bcc_spgemm_tiled(a: BCC, b: TiledCSR, *,
+                     interpret: bool | None = None,
+                     stream: tuple | None = None,
+                     resident: bool | None = None) -> jax.Array:
+    """C = A_bcc @ B_tiled via the Pallas Sp×Sp kernel. Returns the dense
+    ``(a.nrows, b.ncols)`` product.
+
+    ``resident`` pins B's tile store in VMEM (one HBM fetch for all of B);
+    default: auto — resident when the store fits ``_RESIDENT_B_BUDGET``.
+    ``stream`` overrides the compact (block, k-tile) stream of A
+    (``bcc_compact_stream(a, cover_all_blocks=True)`` — packed once per
+    operand by callers that reuse the plan).
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    if a.block_k != b.block_k:
+        raise ValueError(f"A block_k {a.block_k} != B block_k {b.block_k}")
+    nkb_needed = (a.ncols + a.block_k - 1) // a.block_k
+    if b.nkb < nkb_needed:
+        raise ValueError(f"B covers {b.nkb} k-blocks, A addresses "
+                         f"{nkb_needed}")
+    if stream is None:
+        stream = bcc_compact_stream(a, cover_all_blocks=True)
+    block_ids, tile_ids, values = (jnp.asarray(s) for s in stream)
+    if resident is None:
+        resident = b.nbytes_tiles() <= _RESIDENT_B_BUDGET
+    kernel = cluster_spgemm_resident if resident else cluster_spgemm_tiled
+    out = kernel(block_ids, tile_ids, b.table, values, b.tiles,
+                 block_r=a.block_r, block_k=a.block_k, bn=b.bn,
+                 nblocks=(a.nrows + a.block_r - 1) // a.block_r,
+                 nnb=b.nnb, interpret=interpret)
+    return out[: a.nrows, : b.ncols]
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["cluster_spmm_ref", "cluster_spmm_compact_ref",
-           "flash_attention_ref"]
+           "cluster_spgemm_tiled_ref", "flash_attention_ref"]
 
 
 def cluster_spmm_ref(tile_ids, a_values, b, *, block_r, block_k,
@@ -42,6 +42,31 @@ def cluster_spmm_compact_ref(block_ids, tile_ids, a_values, b, *,
         a_dense[blk * block_r:(blk + 1) * block_r, c0:c0 + block_k] \
             += a_values[s]
     return a_dense @ b
+
+
+def cluster_spgemm_tiled_ref(block_ids, tile_ids, table, a_values, b_tiles,
+                             *, block_r, block_k, bn, nblocks, nnb):
+    """Oracle for kernels.cluster_spgemm: reassemble dense A and dense B
+    from their packed forms, then matmul."""
+    block_ids = np.asarray(block_ids)
+    tile_ids = np.asarray(tile_ids)
+    table = np.asarray(table)
+    a_values = np.asarray(a_values)
+    b_tiles = np.asarray(b_tiles)
+    nkb = table.shape[0] // nnb
+    a_dense = np.zeros((nblocks * block_r, nkb * block_k),
+                       dtype=a_values.dtype)
+    for s in range(a_values.shape[0]):
+        r0 = int(block_ids[s]) * block_r
+        c0 = int(tile_ids[s]) * block_k
+        a_dense[r0:r0 + block_r, c0:c0 + block_k] += a_values[s]
+    b_dense = np.zeros((nkb * block_k, nnb * bn), dtype=b_tiles.dtype)
+    for kb in range(nkb):
+        for nb in range(nnb):
+            slot = int(table[kb * nnb + nb])
+            b_dense[kb * block_k:(kb + 1) * block_k,
+                    nb * bn:(nb + 1) * bn] = b_tiles[slot]
+    return a_dense @ b_dense
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True,

@@ -34,11 +34,22 @@ __all__ = ["Candidate", "ScoredCandidate", "Measurement", "CostModel",
            "DEFAULT_CANDIDATES", "IDENTITY", "break_even_reuse",
            "amortizes", "SCHEMES"]
 
-SCHEMES = ("rowwise", "fixed", "variable", "hierarchical")
+SCHEMES = ("rowwise", "fixed", "variable", "hierarchical", "pallas")
 
 # heuristic uncertainty: only this fraction of a *predicted* gain is
 # trusted when deciding whether preprocessing can amortize
 HEURISTIC_GAIN_TRUST = 0.5
+
+# the pallas scheme compiles for the MXU; off-TPU it runs the Pallas
+# interpreter, which is orders of magnitude slower than the XLA fallback —
+# the heuristic must never pick it there (a measurement still can, and the
+# measurement would reject it too)
+PALLAS_INTERPRET_REL = 50.0
+
+
+def _pallas_on_tpu() -> bool:
+    from repro.kernels.ops import on_tpu
+    return on_tpu()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,7 +72,9 @@ IDENTITY = Candidate("original", "rowwise")
 
 # the serving menu: identity always first; hierarchical only unreordered
 # (it computes its own permutation — stacking a reorder under it is
-# redundant work the sweep showed never pays)
+# redundant work the sweep showed never pays); the pallas scheme is the
+# BCC × TiledCSR MXU kernel (its cost model gates on tile fill, and
+# off-TPU its interpret penalty keeps the XLA paths as fallback)
 DEFAULT_CANDIDATES: tuple[Candidate, ...] = (
     IDENTITY,
     Candidate("rcm", "rowwise"),
@@ -74,6 +87,8 @@ DEFAULT_CANDIDATES: tuple[Candidate, ...] = (
     Candidate("original", "variable"),
     Candidate("rcm", "variable"),
     Candidate("original", "hierarchical"),
+    Candidate("original", "pallas"),
+    Candidate("rcm", "pallas"),
 )
 
 # -- priors seeded from the quick-tier sweep --------------------------------
@@ -89,9 +104,10 @@ _REORDER_PRE = {
 # hierarchical entry is a floor — its real cost tracks the candidate-pair
 # volume, modeled from similar_frac in _heuristic (quick tier: 0.1–1.6×);
 # variable pays max_cluster−1 offset-Jaccard passes on top of fixed's
-# near-free boundary arithmetic
+# near-free boundary arithmetic; pallas pays BCC + TiledCSR packing (two
+# argsort-shaped passes over nnz, comparable to fixed + a format emit)
 _SCHEME_PRE = {"rowwise": 0.0, "fixed": 0.15, "variable": 0.8,
-               "hierarchical": 0.2}
+               "hierarchical": 0.2, "pallas": 0.3}
 # how much of the disorder a reordering can recover (multiplies the
 # feature-derived disorder term), and how sensitive it is to row skew
 _REORDER_STRENGTH = {
@@ -243,6 +259,22 @@ class CostModel:
         elif c.scheme == "hierarchical":
             eff = latent * (1.0 - 0.6 * min(f.row_cv / 1.5, 1.0))
             kernel_rel *= max(1.1 - 1.0 * eff, 0.15)
+        elif c.scheme == "pallas":
+            if not _pallas_on_tpu():
+                # the interpreter path: correctness-only, never economic
+                kernel_rel = PALLAS_INTERPRET_REL
+            else:
+                # traffic model: the tiled path moves 4/tile_fill B per
+                # nonzero of B (dense live tiles, fetched once), the
+                # gather baseline ~10.4 B (8 B/el × ~1.3 pow2 padding,
+                # re-fetched per A nonzero) — their ratio is the
+                # relative kernel time when both are bandwidth-bound.
+                # Reordering densifies the live-tile lattice, improving
+                # fill by (at most) the recovered-locality factor.
+                fill = max(f.tile128_fill, 1e-4)
+                fill_eff = fill * (1.0 + 2.0 * reorder_gain)
+                kernel_rel = min(max(0.385 / fill_eff, 0.15),
+                                 PALLAS_INTERPRET_REL)
 
         pre = _REORDER_PRE.get(c.reorder, 1.0) + _SCHEME_PRE[c.scheme]
         if c.scheme == "hierarchical":

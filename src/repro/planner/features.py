@@ -23,7 +23,7 @@ import hashlib
 
 import numpy as np
 
-from repro.core.formats import HostCSR
+from repro.core.formats import HostCSR, tiled_live_tiles
 from repro.core.segment import expand_indptr
 from repro.core.similarity import (jaccard_pairs_topk,
                                    pairwise_jaccard_consecutive)
@@ -76,6 +76,11 @@ class MatrixFeatures:
     #                           covers two rows but counts once); the cost
     #                           model is calibrated on THIS quantity
     similar_mean: float       # mean Jaccard over those retained pairs
+    tile128_fill: float       # nnz ÷ (live 128×128 tiles × 128²) — fill of
+    #                           the live MXU tile lattice, as ordered; the
+    #                           Pallas tiled path's traffic gate (its B
+    #                           bytes scale with 1/fill, the gather path's
+    #                           with row length)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -123,6 +128,11 @@ def extract_features(a: HostCSR, *, similarity: bool = True,
         bw_mean = bw_p95 = diag_frac = 0.0
     cj = pairwise_jaccard_consecutive(a)
     consec = float(cj.mean()) if cj.size else 0.0
+    if nnz:
+        live = tiled_live_tiles(a, 128, 128)
+        tile_fill = float(nnz / (live * 128 * 128))
+    else:
+        tile_fill = 0.0
 
     similar_frac = similar_mean = 0.0
     if similarity and nnz:
@@ -153,4 +163,5 @@ def extract_features(a: HostCSR, *, similarity: bool = True,
         consec_jaccard=consec,
         similar_frac=similar_frac,
         similar_mean=similar_mean,
+        tile128_fill=tile_fill,
     )

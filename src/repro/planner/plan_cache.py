@@ -3,7 +3,7 @@
 A :class:`Plan` is the full output of preprocessing — the chosen
 (reorder, scheme), the row permutation, the cluster boundaries and the
 timings that justified the choice. The cache keys plans by
-``(pattern fingerprint, reuse bucket, PLAN_CACHE_VERSION)``:
+``(pattern fingerprint, reuse bucket, workload, PLAN_CACHE_VERSION)``:
 
 * the *fingerprint* (see :func:`repro.planner.features.fingerprint`) is
   value-independent, so re-serving the same sparsity pattern with new
@@ -11,14 +11,21 @@ timings that justified the choice. The cache keys plans by
 * the *reuse bucket* (log-decade of the caller's ``reuse_hint``) keeps
   single-shot plans (identity) from shadowing high-reuse plans (clustered)
   for the same matrix;
+* the *workload* (``a2`` sparse×sparse vs ``spmm`` tall-skinny) keeps a
+  plan measured on one kernel family from serving the other — the SpMM
+  menu (``spmm_*``, ``cluster_spmm_compact``) has different economics
+  than the A² menu;
 * the *version* is bumped whenever plan semantics change, like
   ``benchlib``'s kernel-generation cache key — a stale on-disk plan from
   an older planner can never be served.
 
-Storage: in-memory dict in front of an optional on-disk directory of
-``.npz`` files (permutation + boundaries arrays, JSON metadata sidecar in
-the same archive). Everything is a plain file per key — no index to
-corrupt, safe to delete at any time.
+Storage: LRU-ordered in-memory dict in front of an optional on-disk
+directory of ``.npz`` files (permutation + boundaries arrays, JSON metadata
+sidecar in the same archive). ``max_bytes`` caps the store: inserting past
+the budget evicts least-recently-used plans from memory *and disk* (the
+multi-tenant serving fix for the previously unbounded on-disk growth).
+Everything is a plain file per key — no index to corrupt, safe to delete
+at any time.
 """
 from __future__ import annotations
 
@@ -27,16 +34,23 @@ import io
 import json
 import math
 import os
+from collections import OrderedDict
 
 import numpy as np
 
 __all__ = ["Plan", "PlanCache", "PLAN_CACHE_VERSION", "reuse_bucket",
-           "DEFAULT_CACHE_DIR"]
+           "DEFAULT_CACHE_DIR", "DEFAULT_MAX_BYTES"]
 
-PLAN_CACHE_VERSION = "plan-v1"
+# v2: workload-keyed entries + the pallas scheme
+PLAN_CACHE_VERSION = "plan-v2"
 
 DEFAULT_CACHE_DIR = os.path.join(
     os.path.dirname(__file__), "..", "..", "..", "experiments", "plan_cache")
+
+# default byte budget of the process-wide serving cache (plans are a perm
+# + boundaries — even 1M-row plans are ~8 MB, so this holds dozens of hot
+# tenants while bounding the on-disk store)
+DEFAULT_MAX_BYTES = 256 * 2**20
 
 
 def reuse_bucket(reuse_hint: int) -> int:
@@ -51,9 +65,11 @@ class Plan:
 
     fingerprint: str
     reorder: str                      # name in REORDERINGS
-    scheme: str                       # rowwise | fixed | variable | hierarchical
+    scheme: str                       # rowwise | fixed | variable |
+    #                                   hierarchical | pallas
     reuse_hint: int
     max_cluster: int = 8
+    workload: str = "a2"              # a2 | spmm — kernel family planned for
     perm: np.ndarray | None = None        # new row -> old row (None: identity)
     boundaries: np.ndarray | None = None  # cluster starts (None: rowwise)
     preprocess_s: float = 0.0             # wall time spent materializing
@@ -68,7 +84,17 @@ class Plan:
 
     @property
     def key(self) -> str:
-        return PlanCache.key(self.fingerprint, self.reuse_hint)
+        return PlanCache.key(self.fingerprint, self.reuse_hint,
+                             self.workload)
+
+    def nbytes(self) -> int:
+        """Approximate in-memory footprint (the cache's budget unit)."""
+        n = 512          # metadata floor
+        if self.perm is not None:
+            n += self.perm.nbytes
+        if self.boundaries is not None:
+            n += self.boundaries.nbytes
+        return n
 
     # -- (de)serialization ---------------------------------------------------
 
@@ -76,7 +102,7 @@ class Plan:
         meta = {
             "fingerprint": self.fingerprint, "reorder": self.reorder,
             "scheme": self.scheme, "reuse_hint": self.reuse_hint,
-            "max_cluster": self.max_cluster,
+            "max_cluster": self.max_cluster, "workload": self.workload,
             "preprocess_s": self.preprocess_s, "predicted": self.predicted,
             "measured": self.measured, "version": self.version,
         }
@@ -102,32 +128,73 @@ class Plan:
                 bounds = np.array(bounds)
         return cls(fingerprint=meta["fingerprint"], reorder=meta["reorder"],
                    scheme=meta["scheme"], reuse_hint=meta["reuse_hint"],
-                   max_cluster=meta["max_cluster"], perm=perm,
+                   max_cluster=meta["max_cluster"],
+                   workload=meta.get("workload", "a2"), perm=perm,
                    boundaries=bounds, preprocess_s=meta["preprocess_s"],
                    predicted=meta["predicted"], measured=meta["measured"],
                    version=meta["version"])
 
 
 class PlanCache:
-    """In-memory + optional on-disk plan store with hit/miss accounting."""
+    """LRU in-memory + optional on-disk plan store with hit/miss accounting
+    and a joint byte budget (``max_bytes=None`` disables eviction).
 
-    def __init__(self, path: str | None = None):
+    The budget covers files inherited from previous processes too: at
+    construction the directory is scanned and pre-existing ``.npz`` files
+    count as the coldest tier (evicted oldest-mtime-first before any live
+    entry), so a periodically-restarted server cannot grow the store by
+    ~budget per restart."""
+
+    def __init__(self, path: str | None = None,
+                 max_bytes: int | None = None):
         self.path = path
-        self._mem: dict[str, Plan] = {}
+        self.max_bytes = max_bytes
+        self._mem: OrderedDict[str, Plan] = OrderedDict()
+        self._bytes: dict[str, int] = {}
+        # pre-existing on-disk files (path → size), oldest mtime first —
+        # they count against the budget and are the first evicted
+        self._inherited: OrderedDict[str, int] = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        self._scan_disk()
+        self._enforce_budget()
+
+    def _scan_disk(self) -> None:
+        """Account the pre-existing on-disk tier: a restarted process
+        inherits the directory, so its files count against the budget
+        (oldest-mtime-first — mtime is the disk tier's LRU proxy).
+        Without this, each process would only ever evict its own writes
+        and the store would grow by ~budget per restart."""
+        if self.path is None or self.max_bytes is None \
+                or not os.path.isdir(self.path):
+            return
+        files = []
+        for name in os.listdir(self.path):
+            if not name.endswith(".npz"):
+                continue
+            p = os.path.join(self.path, name)
+            try:
+                st = os.stat(p)
+            except OSError:
+                continue
+            files.append((st.st_mtime, st.st_size, p))
+        for _, size, p in sorted(files):
+            self._inherited[p] = size
 
     @staticmethod
-    def key(fingerprint: str, reuse_hint: int) -> str:
-        return f"{fingerprint}|r{reuse_bucket(reuse_hint)}|{PLAN_CACHE_VERSION}"
+    def key(fingerprint: str, reuse_hint: int, workload: str = "a2") -> str:
+        return (f"{fingerprint}|r{reuse_bucket(reuse_hint)}|{workload}"
+                f"|{PLAN_CACHE_VERSION}")
 
     def _file(self, key: str) -> str | None:
         if self.path is None:
             return None
         return os.path.join(self.path, key.replace("|", "_") + ".npz")
 
-    def get(self, fingerprint: str, reuse_hint: int) -> Plan | None:
-        key = self.key(fingerprint, reuse_hint)
+    def get(self, fingerprint: str, reuse_hint: int,
+            workload: str = "a2") -> Plan | None:
+        key = self.key(fingerprint, reuse_hint, workload)
         plan = self._mem.get(key)
         if plan is None:
             f = self._file(key)
@@ -137,17 +204,20 @@ class PlanCache:
                 if plan.version != PLAN_CACHE_VERSION:   # stale generation
                     plan = None
                 else:
-                    self._mem[key] = plan
+                    # now accounted as a live memory entry, not an
+                    # inherited file (no double counting)
+                    self._inherited.pop(f, None)
+                    self._insert(key, plan)
         if plan is None:
             self.misses += 1
             return None
         self.hits += 1
+        self._mem.move_to_end(key)               # refresh LRU recency
         hit = dataclasses.replace(plan, from_cache=True, preprocess_s=0.0)
         return hit
 
     def put(self, plan: Plan) -> None:
-        key = self.key(plan.fingerprint, plan.reuse_hint)
-        self._mem[key] = dataclasses.replace(plan, from_cache=False)
+        key = self.key(plan.fingerprint, plan.reuse_hint, plan.workload)
         f = self._file(key)
         if f is not None:
             os.makedirs(self.path, exist_ok=True)
@@ -155,13 +225,48 @@ class PlanCache:
             with open(tmp, "wb") as fh:
                 fh.write(plan.to_npz_bytes())
             os.replace(tmp, f)
+            self._inherited.pop(f, None)    # overwritten: counted via _mem
+        self._insert(key, dataclasses.replace(plan, from_cache=False))
+
+    # -- LRU budget ----------------------------------------------------------
+
+    def _insert(self, key: str, plan: Plan) -> None:
+        self._mem[key] = plan
+        self._mem.move_to_end(key)
+        self._bytes[key] = plan.nbytes()
+        self._enforce_budget()
+
+    def _enforce_budget(self) -> None:
+        if self.max_bytes is None:
+            return
+        # inherited disk files are the coldest tier: evicted first
+        while self._inherited and self.total_bytes > self.max_bytes:
+            path, _ = self._inherited.popitem(last=False)
+            self.evictions += 1
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+        while self.total_bytes > self.max_bytes and len(self._mem) > 1:
+            key, _ = self._mem.popitem(last=False)       # LRU out
+            self._bytes.pop(key, None)
+            self.evictions += 1
+            f = self._file(key)
+            if f is not None and os.path.exists(f):
+                os.remove(f)                # the disk tier is budgeted too
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self._bytes.values()) + sum(self._inherited.values())
 
     def clear_memory(self) -> None:
         """Drop the in-memory layer (keeps disk) — used by tests to force
         an on-disk round-trip."""
         self._mem.clear()
+        self._bytes.clear()
 
     @property
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
-                "entries": len(self._mem)}
+                "entries": len(self._mem), "bytes": self.total_bytes,
+                "evictions": self.evictions}

@@ -34,16 +34,21 @@ from repro.core.clustering import (DEFAULT_MAX_CLUSTER,
                                    fixed_length_clusters,
                                    hierarchical_clusters,
                                    variable_length_clusters)
-from repro.core.formats import HostCSR, csr_cluster_from_host, csr_from_host
+from repro.core.formats import (HostCSR, bcc_from_host,
+                                csr_cluster_from_host, csr_from_host,
+                                tiled_csr_from_host)
 from repro.core.reorder import reorder as apply_reorder
-from repro.core.spgemm import (length_bins, spgemm_clusterwise_dense_binned,
+from repro.core.spgemm import (length_bins, slot_rows_host,
+                               spgemm_clusterwise_dense_binned,
                                spgemm_rowwise_dense_binned, spmm_clusterwise,
                                spmm_rowwise)
+from repro.kernels import ops as kernel_ops
 from repro.planner.cost_model import (Candidate, CostModel,
                                       DEFAULT_CANDIDATES, IDENTITY,
                                       Measurement, ScoredCandidate)
 from repro.planner.features import extract_features, fingerprint
-from repro.planner.plan_cache import DEFAULT_CACHE_DIR, Plan, PlanCache
+from repro.planner.plan_cache import (DEFAULT_CACHE_DIR, DEFAULT_MAX_BYTES,
+                                      Plan, PlanCache)
 
 __all__ = ["Planner", "plan_spgemm", "execute", "default_planner",
            "reset_default_planner"]
@@ -86,6 +91,9 @@ def _materialize(a: HostCSR, cand: Candidate,
         elif cand.scheme == "variable":
             boundaries = variable_length_clusters(
                 work, max_cluster_th=max_cluster).boundaries
+        # "pallas" needs no boundaries: its clusters are the fixed
+        # block_r-row blocks of the BCC packing (the format is built at
+        # execute time, per operand values)
     return perm, boundaries, max_cluster, time.perf_counter() - t0
 
 
@@ -172,18 +180,30 @@ class Planner:
     def plan(self, a: HostCSR, reuse_hint: int = 1, *,
              measure: bool = False,
              candidates: Optional[Sequence[Candidate]] = None,
-             use_cache: bool = True) -> Plan:
+             use_cache: bool = True, workload: str = "a2") -> Plan:
         """Choose and materialize a (reorder, scheme) plan for ``a``.
 
         The do-nothing identity plan (original order, row-wise) is the
         implicit fallback whenever no candidate amortizes, even when it
         is not in ``candidates``.
+
+        ``workload`` selects the kernel family the plan is scored (and in
+        measured mode, probed) on: ``"a2"`` — the paper's sparse×sparse
+        product; ``"spmm"`` — the square × tall-skinny dense-B workload
+        (measurements then run ``spmm_rowwise`` / ``spmm_clusterwise`` /
+        ``cluster_spmm_compact``, not A² proxies). Cache entries are
+        workload-keyed, so the two never shadow each other.
         """
         reuse_hint = max(int(reuse_hint), 1)
+        if workload not in ("a2", "spmm"):
+            raise ValueError(f"unknown workload '{workload}'")
         fp = fingerprint(a)
+        # workload-qualified key for cost-model measurements: an identity
+        # baseline timed on SpMM must only normalize SpMM probes
+        fp_w = fp if workload == "a2" else f"{fp}|{workload}"
         cands = tuple(candidates) if candidates is not None else self.candidates
         if use_cache:
-            hit = self.cache.get(fp, reuse_hint)
+            hit = self.cache.get(fp, reuse_hint, workload)
             if hit is not None:
                 # a per-call candidate restriction must hold on hits too:
                 # a cached plan outside the caller's set is replanned
@@ -194,20 +214,20 @@ class Planner:
                     return hit
                 use_cache = False
         feats = extract_features(a)
-        ranked = self.cost_model.rank(feats, reuse_hint, cands, fp)
+        ranked = self.cost_model.rank(feats, reuse_hint, cands, fp_w)
         if measure:
             # the identity baseline normalizes every other measurement —
             # probe it even when the caller's candidate set omits it
-            if self.cost_model.measurement(fp, IDENTITY) is None:
-                m = self.measurer(a, IDENTITY)
-                self.cost_model.observe(fp, IDENTITY,
+            if self.cost_model.measurement(fp_w, IDENTITY) is None:
+                m = self._call_measurer(a, IDENTITY, workload)
+                self.cost_model.observe(fp_w, IDENTITY,
                                         m.kernel_s, m.preprocess_s)
             for sc in self._shortlist(ranked):
-                if self.cost_model.measurement(fp, sc.candidate) is None:
-                    m = self.measurer(a, sc.candidate)
-                    self.cost_model.observe(fp, sc.candidate,
+                if self.cost_model.measurement(fp_w, sc.candidate) is None:
+                    m = self._call_measurer(a, sc.candidate, workload)
+                    self.cost_model.observe(fp_w, sc.candidate,
                                             m.kernel_s, m.preprocess_s)
-            ranked = self.cost_model.rank(feats, reuse_hint, cands, fp)
+            ranked = self.cost_model.rank(feats, reuse_hint, cands, fp_w)
             # evidence only: an unmeasured candidate's optimistic heuristic
             # must not outrank the measured shortlist (identity is always
             # measured, so this pool is never empty)
@@ -215,10 +235,11 @@ class Planner:
         else:
             pool = ranked
         chosen = next((s for s in pool if s.amortizes),
-                      self.cost_model.score(feats, IDENTITY, reuse_hint, fp))
+                      self.cost_model.score(feats, IDENTITY, reuse_hint,
+                                            fp_w))
 
         cand = chosen.candidate
-        art = self._artifacts.pop((fp, cand.key), None)
+        art = self._artifacts.pop((fp_w, cand.key), None)
         if art is None:
             art = _materialize(a, cand,
                                reorder_cache=self._reorders.get(fp))
@@ -226,6 +247,7 @@ class Planner:
         plan = Plan(
             fingerprint=fp, reorder=cand.reorder, scheme=cand.scheme,
             reuse_hint=reuse_hint, max_cluster=max_cluster,
+            workload=workload,
             perm=perm, boundaries=boundaries, preprocess_s=t_pre,
             predicted={
                 "kernel_rel": chosen.kernel_rel,
@@ -241,11 +263,28 @@ class Planner:
                 for s in ranked if s.measured
             })
         self._artifacts = {k: v for k, v in self._artifacts.items()
-                           if k[0] != fp}          # drop losers' artifacts
+                           if k[0] != fp_w}        # drop losers' artifacts
         self._reorders.pop(fp, None)
         if use_cache:
             self.cache.put(plan)
         return plan
+
+    def _call_measurer(self, a: HostCSR, cand: Candidate,
+                       workload: str) -> Measurement:
+        """Invoke the (possibly injected) measurer, passing ``workload``
+        only when its signature takes one — pre-existing measurers keep
+        their two-argument contract and probe the A² workload."""
+        import inspect
+        if getattr(self.measurer, "__func__", None) is Planner._measure:
+            return self._measure(a, cand, workload=workload)
+        try:
+            takes_workload = "workload" in inspect.signature(
+                self.measurer).parameters
+        except (TypeError, ValueError):
+            takes_workload = False
+        if takes_workload:
+            return self.measurer(a, cand, workload=workload)
+        return self.measurer(a, cand)
 
     def _shortlist(self, ranked: list[ScoredCandidate]
                    ) -> list[ScoredCandidate]:
@@ -273,7 +312,7 @@ class Planner:
     # -- direct measurement (default measurer) -------------------------------
 
     def _measure(self, a: HostCSR, cand: Candidate, *,
-                 reps: int = 2) -> Measurement:
+                 reps: int = 2, workload: str = "a2") -> Measurement:
         """Time preprocessing + one-call kernel of ``cand`` on ``a``.
 
         Probes of one planning pass share materialized reorders (see
@@ -281,19 +320,21 @@ class Planner:
         pays only its clustering increment.
         """
         fp = fingerprint(a)
+        fp_w = fp if workload == "a2" else f"{fp}|{workload}"
         rcache = self._reorders.setdefault(fp, {})
         perm, boundaries, max_cluster, t_pre = _materialize(
             a, cand, reorder_cache=rcache)
-        self._artifacts[(fp, cand.key)] = (perm, boundaries, max_cluster,
-                                           t_pre)
+        self._artifacts[(fp_w, cand.key)] = (perm, boundaries, max_cluster,
+                                             t_pre)
         plan = Plan(fingerprint=fp, reorder=cand.reorder, scheme=cand.scheme,
                     reuse_hint=1, max_cluster=max_cluster, perm=perm,
-                    boundaries=boundaries)
-        # square matrices probe the paper's A² workload; rectangular ones
-        # (planner supports them via execute(plan, a, b)) probe the
-        # tall-skinny SpMM instead
+                    boundaries=boundaries, workload=workload)
+        # the spmm workload (and any rectangular matrix) probes the
+        # tall-skinny dense-B kernels — spmm_rowwise / spmm_clusterwise /
+        # cluster_spmm_compact — so execute(plan, a, dense_b) choices rest
+        # on SpMM measurements, not A² proxies
         probe_b = None
-        if a.nrows != a.ncols:
+        if workload == "spmm" or a.nrows != a.ncols:
             probe_b = np.asarray(
                 np.random.default_rng(0).standard_normal((a.ncols, 32)),
                 dtype=np.float32)
@@ -350,16 +391,27 @@ class Planner:
                 if plan.scheme == "rowwise":
                     dev = csr_from_host(ap)
                     cached = ("spmm_row", dev)
+                elif plan.scheme == "pallas":
+                    bcc = bcc_from_host(ap)
+                    stream = kernel_ops.bcc_compact_stream(
+                        bcc, cover_all_blocks=True)
+                    cached = ("spmm_pallas", bcc, stream)
                 else:
                     cc = csr_cluster_from_host(
                         ap, self._bounds(plan, ap),
                         max_cluster=plan.max_cluster)
                     cached = ("spmm_cluster", cc)
                 self._exec_put(ck, cached)
-            kind, op = cached
+            kind = cached[0]
             if kind == "spmm_row":
+                op = cached[1]
                 out = lambda: spmm_rowwise(op, bd)         # noqa: E731
+            elif kind == "spmm_pallas":
+                _, bcc, stream = cached
+                out = lambda: kernel_ops.bcc_spmm_compact(  # noqa: E731
+                    bcc, bd, stream=stream)
             else:
+                op = cached[1]
                 out = lambda: spmm_clusterwise(op, bd)     # noqa: E731
             return self._unpermuted(out, perm, rows_only=True)
 
@@ -370,31 +422,51 @@ class Planner:
             else:
                 ap = _apply_plan_perm(a, plan, symmetric=False)
                 bh = b
-            dev_b = csr_from_host(bh)
-            b_lens = bh.row_nnz()
-            if plan.scheme == "rowwise":
-                dev_a = csr_from_host(ap)
-                fetch = np.zeros(dev_a.nnz_cap, dtype=np.int64)
-                fetch[: ap.nnz] = b_lens[ap.indices.astype(np.int64)]
-                bins = length_bins(fetch, pad_sentinel=dev_a.nnz_cap)
-                cached = ("row", dev_a, dev_b, bins)
+            if plan.scheme == "pallas":
+                # the Pallas Sp×Sp tier: BCC(A) × TiledCSR(B) on the MXU
+                bcc = bcc_from_host(ap)
+                tiled = tiled_csr_from_host(bh)
+                stream = kernel_ops.bcc_compact_stream(
+                    bcc, cover_all_blocks=True)
+                cached = ("pallas", bcc, tiled, stream)
             else:
-                cc = csr_cluster_from_host(ap, self._bounds(plan, ap),
-                                           max_cluster=plan.max_cluster)
-                total = int(np.asarray(cc.cluster_ptr)[-1])
-                slot_cols = np.asarray(cc.cols)[:total].astype(np.int64)
-                fetch = np.zeros(cc.slot_cap, dtype=np.int64)
-                fetch[:total] = np.where(
-                    slot_cols < bh.nrows, b_lens[
-                        np.clip(slot_cols, 0, bh.nrows - 1)], 0)
-                bins = length_bins(fetch, pad_sentinel=cc.slot_cap)
-                cached = ("cluster", cc, dev_b, bins)
+                dev_b = csr_from_host(bh)
+                b_lens = bh.row_nnz()
+                if plan.scheme == "rowwise":
+                    dev_a = csr_from_host(ap)
+                    fetch = np.zeros(dev_a.nnz_cap, dtype=np.int64)
+                    fetch[: ap.nnz] = b_lens[ap.indices.astype(np.int64)]
+                    bins = length_bins(fetch, pad_sentinel=dev_a.nnz_cap)
+                    srows = slot_rows_host(np.asarray(dev_a.indptr),
+                                           dev_a.nnz_cap)
+                    cached = ("row", dev_a, dev_b, bins, srows)
+                else:
+                    cc = csr_cluster_from_host(ap, self._bounds(plan, ap),
+                                               max_cluster=plan.max_cluster)
+                    total = int(np.asarray(cc.cluster_ptr)[-1])
+                    slot_cols = np.asarray(cc.cols)[:total].astype(np.int64)
+                    fetch = np.zeros(cc.slot_cap, dtype=np.int64)
+                    fetch[:total] = np.where(
+                        slot_cols < bh.nrows, b_lens[
+                            np.clip(slot_cols, 0, bh.nrows - 1)], 0)
+                    bins = length_bins(fetch, pad_sentinel=cc.slot_cap)
+                    sclust = slot_rows_host(np.asarray(cc.cluster_ptr),
+                                            cc.slot_cap)
+                    cached = ("cluster", cc, dev_b, bins, sclust)
             self._exec_put(ck, cached)
-        kind, op_a, op_b, bins = cached
-        if kind == "row":
-            out = lambda: spgemm_rowwise_dense_binned(op_a, op_b, bins)  # noqa: E731
+        kind = cached[0]
+        if kind == "pallas":
+            _, bcc, tiled, stream = cached
+            out = lambda: kernel_ops.bcc_spgemm_tiled(  # noqa: E731
+                bcc, tiled, stream=stream)
+        elif kind == "row":
+            _, op_a, op_b, bins, srows = cached
+            out = lambda: spgemm_rowwise_dense_binned(  # noqa: E731
+                op_a, op_b, bins, srows)
         else:
-            out = lambda: spgemm_clusterwise_dense_binned(op_a, op_b, bins)  # noqa: E731
+            _, op_a, op_b, bins, sclust = cached
+            out = lambda: spgemm_clusterwise_dense_binned(  # noqa: E731
+                op_a, op_b, bins, sclust)
         return self._unpermuted(out, perm, rows_only=not squared)
 
     def _exec_put(self, key: str, packed: tuple) -> None:
@@ -439,11 +511,13 @@ _DEFAULT: Optional[Planner] = None
 
 def default_planner() -> Planner:
     """The process-wide serving planner: plans persist across processes
-    in ``experiments/plan_cache/`` (gitignored, versioned keys). Construct
-    ``Planner()`` directly for an in-memory-only instance."""
+    in ``experiments/plan_cache/`` (gitignored, versioned keys) under an
+    LRU byte budget — the on-disk store no longer grows unboundedly.
+    Construct ``Planner()`` directly for an in-memory-only instance."""
     global _DEFAULT
     if _DEFAULT is None:
-        _DEFAULT = Planner(cache=PlanCache(path=DEFAULT_CACHE_DIR))
+        _DEFAULT = Planner(cache=PlanCache(path=DEFAULT_CACHE_DIR,
+                                           max_bytes=DEFAULT_MAX_BYTES))
     return _DEFAULT
 
 

@@ -58,6 +58,8 @@ class SpGEMMResponse:
     fingerprint: str
     reorder: str
     scheme: str
+    workload: str              # a2 | spmm — which kernel family was planned
+    kernel_path: str           # "pallas" (MXU tiled kernel) or "xla"
     plan_cache_hit: bool
     plan_s: float              # planning + preprocessing wall time (0-ish on hit)
     execute_s: float
@@ -82,11 +84,19 @@ class SpGEMMServer:
     def submit(self, a: HostCSR,
                b: HostCSR | np.ndarray | None = None, *,
                reuse_hint: Optional[int] = None) -> SpGEMMResponse:
-        """Plan (or fetch the cached plan for) ``a``, then execute a·b."""
+        """Plan (or fetch the cached plan for) ``a``, then execute a·b.
+
+        A dense ``b`` routes the request through the planner's ``spmm``
+        workload — its plan is scored (and measured) on the tall-skinny
+        kernel menu, cached separately from the same pattern's A² plan.
+        """
         self.requests += 1
         hint = self.default_reuse_hint if reuse_hint is None else reuse_hint
+        workload = "spmm" if (b is not None
+                              and not isinstance(b, HostCSR)) else "a2"
         t0 = time.perf_counter()
-        plan = self.planner.plan(a, hint, measure=self.measure)
+        plan = self.planner.plan(a, hint, measure=self.measure,
+                                 workload=workload)
         t1 = time.perf_counter()
         out = self.planner.execute(plan, a, b)
         t2 = time.perf_counter()
@@ -94,7 +104,9 @@ class SpGEMMServer:
             self.plan_hits += 1
         return SpGEMMResponse(
             result=out, fingerprint=plan.fingerprint, reorder=plan.reorder,
-            scheme=plan.scheme, plan_cache_hit=plan.from_cache,
+            scheme=plan.scheme, workload=workload,
+            kernel_path="pallas" if plan.scheme == "pallas" else "xla",
+            plan_cache_hit=plan.from_cache,
             plan_s=t1 - t0, execute_s=t2 - t1)
 
     @property

@@ -121,6 +121,113 @@ def test_cache_disk_round_trip(tmp_path):
     assert p3 is not None and p3.scheme == p1.scheme
 
 
+def _plan_of_size(i: int, nrows: int, reuse: int = 10) -> Plan:
+    return Plan(fingerprint=f"fp-{i}", reorder="rcm", scheme="fixed",
+                reuse_hint=reuse, perm=np.arange(nrows),
+                boundaries=np.arange(0, nrows, 8))
+
+
+def test_cache_lru_byte_budget_evicts_oldest():
+    nrows = 1024                      # ≈ 8 KiB perm + 1 KiB boundaries
+    per = _plan_of_size(0, nrows).nbytes()
+    cache = PlanCache(max_bytes=3 * per)
+    for i in range(5):
+        cache.put(_plan_of_size(i, nrows))
+    assert cache.stats["entries"] == 3
+    assert cache.stats["evictions"] == 2
+    assert cache.total_bytes <= 3 * per
+    # the two oldest are gone, the three newest serve
+    assert cache.get("fp-0", 10) is None and cache.get("fp-1", 10) is None
+    for i in (2, 3, 4):
+        assert cache.get(f"fp-{i}", 10) is not None
+
+
+def test_cache_lru_get_refreshes_recency():
+    nrows = 512
+    per = _plan_of_size(0, nrows).nbytes()
+    cache = PlanCache(max_bytes=2 * per)
+    cache.put(_plan_of_size(0, nrows))
+    cache.put(_plan_of_size(1, nrows))
+    assert cache.get("fp-0", 10) is not None   # touch 0 → 1 becomes LRU
+    cache.put(_plan_of_size(2, nrows))
+    assert cache.get("fp-1", 10) is None       # 1 evicted, not 0
+    assert cache.get("fp-0", 10) is not None
+
+
+def test_cache_lru_evicts_disk_tier_too(tmp_path):
+    nrows = 512
+    per = _plan_of_size(0, nrows).nbytes()
+    cache = PlanCache(path=str(tmp_path / "plans"), max_bytes=2 * per)
+    for i in range(4):
+        cache.put(_plan_of_size(i, nrows))
+    files = list((tmp_path / "plans").glob("*.npz"))
+    assert len(files) == 2                     # evicted keys removed on disk
+    # and a fresh cache object only sees the survivors
+    cache2 = PlanCache(path=str(tmp_path / "plans"))
+    assert cache2.get("fp-0", 10) is None
+    assert cache2.get("fp-3", 10) is not None
+
+
+def test_cache_budget_bounds_disk_across_restarts(tmp_path):
+    """A restarted process inherits the on-disk tier: its budget must
+    apply to pre-existing files too (oldest-mtime-first), or the store
+    grows by ~budget per restart."""
+    import os
+    nrows = 512
+    per = _plan_of_size(0, nrows).nbytes()
+    path = str(tmp_path / "plans")
+    c1 = PlanCache(path=path, max_bytes=2 * per)
+    c1.put(_plan_of_size(0, nrows))
+    c1.put(_plan_of_size(1, nrows))
+    os.utime(c1._file(PlanCache.key("fp-0", 10)), (1, 1))   # fp-0 is oldest
+    # "restart": a fresh cache writes two more plans under the same budget
+    c2 = PlanCache(path=path, max_bytes=2 * per)
+    c2.put(_plan_of_size(2, nrows))
+    c2.put(_plan_of_size(3, nrows))
+    files = list((tmp_path / "plans").glob("*.npz"))
+    assert len(files) <= 3                   # not 4: inherited files count
+    # and a third restart prunes down to the budget before serving
+    c3 = PlanCache(path=path, max_bytes=per)
+    assert len(list((tmp_path / "plans").glob("*.npz"))) <= 1
+    assert c3.get("fp-0", 10) is None        # the oldest never survives
+
+
+def test_cache_unbudgeted_never_evicts():
+    cache = PlanCache()
+    for i in range(50):
+        cache.put(_plan_of_size(i, 256))
+    assert cache.stats["entries"] == 50 and cache.stats["evictions"] == 0
+
+
+def test_cache_workload_keys_are_separate():
+    a = _scrambled_caveman()
+    planner = Planner()
+    p_a2 = planner.plan(a, reuse_hint=10, workload="a2")
+    p_spmm = planner.plan(a, reuse_hint=10, workload="spmm")
+    assert not p_spmm.from_cache           # a2 plan must not shadow spmm
+    assert p_spmm.workload == "spmm" and p_a2.workload == "a2"
+    assert planner.plan(a, reuse_hint=10, workload="spmm").from_cache
+
+
+def test_measured_spmm_workload_probes_spmm_kernels():
+    """Tall-skinny coverage: measured mode under workload='spmm' must back
+    execute(plan, a, dense_b) with SpMM measurements (keyed separately
+    from the A² probes of the same pattern)."""
+    a = FAMILIES["blockdiag"]()
+    planner = Planner(measure_top=2)
+    plan = planner.plan(a, reuse_hint=20, measure=True, workload="spmm")
+    assert "original+rowwise" in plan.measured
+    fp = fingerprint(a)
+    # the measurement landed under the workload-qualified key...
+    assert planner.cost_model.measurement(f"{fp}|spmm", IDENTITY) is not None
+    # ...and did not masquerade as an A² measurement
+    assert planner.cost_model.measurement(fp, IDENTITY) is None
+    bd = np.random.default_rng(3).standard_normal(
+        (a.ncols, 16)).astype(np.float32)
+    np.testing.assert_allclose(planner.execute(plan, a, bd),
+                               a.to_dense() @ bd, rtol=1e-3, atol=1e-3)
+
+
 def test_plan_npz_round_trip_preserves_metadata():
     plan = Plan(fingerprint="fp1-abc", reorder="rcm", scheme="variable",
                 reuse_hint=7, max_cluster=8,
