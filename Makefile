@@ -3,8 +3,8 @@
 PY        ?= python
 PYPATH    := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow bench-quick bench-preprocess bench-planner \
-        bench-trajectory lint
+.PHONY: test test-slow bench-quick bench-kernels bench-preprocess \
+        bench-planner bench-trajectory lint
 
 ## tier-1 verification (the command CI runs; pytest.ini excludes -m slow)
 test:
@@ -18,6 +18,13 @@ test-slow:
 ## the Pallas-vs-XLA Sp×Sp comparison
 bench-quick:
 	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --tier quick --only fig2,traffic,kernels --no-artifact
+
+## the kernels table standalone, interpret-mode, with the counter-only
+## acceptance gates (grid-steps-per-MXU, A-refetch ratio, routed B
+## traffic, bf16 store ratio) — deterministic, checkable off-TPU in
+## tier-1 time budget
+bench-kernels:
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.bench_kernels --tier quick --gate
 
 ## segmented-CSR preprocessing engine vs the retained loop references
 bench-preprocess:

@@ -14,19 +14,35 @@ matrix:
   the footprint-optimal path per matrix over the planner's pallas reorder
   menu (original/rcm) — the oracle the cost model's ``tile128_fill`` gate
   approximates — its geomean is the acceptance gate (≥ 1.2×).
+* **compacted-grid counters** (the v2 kernels' acceptance gates): grid
+  steps per MXU issue of the live-pair stream (≤ 1.1 — only per-block
+  zero-init sentinels and tail pads separate them), and the A-slab bytes
+  ratio of the PR-3 padded ``(nnb, S)`` grid over the compacted grid
+  (≥ 2× — the padded grid DMAs one A slab per grid step, dead or not;
+  the compacted grid fetches each slab once per stream step). The
+  ``a_bytes_stream_legacy`` column keeps the PR-3-era accounting (one A
+  fetch per stream step) alongside the per-grid-step truth — the old
+  counter under-reported the padded grid's A traffic ``nnb``-fold.
+* **bf16 tile store**: B bytes of the fp32 tile store over the bf16 one
+  (≈ 2× — same live lattice, half the bytes per slot).
 * **padding occupancy**: fill of B's live tile lattice and the A-side BCC
   padding fraction — the two waste terms the cost model trades off.
-* **gather volume**: per-element gathers of the XLA path vs MXU-step
-  count of the compact stream.
 * wall-clock Pallas-vs-XLA speedup on a TPU backend (interpret mode is
   correctness-only and orders of magnitude slow, so CPU runs validate one
   small matrix against ``spgemm_reference`` instead of timing).
 
 ``bcc_kernel_occupancy_and_vmem`` — the PR-1-era SpMM occupancy table
 (padded-grid vs compact-stream waste, VMEM budget check), unchanged.
+
+Standalone (CI-checkable off-TPU): ``make bench-kernels`` runs this module
+directly with ``--gate``, asserting the counter-only acceptance thresholds
+— the counters come from the formats, not wall-clocks, so the gate is
+deterministic in tier-1 time budget.
 """
 from __future__ import annotations
 
+import argparse
+import sys
 import time
 
 import jax.numpy as jnp
@@ -35,7 +51,8 @@ import numpy as np
 from repro.benchlib import representative_subset, time_fn
 from repro.core.clustering import hierarchical_clusters
 from repro.core.formats import (bcc_from_host, csr_from_host,
-                                tiled_csr_from_host, tiled_live_tiles)
+                                live_pair_counters, tiled_csr_from_host,
+                                tiled_live_tiles)
 from repro.core.reorder import reorder
 from repro.core.spgemm import (b_bytes_rowwise_binned, b_bytes_tiled,
                                flops_spgemm, length_bins, slot_rows_host,
@@ -47,6 +64,12 @@ from benchmarks.common import geomean, print_csv, tier_specs
 
 VMEM_BUDGET = 16 * 2**20
 BLOCK_R, BLOCK_K, BN = 8, 128, 128
+
+# counter-only acceptance thresholds (--gate / make bench-kernels)
+GATE_STEPS_PER_MXU = 1.1          # compacted grid: ≤ this, geomean
+GATE_A_BYTES_RATIO = 2.0          # padded-grid A bytes / compacted, ≥
+GATE_B_ROUTED_RATIO = 1.2         # routed B-traffic ratio vs XLA, ≥
+GATE_BF16_RATIO = 1.9             # fp32 / bf16 B tile store bytes, ≥
 
 
 def _xla_b_bytes(a) -> int:
@@ -66,6 +89,7 @@ def _spgemm_pallas_vs_xla(tier: str) -> dict:
     specs = tier_specs(tier)
     rows = []
     ratios_tiled, ratios_routed = [], []
+    steps_per_mxu, a_ratios, bf16_ratios = [], [], []
     smallest = None              # (nnz, HostCSR) for the parity check below
     for spec in specs:
         a = generate(spec)
@@ -81,6 +105,8 @@ def _spgemm_pallas_vs_xla(tier: str) -> dict:
                 best_name, best_b, best_live, best_mat = name, tb, live, ar
         bcc = bcc_from_host(best_mat, block_r=BLOCK_R, block_k=BLOCK_K)
         stream = ops.bcc_compact_stream(bcc, cover_all_blocks=True)
+        tiled_b = tiled_csr_from_host(best_mat, BLOCK_K, BN)
+        pairs = ops.build_live_pairs(bcc, tiled_b, stream)
         routed_b = min(xla_b, best_b)
         ratio_tiled = xla_b / max(best_b, 1)
         ratio_routed = xla_b / max(routed_b, 1)
@@ -88,6 +114,25 @@ def _spgemm_pallas_vs_xla(tier: str) -> dict:
         ratios_routed.append(ratio_routed)
         tile_fill = a.nnz / max(best_live * BLOCK_K * BN, 1)
         a_pad = 1 - a.nnz / max(stream[2].size, 1)
+        # A-slab traffic: the padded (nnb, S) grid DMAs one slab per grid
+        # step — dead pair or not. The pre-compaction counter charged one
+        # fetch per *stream step* (a_bytes_stream_legacy), under-reporting
+        # the padded grid's A traffic nnb-fold; both are reported, the
+        # per-grid-step figure is what the compacted ratio gates on.
+        slab_bytes = BLOCK_R * BLOCK_K * 4
+        s_steps = int(stream[0].shape[0])
+        padded_steps = tiled_b.nnb * s_steps
+        a_bytes_padded = padded_steps * slab_bytes
+        a_bytes_legacy = s_steps * slab_bytes
+        cnt = live_pair_counters(pairs, block_r=BLOCK_R, block_k=BLOCK_K)
+        a_ratio = a_bytes_padded / max(cnt["a_bytes"], 1)
+        # bf16 tile store: measured from the actually-packed stores (not
+        # re-derived from the byte formula), so a regression in the bf16
+        # packing plumbing shows up as a gate failure
+        tiled_b16 = tiled_csr_from_host(best_mat, BLOCK_K, BN,
+                                        dtype=jnp.bfloat16)
+        bf16_ratio = (tiled_b.nbytes_tiles()
+                      / max(tiled_b16.nbytes_tiles(), 1))
         row = {
             "matrix": spec.name,
             "xla_b_bytes_per_flop": xla_b / fl,
@@ -99,13 +144,24 @@ def _spgemm_pallas_vs_xla(tier: str) -> dict:
             "b_tile_fill": tile_fill,
             "a_slab_pad_frac": a_pad,
             "gathers_xla": a.nnz,
-            "mxu_steps": int(stream[0].shape[0]),
+            "grid_steps_padded": padded_steps,
+            "grid_steps_compact": cnt["grid_steps"],
+            "mxu_issues": cnt["mxu_issues"],
+            "steps_per_mxu": cnt["steps_per_mxu"],
+            "a_bytes_padded_grid": a_bytes_padded,
+            "a_bytes_stream_legacy": a_bytes_legacy,
+            "a_bytes_compact": cnt["a_bytes"],
+            "a_bytes_ratio": a_ratio,
+            "b_bytes_bf16_ratio": bf16_ratio,
         }
+        steps_per_mxu.append(cnt["steps_per_mxu"])
+        a_ratios.append(a_ratio)
+        bf16_ratios.append(bf16_ratio)
         if ops.on_tpu():
             # compiled wall-clock — only meaningful on the real MXU
-            tiled_b_op = tiled_csr_from_host(best_mat, BLOCK_K, BN)
             t_pal = time_fn(
-                lambda: ops.bcc_spgemm_tiled(bcc, tiled_b_op, stream=stream))
+                lambda: ops.bcc_spgemm_tiled(bcc, tiled_b, stream=stream,
+                                             pairs=pairs))
             dev = csr_from_host(a)
             bins = length_bins(a.row_nnz()[a.indices],
                                pad_sentinel=dev.nnz_cap)
@@ -116,20 +172,31 @@ def _spgemm_pallas_vs_xla(tier: str) -> dict:
         rows.append(row)
     print_csv(rows, "spgemm_pallas_vs_xla_b_traffic")
 
-    # interpret-mode parity check (CPU CI): one small matrix end-to-end
+    # interpret-mode parity check (CPU CI): one small matrix end-to-end —
+    # fp32 compacted grid (bit-level vs reference tolerance) and the bf16
+    # tile store (documented looser bound)
     sm = _principal_submatrix(smallest[1], 192)
     bcc = bcc_from_host(sm, block_r=BLOCK_R, block_k=BLOCK_K)
     tiled = tiled_csr_from_host(sm, BLOCK_K, BN)
+    want = spgemm_reference(sm, sm)
     t0 = time.perf_counter()
     got = np.asarray(ops.bcc_spgemm_tiled(bcc, tiled, interpret=True))
     t_interp = time.perf_counter() - t0
-    err = float(np.abs(got - spgemm_reference(sm, sm)).max())
+    err = float(np.abs(got - want).max())
+    tiled16 = tiled_csr_from_host(sm, BLOCK_K, BN, dtype=jnp.bfloat16)
+    got16 = np.asarray(ops.bcc_spgemm_tiled(bcc, tiled16, interpret=True))
+    scale = max(float(np.abs(want).max()), 1e-9)
+    err16 = float(np.abs(got16 - want).max()) / scale
     summary = {
         "b_bytes_ratio_tiled_gm": geomean(ratios_tiled),
         "b_bytes_ratio_routed_gm": geomean(ratios_routed),
         "routed_pallas_pct": 100.0 * sum(r["routed"] == "pallas"
                                          for r in rows) / max(len(rows), 1),
+        "grid_steps_per_mxu_gm": geomean(steps_per_mxu),
+        "a_bytes_ratio_compact_gm": geomean(a_ratios),
+        "b_bytes_bf16_ratio_gm": geomean(bf16_ratios),
         "interp_parity_max_err": err,
+        "interp_parity_bf16_rel_err": err16,
         "interp_validate_s": t_interp,
     }
     if ops.on_tpu():
@@ -199,5 +266,41 @@ def run(tier: str = "default") -> dict:
             "occupancy": occ["rows"]}
 
 
+def check_gates(summary: dict) -> list[str]:
+    """Counter-only acceptance gates — deterministic (no wall-clocks), so
+    they hold off-TPU in interpret mode. Returns failure strings."""
+    checks = [
+        ("grid_steps_per_mxu_gm", "<=", GATE_STEPS_PER_MXU),
+        ("a_bytes_ratio_compact_gm", ">=", GATE_A_BYTES_RATIO),
+        ("b_bytes_ratio_routed_gm", ">=", GATE_B_ROUTED_RATIO),
+        ("b_bytes_bf16_ratio_gm", ">=", GATE_BF16_RATIO),
+    ]
+    fails = []
+    for key, op, thr in checks:
+        v = summary.get(key)
+        if v is None or not np.isfinite(v):
+            fails.append(f"{key}: missing")
+        elif (v > thr) if op == "<=" else (v < thr):
+            fails.append(f"{key}: {v:.4g} violates {op} {thr}")
+    return fails
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--tier", choices=["quick", "default", "full"],
+                    default="quick")
+    ap.add_argument("--gate", action="store_true",
+                    help="fail on counter-gate violations (CI mode)")
+    args = ap.parse_args()
+    res = run(args.tier)
+    if args.gate:
+        fails = check_gates(res["summary"])
+        if fails:
+            for f in fails:
+                print(f"# GATE FAIL {f}")
+            sys.exit(1)
+        print("# all kernel counter gates pass")
+
+
 if __name__ == "__main__":
-    run()
+    main()

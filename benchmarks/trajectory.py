@@ -60,6 +60,13 @@ _GATED = [
     # gather path (and compiled wall-clock, present on TPU backends only)
     ("kernels", ("b_bytes_ratio_routed_gm",), True),
     ("kernels", ("pallas_wallclock_speedup_gm",), True),
+    # compacted-grid counters (ISSUE 4): grid steps per MXU issue of the
+    # live-pair stream (lower is better — sentinel/pad overhead only),
+    # the padded-grid/compacted A-slab byte ratio and the fp32/bf16 B
+    # tile store ratio (higher is better)
+    ("kernels", ("grid_steps_per_mxu_gm",), False),
+    ("kernels", ("a_bytes_ratio_compact_gm",), True),
+    ("kernels", ("b_bytes_bf16_ratio_gm",), True),
 ]
 
 
@@ -154,6 +161,8 @@ def _sum_kernels(res: dict) -> dict:
     s = res.get("summary", {})
     keys = ("b_bytes_ratio_tiled_gm", "b_bytes_ratio_routed_gm",
             "routed_pallas_pct", "interp_parity_max_err",
+            "interp_parity_bf16_rel_err", "grid_steps_per_mxu_gm",
+            "a_bytes_ratio_compact_gm", "b_bytes_bf16_ratio_gm",
             "pallas_wallclock_speedup_gm")
     return {k: float(s[k]) for k in keys if k in s}
 

@@ -41,6 +41,10 @@ __all__ = [
     "tiled_csr_from_host",
     "tiled_csr_from_host_reference",
     "tiled_live_tiles",
+    "select_block_k",
+    "live_pair_stream",
+    "live_pair_stream_reference",
+    "live_pair_counters",
     "csr_cluster_nbytes_exact",
     "csr_cluster_nbytes_exact_reference",
     "csr_nbytes",
@@ -695,6 +699,203 @@ def tiled_live_tiles(h: HostCSR, block_k: int = 128, bn: int = 128) -> int:
     nnb = (h.ncols + bn - 1) // bn
     key = (rows // block_k) * nnb + h.indices.astype(np.int64) // bn
     return int(np.unique(key).size)
+
+
+def select_block_k(h: HostCSR, *, bn: int = 128,
+                   candidates: Sequence[int] = (128, 256, 512),
+                   step_overhead_bytes: int = 6144) -> int:
+    """Heuristic k-tile height for the tiled Sp×Sp path.
+
+    The trade-off (ROADMAP's adaptive ``block_k`` item): taller tiles merge
+    k-adjacent live tiles — fewer grid steps and fewer A-slab fetches per
+    contraction — but dilute live-tile fill, inflating B's streamed bytes.
+    Score each candidate by its B footprint plus a per-live-tile step cost
+    (one A slab DMA + grid-step overhead, ``step_overhead_bytes`` in byte
+    units) and keep the cheapest. All candidates are lane-aligned multiples
+    of 128 so the A slab (whose *lane* dimension is ``block_k``) stays
+    MXU-tileable; 128 wins whenever fill is low (``features.tile128_fill``
+    is the planner-facing proxy of the same quantity).
+    """
+    best_bk, best_score = None, None
+    for bk in candidates:
+        if bk % 128:
+            raise ValueError(f"block_k {bk} not a multiple of 128")
+        live = tiled_live_tiles(h, bk, bn)
+        score = live * bk * bn * 4 + live * step_overhead_bytes
+        if best_score is None or score < best_score:
+            best_bk, best_score = bk, score
+    return int(best_bk)
+
+
+# ---------------------------------------------------------------------------
+# live-pair compacted grid (the Sp×Sp kernel's sparsity-compacted stream)
+# ---------------------------------------------------------------------------
+
+
+def live_pair_stream(block_ids, tile_ids, table, *, nnb: int, nblocks: int,
+                     step_live=None, pad_to: int = 8
+                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                np.ndarray]:
+    """Intersect A's compact (block, k-tile) stream with B's tile table.
+
+    The PR-3 kernels walk a dense ``(nnb, S)`` grid — every (stream step,
+    column strip) pair costs a grid step and an A-slab DMA even when B's
+    tile there is dead. This builder emits only the *live* pairs::
+
+        slot[s, j] = table[tile_ids[s] * nnb + j]  > 0
+
+    ordered by (block, s, j) — so each output row strip's accumulation
+    runs are consecutive (one C write-back per block) and pairs sharing a
+    stream step are adjacent (Pallas elides the repeated A-slab DMA: A is
+    fetched once per stream step total, not ``nnb`` times).
+
+    Every block with no live pair still gets one zero-slot sentinel at its
+    first stream step — the ``cover_all_blocks`` convention carried to the
+    pair grid, so the kernel zero-initializes every C strip it owns. The
+    stream is tail-padded to a multiple of ``pad_to`` with zero-slot
+    repeats of the last pair (same block → no re-init, slot 0 → no MXU).
+
+    Args:
+      block_ids / tile_ids: the (S,)-shaped compact A stream
+        (``bcc_compact_stream(a, cover_all_blocks=True)``) — every block
+        in ``range(nblocks)`` must appear.
+      table: B's flat (nkb * nnb,) tile table (0 = dead).
+      step_live: optional (S,) bool — False marks synthetic stream steps
+        (``cover_all_blocks`` zero slabs, tail padding) whose pairs would
+        multiply a zero A slab; they are dropped from the pair stream.
+
+    Returns ``(blocks, js, slots, a_idx)`` int32 arrays of equal length:
+    output strip, column strip, B tile slot (0 = no MXU issue) and A
+    stream index of each grid step.
+    """
+    block_ids = np.asarray(block_ids, dtype=np.int64)
+    tile_ids = np.asarray(tile_ids, dtype=np.int64)
+    table = np.asarray(table, dtype=np.int32)
+    s_total = block_ids.shape[0]
+    if step_live is None:
+        step_live = np.ones(s_total, dtype=bool)
+    step_live = np.asarray(step_live, dtype=bool)
+    tbl = table.reshape(-1, nnb)
+    # chunked intersection: the dense (S, nnb) expansion is exactly the
+    # padded-grid footprint this builder exists to kill — bound the
+    # transient to ~16 MiB of int32 per chunk, concatenating only the
+    # live pairs (chunks are s-ascending, so (s, j) order is preserved)
+    chunk = max(1, (1 << 22) // max(nnb, 1))
+    s_parts, j_parts, slot_parts = [], [], []
+    for lo in range(0, s_total, chunk):
+        hi = min(lo + chunk, s_total)
+        slots_c = tbl[tile_ids[lo:hi]]                    # (chunk, nnb)
+        live_c = (slots_c > 0) & step_live[lo:hi, None]
+        sc, jc = np.nonzero(live_c)      # row-major: (s, j) ascending
+        s_parts.append(sc + lo)
+        j_parts.append(jc)
+        slot_parts.append(slots_c[sc, jc].astype(np.int64))
+    s_idx = (np.concatenate(s_parts) if s_parts
+             else np.empty(0, np.int64))
+    j_idx = (np.concatenate(j_parts) if j_parts
+             else np.empty(0, np.int64))
+    slot_vals = (np.concatenate(slot_parts) if slot_parts
+                 else np.empty(0, np.int64))
+    # first stream step of every block (sentinel anchor)
+    first = boundary_mask(block_ids)
+    first_step = np.full(nblocks, -1, dtype=np.int64)
+    first_step[block_ids[first]] = np.flatnonzero(first)
+    covered = np.zeros(nblocks, dtype=bool)
+    covered[block_ids[s_idx]] = True
+    missing = np.flatnonzero(~covered)
+    if missing.size and (first_step[missing] < 0).any():
+        raise ValueError("stream must cover every block "
+                         "(use cover_all_blocks=True)")
+    sen_s = first_step[missing]
+    # merge live pairs and sentinels in (s, j) order — block order follows
+    # because block_ids is non-decreasing; sentinels take j = 0 and cannot
+    # collide with a live (s, 0) pair (their block has no live pair at all)
+    a_s = np.concatenate([s_idx, sen_s])
+    a_j = np.concatenate([j_idx, np.zeros(sen_s.size, dtype=np.int64)])
+    a_slot = np.concatenate([slot_vals,
+                             np.zeros(sen_s.size, dtype=np.int64)])
+    order = np.argsort(a_s * nnb + a_j, kind="stable")
+    a_s, a_j, a_slot = a_s[order], a_j[order], a_slot[order]
+    pad = (-a_s.size) % pad_to
+    if pad:
+        a_s = np.concatenate([a_s, np.repeat(a_s[-1], pad)])
+        a_j = np.concatenate([a_j, np.repeat(a_j[-1], pad)])
+        a_slot = np.concatenate([a_slot, np.zeros(pad, dtype=np.int64)])
+    return (block_ids[a_s].astype(np.int32), a_j.astype(np.int32),
+            a_slot.astype(np.int32), a_s.astype(np.int32))
+
+
+def live_pair_stream_reference(block_ids, tile_ids, table, *, nnb: int,
+                               nblocks: int, step_live=None, pad_to: int = 8
+                               ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                          np.ndarray]:
+    """Loop reference for :func:`live_pair_stream` (test oracle)."""
+    block_ids = np.asarray(block_ids, dtype=np.int64)
+    tile_ids = np.asarray(tile_ids, dtype=np.int64)
+    table = np.asarray(table, dtype=np.int64)
+    s_total = block_ids.shape[0]
+    if step_live is None:
+        step_live = np.ones(s_total, dtype=bool)
+    blocks, js, slots, a_idx = [], [], [], []
+    pair_blocks = set()
+    for s in range(s_total):
+        if not step_live[s]:
+            continue
+        for j in range(nnb):
+            slot = int(table[int(tile_ids[s]) * nnb + j])
+            if slot > 0:
+                blocks.append(int(block_ids[s]))
+                js.append(j)
+                slots.append(slot)
+                a_idx.append(s)
+                pair_blocks.add(int(block_ids[s]))
+    # sentinel per pair-less block, at the block's first stream step
+    for b in range(nblocks):
+        if b in pair_blocks:
+            continue
+        for s in range(s_total):
+            if int(block_ids[s]) == b:
+                blocks.append(b)
+                js.append(0)
+                slots.append(0)
+                a_idx.append(s)
+                break
+        else:
+            raise ValueError("stream must cover every block "
+                             "(use cover_all_blocks=True)")
+    order = np.argsort(np.asarray(a_idx, dtype=np.int64) * nnb
+                       + np.asarray(js, dtype=np.int64), kind="stable")
+    blocks = [blocks[i] for i in order]
+    js = [js[i] for i in order]
+    slots = [slots[i] for i in order]
+    a_idx = [a_idx[i] for i in order]
+    pad = (-len(blocks)) % pad_to
+    for _ in range(pad):
+        blocks.append(blocks[-1])
+        js.append(js[-1])
+        slots.append(0)
+        a_idx.append(a_idx[-1])
+    return (np.asarray(blocks, np.int32), np.asarray(js, np.int32),
+            np.asarray(slots, np.int32), np.asarray(a_idx, np.int32))
+
+
+def live_pair_counters(pairs, *, block_r: int, block_k: int,
+                       value_bytes: int = 4) -> dict:
+    """Traffic counters of a live-pair stream (the benchmark's gated
+    metrics): grid steps, MXU issues (live slots), and A slab bytes after
+    the Pallas DMA elision — consecutive grid steps sharing an A stream
+    index fetch the slab once."""
+    blocks, js, slots, a_idx = (np.asarray(p) for p in pairs)
+    grid_steps = int(a_idx.shape[0])
+    mxu_issues = int((slots > 0).sum())
+    a_fetches = int(boundary_mask(a_idx).sum()) if grid_steps else 0
+    return {
+        "grid_steps": grid_steps,
+        "mxu_issues": mxu_issues,
+        "a_fetches": a_fetches,
+        "a_bytes": a_fetches * block_r * block_k * value_bytes,
+        "steps_per_mxu": grid_steps / max(mxu_issues, 1),
+    }
 
 
 # ---------------------------------------------------------------------------

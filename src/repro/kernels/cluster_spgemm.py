@@ -43,6 +43,31 @@ Two variants, differing in where B lives:
 Accumulator re-initialization on block-id change mirrors
 ``cluster_spmm_compact``; dead table slots predicate away their MXU issue
 with ``pl.when`` so fully-sparse B column strips cost no FLOPs.
+
+Sparsity-compacted grid (v2 — the ``*_pairs`` kernels)
+------------------------------------------------------
+
+The ``(nnb, S)`` grid above still *walks* every dead pair: a grid step and
+an A-slab DMA per (stream step, column strip) whose B tile is dead, and A
+re-fetched ``nnb`` times unconditionally. The v2 kernels take the
+host-compacted stream of live ``(s, j, slot)`` triples
+(:func:`repro.core.formats.live_pair_stream`, ordered (block, s, j)) and
+run a flat 1-D grid over it:
+
+  * grid steps ≈ actual MXU contractions (+ one zero-slot sentinel per
+    pair-less block, the ``cover_all_blocks`` convention);
+  * the C output window is the block's whole ``(block_r, nnb*bn)`` row
+    strip, zero-initialized once on block entry — so a fully-dead
+    ``(block, j)`` strip costs nothing yet still reads back zero;
+  * pairs sharing a stream step are adjacent, so Pallas elides the
+    repeated A DMA: each A slab is fetched once per stream step total.
+
+Variants: ``cluster_spgemm_pairs`` (streamed B, one tile DMA per step),
+``cluster_spgemm_pairs_resident`` (B store pinned in VMEM),
+``cluster_spgemm_pairs_db`` (streamed B behind a two-slot VMEM scratch
+with manual async copies — the tile for step t+1 is in flight while step
+t contracts). All three accept fp32 or bf16 B tiles; bf16 halves B's HBM
+bytes and is upcast at the MXU input, accumulation stays fp32.
 """
 from __future__ import annotations
 
@@ -56,8 +81,14 @@ from jax.experimental.pallas import tpu as pltpu
 # jax < 0.5 ships this as TPUCompilerParams
 _CompilerParams = getattr(pltpu, "CompilerParams",
                           getattr(pltpu, "TPUCompilerParams", None))
+# jax < 0.5 spells the any-space constant via the TPUMemorySpace enum
+_ANY = getattr(pltpu, "ANY", None)
+if _ANY is None:                                      # pragma: no cover
+    _ANY = pltpu.TPUMemorySpace.ANY
 
-__all__ = ["cluster_spgemm_tiled", "cluster_spgemm_resident"]
+__all__ = ["cluster_spgemm_tiled", "cluster_spgemm_resident",
+           "cluster_spgemm_pairs", "cluster_spgemm_pairs_resident",
+           "cluster_spgemm_pairs_db"]
 
 
 def _is_block_start(block_ids_ref, s):
@@ -198,3 +229,204 @@ def cluster_spgemm_resident(block_ids: jax.Array, tile_ids: jax.Array,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(block_ids, tile_ids, table, a_values, b_tiles)
+
+
+# ---------------------------------------------------------------------------
+# v2: sparsity-compacted live-pair grid (see module docstring)
+# ---------------------------------------------------------------------------
+
+
+def _mxu_acc(a_slab, b_tile, o_ref, col, bn):
+    """One contraction into the output row strip, fp32 accumulate; bf16 B
+    tiles are upcast at the MXU input (their bytes were saved in HBM)."""
+    prod = jnp.dot(a_slab, b_tile.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    o_ref[:, pl.ds(col, bn)] += prod.astype(o_ref.dtype)
+
+
+def _spgemm_kernel_pairs(bn, blk_ref, j_ref, slot_ref, aidx_ref,
+                         a_ref, b_ref, o_ref):
+    t = pl.program_id(0)
+
+    @pl.when(_is_block_start(blk_ref, t))
+    def _init():                     # one zero-fill per block: every
+        o_ref[...] = jnp.zeros_like(o_ref)   # (block, j) strip, dead or live
+
+    @pl.when(slot_ref[t] > 0)        # sentinels / tail pads: no MXU issue
+    def _acc():
+        col = pl.multiple_of(j_ref[t] * bn, bn)
+        _mxu_acc(a_ref[0], b_ref[0], o_ref, col, bn)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_r", "block_k", "bn", "nblocks", "nnb", "interpret"))
+def cluster_spgemm_pairs(blocks: jax.Array, js: jax.Array, slots: jax.Array,
+                         a_idx: jax.Array, a_values: jax.Array,
+                         b_tiles: jax.Array, *, block_r: int, block_k: int,
+                         bn: int, nblocks: int, nnb: int,
+                         interpret: bool = False) -> jax.Array:
+    """C = A_bcc @ B_tiled over the live-pair compacted grid, streaming
+    one B tile per live contraction.
+
+    Args:
+      blocks/js/slots/a_idx: the (T,) live-pair stream of
+        :func:`repro.core.formats.live_pair_stream` — ordered (block, s,
+        j), one zero-slot sentinel per pair-less block, tail zero-slot
+        padded.
+      a_values: (S, block_r, block_k) A cluster slabs (the compact
+        stream's slab array; ``a_idx`` indexes it).
+      b_tiles: (tile_cap, block_k, bn) fp32 or bf16 dense live tiles;
+        slab 0 is the reserved zero tile.
+
+    Returns: (nblocks * block_r, nnb * bn) dense fp32 C.
+    """
+    t_total = blocks.shape[0]
+    assert a_values.shape[1:] == (block_r, block_k)
+    assert b_tiles.shape[1:] == (block_k, bn)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(t_total,),
+        in_specs=[
+            pl.BlockSpec((1, block_r, block_k),
+                         lambda t, blks, js_, sl, ai: (ai[t], 0, 0)),
+            pl.BlockSpec((1, block_k, bn),
+                         lambda t, blks, js_, sl, ai: (sl[t], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, nnb * bn),
+                               lambda t, blks, js_, sl, ai: (blks[t], 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_spgemm_kernel_pairs, bn),
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((nblocks * block_r, nnb * bn),
+                                       jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(blocks, js, slots, a_idx, a_values, b_tiles)
+
+
+def _spgemm_kernel_pairs_resident(bn, blk_ref, j_ref, slot_ref, aidx_ref,
+                                  a_ref, b_ref, o_ref):
+    t = pl.program_id(0)
+
+    @pl.when(_is_block_start(blk_ref, t))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    slot = slot_ref[t]
+
+    @pl.when(slot > 0)
+    def _acc():
+        col = pl.multiple_of(j_ref[t] * bn, bn)
+        _mxu_acc(a_ref[0], b_ref[slot], o_ref, col, bn)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_r", "block_k", "bn", "nblocks", "nnb", "interpret"))
+def cluster_spgemm_pairs_resident(blocks: jax.Array, js: jax.Array,
+                                  slots: jax.Array, a_idx: jax.Array,
+                                  a_values: jax.Array, b_tiles: jax.Array,
+                                  *, block_r: int, block_k: int, bn: int,
+                                  nblocks: int, nnb: int,
+                                  interpret: bool = False) -> jax.Array:
+    """Same contract as :func:`cluster_spgemm_pairs`, with the whole B
+    tile store pinned in VMEM (one HBM fetch total)."""
+    t_total = blocks.shape[0]
+    assert a_values.shape[1:] == (block_r, block_k)
+    assert b_tiles.shape[1:] == (block_k, bn)
+    tile_cap = b_tiles.shape[0]
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(t_total,),
+        in_specs=[
+            pl.BlockSpec((1, block_r, block_k),
+                         lambda t, blks, js_, sl, ai: (ai[t], 0, 0)),
+            pl.BlockSpec((tile_cap, block_k, bn),
+                         lambda t, blks, js_, sl, ai: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, nnb * bn),
+                               lambda t, blks, js_, sl, ai: (blks[t], 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_spgemm_kernel_pairs_resident, bn),
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((nblocks * block_r, nnb * bn),
+                                       jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(blocks, js, slots, a_idx, a_values, b_tiles)
+
+
+def _spgemm_kernel_pairs_db(bn, blk_ref, j_ref, slot_ref, aidx_ref,
+                            a_ref, b_hbm, o_ref, b_buf, sem):
+    t = pl.program_id(0)
+    nt = pl.num_programs(0)
+
+    def _tile_dma(pos, buf):
+        return pltpu.make_async_copy(b_hbm.at[slot_ref[pos]],
+                                     b_buf.at[buf], sem.at[buf])
+
+    @pl.when(t == 0)
+    def _warm():                      # prime the pipeline
+        _tile_dma(0, 0).start()
+
+    @pl.when(t + 1 < nt)
+    def _ahead():                     # overlap: fetch t+1 while t computes
+        _tile_dma(t + 1, (t + 1) % 2).start()
+
+    _tile_dma(t, t % 2).wait()
+
+    @pl.when(_is_block_start(blk_ref, t))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(slot_ref[t] > 0)
+    def _acc():
+        col = pl.multiple_of(j_ref[t] * bn, bn)
+        _mxu_acc(a_ref[0], b_buf[t % 2], o_ref, col, bn)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_r", "block_k", "bn", "nblocks", "nnb", "interpret"))
+def cluster_spgemm_pairs_db(blocks: jax.Array, js: jax.Array,
+                            slots: jax.Array, a_idx: jax.Array,
+                            a_values: jax.Array, b_tiles: jax.Array,
+                            *, block_r: int, block_k: int, bn: int,
+                            nblocks: int, nnb: int,
+                            interpret: bool = False) -> jax.Array:
+    """Streamed variant with manual double-buffered tile prefetch: B stays
+    in HBM (``ANY`` space) and each grid step DMAs the *next* step's tile
+    into the other half of a two-slot VMEM scratch while contracting the
+    current one — hiding the tile fetch latency the BlockSpec-driven
+    streamed variant serializes. Same contract as
+    :func:`cluster_spgemm_pairs`.
+    """
+    t_total = blocks.shape[0]
+    assert a_values.shape[1:] == (block_r, block_k)
+    assert b_tiles.shape[1:] == (block_k, bn)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(t_total,),
+        in_specs=[
+            pl.BlockSpec((1, block_r, block_k),
+                         lambda t, blks, js_, sl, ai: (ai[t], 0, 0)),
+            pl.BlockSpec(memory_space=_ANY),
+        ],
+        out_specs=pl.BlockSpec((block_r, nnb * bn),
+                               lambda t, blks, js_, sl, ai: (blks[t], 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, block_k, bn), b_tiles.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_spgemm_kernel_pairs_db, bn),
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((nblocks * block_r, nnb * bn),
+                                       jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(blocks, js, slots, a_idx, a_values, b_tiles)

@@ -13,8 +13,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import BCC, TiledCSR
-from repro.kernels.cluster_spgemm import (cluster_spgemm_resident,
+from repro.core.formats import BCC, TiledCSR, live_pair_stream
+from repro.core.segment import rank_in_segment
+from repro.kernels.cluster_spgemm import (cluster_spgemm_pairs,
+                                          cluster_spgemm_pairs_db,
+                                          cluster_spgemm_pairs_resident,
+                                          cluster_spgemm_resident,
                                           cluster_spgemm_tiled)
 from repro.kernels.cluster_spmm import cluster_spmm, cluster_spmm_compact
 from repro.kernels.flash_attention import flash_attention
@@ -22,11 +26,17 @@ from repro.kernels.ssd_chunk import ssd_chunk_scan
 
 __all__ = ["on_tpu", "bcc_spmm", "bcc_compact_stream",
            "bcc_compact_stream_reference", "bcc_spmm_compact",
-           "bcc_spgemm_tiled", "flash_mha", "fused_ssd"]
+           "build_live_pairs", "compact_grid_ok", "bcc_spgemm_tiled",
+           "flash_mha", "fused_ssd"]
 
 # VMEM budget for pinning TiledCSR's tile store on-chip (leave headroom for
 # the A slab / C tile double buffers out of the 16 MiB core budget)
 _RESIDENT_B_BUDGET = 8 * 2**20
+
+# ceiling on the compacted kernels' C row-strip window (block_r × nnb·bn
+# fp32, double-buffered by the pipeline): B matrices wide enough to blow
+# it fall back to the per-tile padded grid, whose C window is one tile
+_COMPACT_C_STRIP_BUDGET = 2 * 2**20
 
 
 def on_tpu() -> bool:
@@ -151,18 +161,65 @@ def bcc_spmm_compact(a: BCC, b: jax.Array, *, bn: int = 128,
     return out[: a.nrows, : n0]
 
 
+def compact_grid_ok(a: BCC, b: TiledCSR) -> bool:
+    """Whether the live-pair compacted grid applies to this operand pair:
+    its C output window is a whole ``(block_r, nnb*bn)`` row strip, so B
+    matrices wide enough to blow the strip budget fall back to the padded
+    per-tile grid. Callers that pre-pack the pair stream (the planner's
+    serving path) gate the build on this — the intersection would be
+    discarded otherwise."""
+    return a.block_r * b.nnb * b.bn * 4 <= _COMPACT_C_STRIP_BUDGET
+
+
+def build_live_pairs(a: BCC, b: TiledCSR, stream: tuple | None = None
+                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                np.ndarray]:
+    """Host-side: intersect A's compact stream with B's tile table into
+    the live-pair compacted grid (the v2 Sp×Sp kernels' input). Packed
+    once per cached operand pair by the planner's serving path.
+
+    Synthetic stream steps — ``cover_all_blocks`` zero slabs of empty
+    blocks and the tail padding — are masked out of the pair expansion
+    (their slabs are all-zero; the pair grid re-covers their blocks with
+    its own zero-slot sentinels).
+    """
+    if stream is None:
+        stream = bcc_compact_stream(a, cover_all_blocks=True)
+    block_ids, tile_ids = np.asarray(stream[0]), np.asarray(stream[1])
+    ntiles = np.asarray(a.ntiles)
+    step_live = rank_in_segment(block_ids.astype(np.int64)) \
+        < ntiles[block_ids]
+    return live_pair_stream(
+        block_ids, tile_ids, np.asarray(b.table), nnb=b.nnb,
+        nblocks=(a.nrows + a.block_r - 1) // a.block_r,
+        step_live=step_live)
+
+
 def bcc_spgemm_tiled(a: BCC, b: TiledCSR, *,
                      interpret: bool | None = None,
                      stream: tuple | None = None,
-                     resident: bool | None = None) -> jax.Array:
-    """C = A_bcc @ B_tiled via the Pallas Sp×Sp kernel. Returns the dense
-    ``(a.nrows, b.ncols)`` product.
+                     pairs: tuple | None = None,
+                     resident: bool | None = None,
+                     compact: bool | None = None,
+                     double_buffer: bool | None = None) -> jax.Array:
+    """C = A_bcc @ B_tiled via the Pallas Sp×Sp kernel tier. Returns the
+    dense ``(a.nrows, b.ncols)`` product (fp32 — bf16 B tiles are upcast
+    at the MXU input, accumulation stays fp32).
 
-    ``resident`` pins B's tile store in VMEM (one HBM fetch for all of B);
-    default: auto — resident when the store fits ``_RESIDENT_B_BUDGET``.
-    ``stream`` overrides the compact (block, k-tile) stream of A
-    (``bcc_compact_stream(a, cover_all_blocks=True)`` — packed once per
-    operand by callers that reuse the plan).
+    Variant selection:
+      * ``compact`` — run the live-pair compacted grid (v2, default) vs
+        the PR-3 padded ``(nnb, S)`` grid. Auto-falls back to the padded
+        grid when the C row-strip window would exceed its VMEM budget.
+      * ``resident`` pins B's tile store in VMEM (one HBM fetch for all
+        of B); default: auto — resident when the store fits
+        ``_RESIDENT_B_BUDGET``.
+      * ``double_buffer`` — for the compact *streamed* path, prefetch the
+        next B tile into a two-slot scratch while the current one
+        contracts. Default: on for compiled TPU runs, off in interpret
+        mode (correct there too, just slower to simulate).
+      * ``stream`` / ``pairs`` override the packed A compact stream and
+        the live-pair grid (packed once per operand by callers that
+        reuse the plan).
     """
     if interpret is None:
         interpret = not on_tpu()
@@ -174,14 +231,33 @@ def bcc_spgemm_tiled(a: BCC, b: TiledCSR, *,
                          f"{nkb_needed}")
     if stream is None:
         stream = bcc_compact_stream(a, cover_all_blocks=True)
-    block_ids, tile_ids, values = (jnp.asarray(s) for s in stream)
+    if compact is None:
+        # an explicitly pre-packed pair stream means the caller already
+        # decided (and paid) for the compacted grid — honor it
+        compact = True if pairs is not None else compact_grid_ok(a, b)
     if resident is None:
         resident = b.nbytes_tiles() <= _RESIDENT_B_BUDGET
+    nblocks = (a.nrows + a.block_r - 1) // a.block_r
+    if compact:
+        if pairs is None:
+            pairs = build_live_pairs(a, b, stream)
+        blocks, js, slots, a_idx = (jnp.asarray(p) for p in pairs)
+        values = jnp.asarray(stream[2])
+        if resident:
+            kernel = cluster_spgemm_pairs_resident
+        elif double_buffer if double_buffer is not None else on_tpu():
+            kernel = cluster_spgemm_pairs_db
+        else:
+            kernel = cluster_spgemm_pairs
+        out = kernel(blocks, js, slots, a_idx, values, b.tiles,
+                     block_r=a.block_r, block_k=a.block_k, bn=b.bn,
+                     nblocks=nblocks, nnb=b.nnb, interpret=interpret)
+        return out[: a.nrows, : b.ncols]
+    block_ids, tile_ids, values = (jnp.asarray(s) for s in stream)
     kernel = cluster_spgemm_resident if resident else cluster_spgemm_tiled
     out = kernel(block_ids, tile_ids, b.table, values, b.tiles,
                  block_r=a.block_r, block_k=a.block_k, bn=b.bn,
-                 nblocks=(a.nrows + a.block_r - 1) // a.block_r,
-                 nnb=b.nnb, interpret=interpret)
+                 nblocks=nblocks, nnb=b.nnb, interpret=interpret)
     return out[: a.nrows, : b.ncols]
 
 

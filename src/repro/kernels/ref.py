@@ -6,7 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["cluster_spmm_ref", "cluster_spmm_compact_ref",
-           "cluster_spgemm_tiled_ref", "flash_attention_ref"]
+           "cluster_spgemm_tiled_ref", "cluster_spgemm_pairs_ref",
+           "flash_attention_ref"]
 
 
 def cluster_spmm_ref(tile_ids, a_values, b, *, block_r, block_k,
@@ -67,6 +68,27 @@ def cluster_spgemm_tiled_ref(block_ids, tile_ids, table, a_values, b_tiles,
             b_dense[kb * block_k:(kb + 1) * block_k,
                     nb * bn:(nb + 1) * bn] = b_tiles[slot]
     return a_dense @ b_dense
+
+
+def cluster_spgemm_pairs_ref(blocks, js, slots, a_idx, a_values, b_tiles,
+                             *, block_r, block_k, bn, nblocks, nnb):
+    """Oracle for the live-pair compacted kernels: walk the pair stream,
+    contracting each live slot into its (block, j) strip of a zero C."""
+    blocks = np.asarray(blocks)
+    js = np.asarray(js)
+    slots = np.asarray(slots)
+    a_idx = np.asarray(a_idx)
+    a_values = np.asarray(a_values, dtype=np.float32)
+    b_tiles = np.asarray(b_tiles, dtype=np.float32)
+    c = np.zeros((nblocks * block_r, nnb * bn), dtype=np.float32)
+    for t in range(blocks.shape[0]):
+        if slots[t] <= 0:
+            continue                       # sentinel / tail pad: no MXU
+        r0 = int(blocks[t]) * block_r
+        c0 = int(js[t]) * bn
+        c[r0:r0 + block_r, c0:c0 + bn] += (
+            a_values[int(a_idx[t])] @ b_tiles[int(slots[t])])
+    return c
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True,

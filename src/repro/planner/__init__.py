@@ -8,6 +8,7 @@ preprocessing to run; materialized plans live in a fingerprint-keyed
 cache (:mod:`repro.planner.plan_cache`); :mod:`repro.planner.service`
 exposes the public ``plan_spgemm`` / ``execute`` API.
 """
+from repro.planner.calibration import Calibration, fit_calibration
 from repro.planner.cost_model import (Candidate, CostModel,
                                       DEFAULT_CANDIDATES, IDENTITY,
                                       Measurement, ScoredCandidate,
@@ -20,6 +21,7 @@ from repro.planner.service import (Planner, default_planner, execute,
                                    plan_spgemm, reset_default_planner)
 
 __all__ = [
+    "Calibration", "fit_calibration",
     "Candidate", "CostModel", "DEFAULT_CANDIDATES", "IDENTITY",
     "Measurement", "ScoredCandidate", "amortizes", "break_even_reuse",
     "MatrixFeatures", "extract_features", "fingerprint",

@@ -1,0 +1,246 @@
+"""Learned cost-model calibration (ROADMAP open item, minimal form).
+
+The heuristic layer of :mod:`repro.planner.cost_model` predicts
+``kernel_rel`` / ``preprocess_rel`` from hand-tuned constants seeded off
+the PR-1 quick-tier sweep. Every benchmark run since has been accumulating
+real measurements — per-(matrix, reorder, scheme) timings in
+``experiments/bench_cache.json`` and per-PR aggregates in the committed
+``experiments/BENCH_<tier>_<sha>.json`` trajectory artifacts. This module
+closes the loop: :func:`fit_calibration` solves two small least-squares
+problems over that corpus and returns a :class:`Calibration` the
+:class:`~repro.planner.cost_model.CostModel` applies on top of the
+heuristic —
+
+* **kernel scale** — per scheme, the through-origin least-squares slope of
+  measured ``kernel_rel`` against the heuristic's prediction (log-free:
+  both are already ratios to the same identity baseline). Scales are
+  re-normalized by the row-wise slope so the identity candidate keeps its
+  defining ``kernel_rel == 1``; the break-even gate is untouched.
+* **preprocess constants** — the additive ``_REORDER_PRE[r] +
+  _SCHEME_PRE[s]`` model refit by linear least squares over an indicator
+  design matrix (hierarchical's ``similar_frac`` feature term is
+  subtracted from its samples first, as in the heuristic).
+
+Hand-tuned values remain the fallback: with fewer than ``min_samples``
+total measurements the fit returns ``None``, and any individual key seen
+fewer than ``min_key_samples`` times keeps its hand-tuned constant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+
+import numpy as np
+
+__all__ = ["Calibration", "fit_calibration"]
+
+# safety clamp: a fitted slope outside this band says the sample set is
+# degenerate (one family dominating), not that the heuristic is 4x wrong
+_SCALE_LO, _SCALE_HI = 0.25, 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Fitted corrections applied on top of the heuristic layer."""
+
+    kernel_scale: dict          # scheme -> multiplicative slope (rowwise ≡ 1)
+    preprocess_reorder: dict    # reorder -> fitted _REORDER_PRE override
+    preprocess_scheme: dict     # scheme -> fitted _SCHEME_PRE override
+    n_samples: int              # total (matrix, candidate) kernel samples
+
+    def describe(self) -> dict:
+        return {"n_samples": self.n_samples,
+                "kernel_scale": dict(self.kernel_scale),
+                "preprocess_reorder": dict(self.preprocess_reorder),
+                "preprocess_scheme": dict(self.preprocess_scheme)}
+
+
+def _load_cache_samples(cache_path: str, kernel_gen: str) -> list[dict]:
+    """(spec, reorder, scheme, kernel_rel, preprocess_rel) rows from the
+    benchlib sweep cache, normalized by each spec's identity baseline."""
+    if not os.path.exists(cache_path):
+        return []
+    with open(cache_path) as f:
+        raw = json.load(f)
+    by_spec: dict[str, dict[tuple[str, str], dict]] = {}
+    for key, res in raw.items():
+        parts = key.split("|")
+        if len(parts) != 5:
+            continue
+        spec, algo, scheme, workload, gen = parts
+        if workload != "a2" or gen != kernel_gen:
+            continue
+        by_spec.setdefault(spec, {})[(algo, scheme)] = res
+    out = []
+    for spec, cands in by_spec.items():
+        base = cands.get(("original", "rowwise"))
+        if not base or base.get("kernel_s", 0) <= 0:
+            continue
+        bk = float(base["kernel_s"])
+        for (algo, scheme), res in cands.items():
+            if (algo, scheme) == ("original", "rowwise"):
+                continue
+            out.append({"spec": spec, "reorder": algo, "scheme": scheme,
+                        "kernel_rel": float(res["kernel_s"]) / bk,
+                        "preprocess_rel": float(res["preprocess_s"]) / bk})
+    return out
+
+
+def _artifact_scheme_rels(artifacts_dir: str, tier: str) -> dict[str, list]:
+    """Scheme-level measured ``kernel_rel`` aggregates from the committed
+    trajectory artifacts (fig3's geomean speedup over identity: one
+    ``1/speedup`` sample per scheme per artifact)."""
+    out: dict[str, list] = {}
+    for path in sorted(glob.glob(os.path.join(
+            artifacts_dir, f"BENCH_{tier}_*.json"))):
+        try:
+            with open(path) as f:
+                art = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        sp = art.get("tables", {}).get("fig3", {}).get(
+            "geomean_speedup_by_scheme", {})
+        for scheme, gm in sp.items():
+            if isinstance(gm, (int, float)) and gm > 0:
+                out.setdefault(scheme, []).append(1.0 / float(gm))
+    return out
+
+
+def fit_calibration(cache_path: str | None = None,
+                    artifacts_dir: str | None = None, *,
+                    tier: str = "quick",
+                    min_samples: int = 8,
+                    min_key_samples: int = 3,
+                    samples: list[dict] | None = None):
+    """Fit a :class:`Calibration` from the accumulated measurements.
+
+    ``samples`` injects pre-normalized rows directly (tests); otherwise
+    the benchlib sweep cache and the committed trajectory artifacts are
+    read. Returns ``None`` when fewer than ``min_samples`` kernel samples
+    exist — the hand-tuned constants stay authoritative.
+    """
+    from repro import benchlib
+    from repro.core.suite import SUITE
+    from repro.planner.cost_model import Candidate, CostModel
+    from repro.planner.features import extract_features
+
+    if samples is None:
+        if cache_path is None:
+            cache_path = benchlib.CACHE_PATH
+        if artifacts_dir is None:
+            artifacts_dir = os.path.join(
+                os.path.dirname(cache_path))
+        samples = _load_cache_samples(cache_path, benchlib._KERNEL_GEN)
+    if len(samples) < min_samples:
+        return None
+
+    # features per spec, computed once (the expensive part of the fit)
+    spec_by_name = {s.name: s for s in SUITE}
+    feats: dict[str, object] = {}
+
+    def _features(spec_name: str):
+        if spec_name not in feats:
+            from repro.core.suite import generate
+            spec = spec_by_name.get(spec_name)
+            feats[spec_name] = (extract_features(generate(spec))
+                                if spec is not None else None)
+        return feats[spec_name]
+
+    # -- kernel scale: per-scheme through-origin least squares --------------
+    pred_meas: dict[str, list[tuple[float, float]]] = {}
+    for s in samples:
+        f = _features(s["spec"])
+        if f is None:
+            continue
+        try:
+            pred, _ = CostModel._heuristic(f, Candidate(s["reorder"],
+                                                        s["scheme"]))
+        except ValueError:
+            continue
+        if s["scheme"] == "pallas":
+            continue        # off-TPU cache entries would fit the 50x penalty
+        pred_meas.setdefault(s["scheme"], []).append(
+            (pred, s["kernel_rel"]))
+    if artifacts_dir is not None:
+        # artifact aggregates: one (geomean predicted, geomean measured)
+        # pair per scheme per artifact — predicted geomean over the specs
+        # already featurized above
+        agg = _artifact_scheme_rels(artifacts_dir, tier)
+        for scheme, rels in agg.items():
+            preds = [CostModel._heuristic(f, Candidate("original", scheme))[0]
+                     for f in feats.values()
+                     if f is not None and scheme != "pallas"]
+            if not preds:
+                continue
+            pgm = float(np.exp(np.mean(np.log(np.maximum(preds, 1e-9)))))
+            for r in rels:
+                pred_meas.setdefault(scheme, []).append((pgm, r))
+    kernel_scale: dict[str, float] = {}
+    for scheme, pm in pred_meas.items():
+        if len(pm) < min_key_samples:
+            continue
+        p = np.asarray([x[0] for x in pm], dtype=np.float64)
+        m = np.asarray([x[1] for x in pm], dtype=np.float64)
+        denom = float((p * p).sum())
+        if denom <= 0:
+            continue
+        kernel_scale[scheme] = float(np.clip((p * m).sum() / denom,
+                                             _SCALE_LO, _SCALE_HI))
+    # identity must keep kernel_rel == 1: normalize by the rowwise slope
+    rw = kernel_scale.get("rowwise")
+    if rw:
+        kernel_scale = {k: float(np.clip(v / rw, _SCALE_LO, _SCALE_HI))
+                        for k, v in kernel_scale.items()}
+
+    # -- preprocess constants: additive indicator least squares -------------
+    from repro.planner.cost_model import _REORDER_PRE, _SCHEME_PRE
+    rows, meas = [], []
+    reorders = sorted({s["reorder"] for s in samples})
+    schemes = sorted({s["scheme"] for s in samples})
+    r_pos = {r: i for i, r in enumerate(reorders)}
+    s_pos = {s: len(reorders) + i for i, s in enumerate(schemes)}
+    counts: dict[str, int] = {}
+    for s in samples:
+        y = s["preprocess_rel"]
+        f = _features(s["spec"])
+        if s["scheme"] == "hierarchical":
+            if f is None:
+                continue
+            y -= f.similar_frac       # the feature-driven term of the model
+        x = np.zeros(len(reorders) + len(schemes))
+        x[r_pos[s["reorder"]]] = 1.0
+        x[s_pos[s["scheme"]]] = 1.0
+        rows.append(x)
+        meas.append(y)
+        counts[s["reorder"]] = counts.get(s["reorder"], 0) + 1
+        counts[s["scheme"]] = counts.get(s["scheme"], 0) + 1
+    preprocess_reorder: dict[str, float] = {}
+    preprocess_scheme: dict[str, float] = {}
+    if len(rows) >= min_samples:
+        sol, *_ = np.linalg.lstsq(np.asarray(rows), np.asarray(meas),
+                                  rcond=None)
+        # the indicator design is rank-deficient by one (a constant can
+        # shift between the reorder and scheme columns); re-anchor it at
+        # the identity convention _REORDER_PRE["original"] == 0
+        if "original" in r_pos:
+            c = sol[r_pos["original"]]
+            sol[: len(reorders)] -= c
+            sol[len(reorders):] += c
+        sol = np.maximum(sol, 0.0)
+        for r in reorders:
+            if counts.get(r, 0) >= min_key_samples and r in _REORDER_PRE:
+                preprocess_reorder[r] = float(sol[r_pos[r]])
+        for sc in schemes:
+            if counts.get(sc, 0) >= min_key_samples and sc in _SCHEME_PRE:
+                preprocess_scheme[sc] = float(sol[s_pos[sc]])
+        # identity anchors stay the exact hand-tuned zeros: the break-even
+        # convention "identity amortizes by definition" must survive any fit
+        preprocess_reorder.pop("original", None)
+        preprocess_scheme.pop("rowwise", None)
+
+    return Calibration(kernel_scale=kernel_scale,
+                       preprocess_reorder=preprocess_reorder,
+                       preprocess_scheme=preprocess_scheme,
+                       n_samples=len(samples))

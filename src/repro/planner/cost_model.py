@@ -46,6 +46,27 @@ HEURISTIC_GAIN_TRUST = 0.5
 # measurement would reject it too)
 PALLAS_INTERPRET_REL = 50.0
 
+# -- pallas (compacted-grid) traffic terms ----------------------------------
+# the gather baseline moves ~10.4 B of B per A nonzero (8 B index+value ×
+# ~1.3 pow2 bin padding, re-fetched per nonzero — no cross-row reuse)
+PALLAS_GATHER_BYTES = 10.4
+# the tiled path's B term: dense live tiles, 4 B/slot fp32 (2 B bf16),
+# fetched once — ÷ live-tile fill gives bytes per B nonzero
+PALLAS_B_BYTES_PER_SLOT = 4.0
+PALLAS_B_BYTES_PER_SLOT_BF16 = 2.0
+# A-refetch term: the compacted grid fetches each (block_r × block_k) A
+# slab once per stream step (adjacent pairs share it) — 4 B/slot ÷ slab
+# fill per A nonzero. Slabs are 16× smaller than the 128×128 fill tiles,
+# so they run denser; √(area ratio) is the usual scaling
+PALLAS_A_BYTES_PER_SLOT = 4.0
+PALLAS_SLAB_FILL_BOOST = 4.0
+# dead-step term: the compacted grid's only dead steps are the per-block
+# zero-slot sentinels and tail pads — a small constant overhead relative
+# to one gather-baseline call. (The PR-3 padded grid paid a full grid
+# step + A DMA per dead (stream step, column strip) pair instead; that
+# cost no longer scales with the lattice.)
+PALLAS_DEAD_STEP_REL = 0.01
+
 
 def _pallas_on_tpu() -> bool:
     from repro.kernels.ops import on_tpu
@@ -190,11 +211,19 @@ def break_even_reuse(gain_per_call: float, preprocess: float) -> float:
 
 
 class CostModel:
-    """Heuristic-plus-measured candidate scoring (see module docstring)."""
+    """Heuristic-plus-measured candidate scoring (see module docstring).
 
-    def __init__(self):
+    ``calibration`` — an optional
+    :class:`repro.planner.calibration.Calibration`: least-squares fitted
+    corrections (from the accumulated ``BENCH_*`` / bench-cache
+    measurements) applied on top of the heuristic constants. ``None``
+    keeps the hand-tuned values; measured overrides always win either way.
+    """
+
+    def __init__(self, calibration=None):
         # (fingerprint, candidate.key) -> Measurement
         self._measured: dict[tuple[str, str], Measurement] = {}
+        self.calibration = calibration
 
     # -- measured layer ------------------------------------------------------
 
@@ -264,16 +293,23 @@ class CostModel:
                 # the interpreter path: correctness-only, never economic
                 kernel_rel = PALLAS_INTERPRET_REL
             else:
-                # traffic model: the tiled path moves 4/tile_fill B per
-                # nonzero of B (dense live tiles, fetched once), the
-                # gather baseline ~10.4 B (8 B/el × ~1.3 pow2 padding,
-                # re-fetched per A nonzero) — their ratio is the
-                # relative kernel time when both are bandwidth-bound.
-                # Reordering densifies the live-tile lattice, improving
-                # fill by (at most) the recovered-locality factor.
+                # compacted-grid traffic model, per B nonzero, relative
+                # to the gather baseline (both bandwidth-bound):
+                #   B term — dense live tiles fetched once, bytes/slot ÷
+                #     tile fill (reordering densifies the lattice by at
+                #     most the recovered-locality factor);
+                #   A-refetch term — one slab DMA per stream step (the
+                #     compacted grid no longer re-walks A per column
+                #     strip, and dead pairs cost no step at all);
+                #   dead-step term — the residual per-block sentinels.
                 fill = max(f.tile128_fill, 1e-4)
-                fill_eff = fill * (1.0 + 2.0 * reorder_gain)
-                kernel_rel = min(max(0.385 / fill_eff, 0.15),
+                fill_eff = min(fill * (1.0 + 2.0 * reorder_gain), 1.0)
+                slab_fill = min(fill_eff * PALLAS_SLAB_FILL_BOOST, 1.0)
+                b_term = PALLAS_B_BYTES_PER_SLOT / fill_eff
+                a_term = PALLAS_A_BYTES_PER_SLOT / slab_fill
+                kernel_rel = ((b_term + a_term) / PALLAS_GATHER_BYTES
+                              + PALLAS_DEAD_STEP_REL)
+                kernel_rel = min(max(kernel_rel, 0.15),
                                  PALLAS_INTERPRET_REL)
 
         pre = _REORDER_PRE.get(c.reorder, 1.0) + _SCHEME_PRE[c.scheme]
@@ -296,6 +332,22 @@ class CostModel:
                 preprocess_rel=m.preprocess_s / base, reuse=reuse,
                 measured=True)
         kernel_rel, pre = self._heuristic(features, candidate)
+        cal = self.calibration
+        if cal is not None:
+            # fitted slope per scheme (rowwise-normalized so identity
+            # keeps kernel_rel == 1); the pallas interpret penalty is
+            # a routing gate, not a prediction — never rescaled
+            if kernel_rel < PALLAS_INTERPRET_REL:
+                kernel_rel *= cal.kernel_scale.get(candidate.scheme, 1.0)
+            pre_r = cal.preprocess_reorder.get(candidate.reorder)
+            pre_s = cal.preprocess_scheme.get(candidate.scheme)
+            if pre_r is not None or pre_s is not None:
+                pre = ((pre_r if pre_r is not None
+                        else _REORDER_PRE.get(candidate.reorder, 1.0))
+                       + (pre_s if pre_s is not None
+                          else _SCHEME_PRE[candidate.scheme]))
+                if candidate.scheme == "hierarchical":
+                    pre += features.similar_frac
         return ScoredCandidate(candidate=candidate, kernel_rel=kernel_rel,
                                preprocess_rel=pre, reuse=reuse,
                                measured=False)

@@ -26,6 +26,14 @@ the budget evicts least-recently-used plans from memory *and disk* (the
 multi-tenant serving fix for the previously unbounded on-disk growth).
 Everything is a plain file per key — no index to corrupt, safe to delete
 at any time.
+
+**Namespaces** (per-tenant isolation): ``PlanCache(namespace="tenant-a")``
+prefixes every key (and on-disk filename, ``ns-<namespace>_…``) and scopes
+the LRU byte budget to that namespace — the disk scan only accounts, and
+eviction only ever deletes, files of its own namespace, so one traffic
+source flooding the cache cannot evict another tenant's hot plans even
+when all tenants share one directory. The default namespace (``""``)
+owns the un-prefixed files and likewise never touches namespaced ones.
 """
 from __future__ import annotations
 
@@ -146,9 +154,18 @@ class PlanCache:
     ~budget per restart."""
 
     def __init__(self, path: str | None = None,
-                 max_bytes: int | None = None):
+                 max_bytes: int | None = None,
+                 namespace: str = ""):
         self.path = path
         self.max_bytes = max_bytes
+        # '_' is the on-disk filename separator ('|' is rewritten to it):
+        # a namespace containing it would make 'ns-a_x' files match
+        # namespace 'a''s scan prefix 'ns-a_' — cross-tenant eviction
+        if namespace and not all(c.isalnum() or c == "-"
+                                 for c in namespace):
+            raise ValueError("namespace must be alphanumeric/dash "
+                             f"(got {namespace!r})")
+        self.namespace = namespace
         self._mem: OrderedDict[str, Plan] = OrderedDict()
         self._bytes: dict[str, int] = {}
         # pre-existing on-disk files (path → size), oldest mtime first —
@@ -170,8 +187,16 @@ class PlanCache:
                 or not os.path.isdir(self.path):
             return
         files = []
+        prefix = f"ns-{self.namespace}_" if self.namespace else None
         for name in os.listdir(self.path):
             if not name.endswith(".npz"):
+                continue
+            # budget isolation: only this namespace's files are accounted
+            # (and thus evictable) by this cache instance
+            if prefix is not None:
+                if not name.startswith(prefix):
+                    continue
+            elif name.startswith("ns-"):
                 continue
             p = os.path.join(self.path, name)
             try:
@@ -183,9 +208,15 @@ class PlanCache:
             self._inherited[p] = size
 
     @staticmethod
-    def key(fingerprint: str, reuse_hint: int, workload: str = "a2") -> str:
-        return (f"{fingerprint}|r{reuse_bucket(reuse_hint)}|{workload}"
+    def key(fingerprint: str, reuse_hint: int, workload: str = "a2",
+            namespace: str = "") -> str:
+        base = (f"{fingerprint}|r{reuse_bucket(reuse_hint)}|{workload}"
                 f"|{PLAN_CACHE_VERSION}")
+        return f"ns-{namespace}|{base}" if namespace else base
+
+    def _key(self, fingerprint: str, reuse_hint: int,
+             workload: str = "a2") -> str:
+        return self.key(fingerprint, reuse_hint, workload, self.namespace)
 
     def _file(self, key: str) -> str | None:
         if self.path is None:
@@ -194,7 +225,7 @@ class PlanCache:
 
     def get(self, fingerprint: str, reuse_hint: int,
             workload: str = "a2") -> Plan | None:
-        key = self.key(fingerprint, reuse_hint, workload)
+        key = self._key(fingerprint, reuse_hint, workload)
         plan = self._mem.get(key)
         if plan is None:
             f = self._file(key)
@@ -217,7 +248,7 @@ class PlanCache:
         return hit
 
     def put(self, plan: Plan) -> None:
-        key = self.key(plan.fingerprint, plan.reuse_hint, plan.workload)
+        key = self._key(plan.fingerprint, plan.reuse_hint, plan.workload)
         f = self._file(key)
         if f is not None:
             os.makedirs(self.path, exist_ok=True)
@@ -269,4 +300,4 @@ class PlanCache:
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "entries": len(self._mem), "bytes": self.total_bytes,
-                "evictions": self.evictions}
+                "evictions": self.evictions, "namespace": self.namespace}

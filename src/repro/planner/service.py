@@ -36,7 +36,7 @@ from repro.core.clustering import (DEFAULT_MAX_CLUSTER,
                                    variable_length_clusters)
 from repro.core.formats import (HostCSR, bcc_from_host,
                                 csr_cluster_from_host, csr_from_host,
-                                tiled_csr_from_host)
+                                select_block_k, tiled_csr_from_host)
 from repro.core.reorder import reorder as apply_reorder
 from repro.core.spgemm import (length_bins, slot_rows_host,
                                spgemm_clusterwise_dense_binned,
@@ -150,6 +150,14 @@ class Planner:
         Defaults to a direct on-device timing of the candidate. Benchmarks
         inject a measurer that reads the benchlib sweep cache instead.
       measure_top: how many shortlisted candidates measured mode probes.
+      calibration: optional fitted
+        :class:`~repro.planner.calibration.Calibration` forwarded into a
+        default-constructed cost model (ignored when ``cost_model`` is
+        given — configure that instance directly).
+      pallas_b_dtype: dtype the pallas scheme packs B's live tiles in.
+        ``None`` keeps fp32 (bit-compatible with the XLA paths);
+        ``jnp.bfloat16`` halves B's streamed bytes at the documented
+        looser parity tolerance (fp32 accumulation either way).
     """
 
     def __init__(self, cache: Optional[PlanCache] = None,
@@ -158,9 +166,14 @@ class Planner:
                                              Measurement]] = None,
                  measure_top: int = 4,
                  measure_budget: float = 1.3,
-                 candidates: Sequence[Candidate] = DEFAULT_CANDIDATES):
+                 candidates: Sequence[Candidate] = DEFAULT_CANDIDATES,
+                 calibration=None,
+                 pallas_b_dtype=None):
         self.cache = cache if cache is not None else PlanCache()
-        self.cost_model = cost_model if cost_model is not None else CostModel()
+        self.cost_model = (cost_model if cost_model is not None
+                           else CostModel(calibration=calibration))
+        self.pallas_b_dtype = (pallas_b_dtype if pallas_b_dtype is not None
+                               else jnp.float32)
         self.measurer = measurer if measurer is not None else self._measure
         self.measure_top = measure_top
         self.measure_budget = measure_budget
@@ -423,12 +436,24 @@ class Planner:
                 ap = _apply_plan_perm(a, plan, symmetric=False)
                 bh = b
             if plan.scheme == "pallas":
-                # the Pallas Sp×Sp tier: BCC(A) × TiledCSR(B) on the MXU
-                bcc = bcc_from_host(ap)
-                tiled = tiled_csr_from_host(bh)
+                # the Pallas Sp×Sp tier: BCC(A) × TiledCSR(B) on the MXU.
+                # Everything the kernel streams is packed exactly once per
+                # cached operand pair: the adaptive k-tile height, the
+                # compact A stream AND the live-pair compacted grid — a
+                # cache hit goes straight to the kernel with zero host work
+                bk = select_block_k(bh)
+                bcc = bcc_from_host(ap, block_k=bk)
+                tiled = tiled_csr_from_host(bh, block_k=bk,
+                                            dtype=self.pallas_b_dtype)
                 stream = kernel_ops.bcc_compact_stream(
                     bcc, cover_all_blocks=True)
-                cached = ("pallas", bcc, tiled, stream)
+                # the intersection is only worth packing when the
+                # compacted grid will actually run (wide B falls back to
+                # the padded per-tile grid, which ignores it)
+                pairs = (kernel_ops.build_live_pairs(bcc, tiled, stream)
+                         if kernel_ops.compact_grid_ok(bcc, tiled)
+                         else None)
+                cached = ("pallas", bcc, tiled, stream, pairs)
             else:
                 dev_b = csr_from_host(bh)
                 b_lens = bh.row_nnz()
@@ -456,9 +481,9 @@ class Planner:
             self._exec_put(ck, cached)
         kind = cached[0]
         if kind == "pallas":
-            _, bcc, tiled, stream = cached
+            _, bcc, tiled, stream, pairs = cached
             out = lambda: kernel_ops.bcc_spgemm_tiled(  # noqa: E731
-                bcc, tiled, stream=stream)
+                bcc, tiled, stream=stream, pairs=pairs)
         elif kind == "row":
             _, op_a, op_b, bins, srows = cached
             out = lambda: spgemm_rowwise_dense_binned(  # noqa: E731

@@ -71,11 +71,23 @@ class SpGEMMServer:
     One planner (one plan cache + one cost model) is shared across all
     requests; ``reuse_hint`` defaults to the server-level expectation of
     how often a pattern recurs in the traffic (per-request override wins).
+
+    ``tenant`` names the traffic source this server fronts: when no
+    planner is injected, the server's plan cache is namespaced to the
+    tenant (``PlanCache(namespace=tenant)``), so its plans live — and are
+    byte-budgeted — in their own partition and cannot be evicted by (or
+    evict) another tenant's traffic, even when all servers share one
+    on-disk cache directory.
     """
 
     def __init__(self, planner: Optional[Planner] = None, *,
-                 default_reuse_hint: int = 20, measure: bool = False):
-        self.planner = planner if planner is not None else Planner()
+                 default_reuse_hint: int = 20, measure: bool = False,
+                 tenant: str = ""):
+        if planner is None:
+            from repro.planner.plan_cache import PlanCache
+            planner = Planner(cache=PlanCache(namespace=tenant))
+        self.planner = planner
+        self.tenant = tenant
         self.default_reuse_hint = default_reuse_hint
         self.measure = measure
         self.requests = 0
@@ -112,7 +124,7 @@ class SpGEMMServer:
     @property
     def stats(self) -> dict:
         return {"requests": self.requests, "plan_hits": self.plan_hits,
-                **self.planner.stats}
+                "tenant": self.tenant, **self.planner.stats}
 
 
 @dataclasses.dataclass

@@ -404,3 +404,140 @@ def test_pipeline_planned_stages():
     for m in mats:
         want = np.einsum("fk,mbk->mbf", m.to_dense(), want)
     np.testing.assert_allclose(y, want, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# per-tenant namespaces (ISSUE 4)
+# ---------------------------------------------------------------------------
+
+
+def test_cache_namespaces_partition_keys():
+    a = PlanCache(namespace="tenant-a")
+    b = PlanCache(namespace="tenant-b")
+    plain = PlanCache()
+    plan = _plan_of_size(0, 64)
+    a.put(plan)
+    assert a.get("fp-0", 10) is not None
+    assert b.get("fp-0", 10) is None           # other tenant: miss
+    assert plain.get("fp-0", 10) is None       # default namespace: miss
+    assert a.stats["namespace"] == "tenant-a"
+
+
+def test_cache_namespace_budget_is_isolated(tmp_path):
+    """One tenant flooding a shared directory must not evict another's
+    hot plans — each namespace owns (and budgets) only its own files."""
+    nrows = 1024
+    per = _plan_of_size(0, nrows).nbytes()
+    shared = str(tmp_path / "plans")
+    a = PlanCache(path=shared, max_bytes=2 * per, namespace="ten-a")
+    b = PlanCache(path=shared, max_bytes=2 * per, namespace="ten-b")
+    a.put(_plan_of_size(0, nrows))
+    for i in range(1, 6):                       # b floods its partition
+        b.put(_plan_of_size(i, nrows))
+    assert b.stats["evictions"] >= 3
+    # a's single plan survives b's churn, in memory AND on disk
+    assert a.get("fp-0", 10) is not None
+    a2 = PlanCache(path=shared, namespace="ten-a")
+    assert a2.get("fp-0", 10) is not None
+    # a fresh scan of b's namespace never accounts a's files
+    b2 = PlanCache(path=shared, max_bytes=2 * per, namespace="ten-b")
+    assert b2.get("fp-0", 10) is None
+    assert a2.get("fp-0", 10) is not None
+
+
+def test_cache_namespace_rejects_unsafe_names():
+    with pytest.raises(ValueError):
+        PlanCache(namespace="../escape")
+    # '_' is the filename separator: 'ns-a_x' files would match namespace
+    # 'a''s scan prefix 'ns-a_' and be evicted cross-tenant
+    with pytest.raises(ValueError):
+        PlanCache(namespace="a_x")
+
+
+def test_spgemm_server_tenant_namespace():
+    from repro.serve.engine import SpGEMMServer
+    a = FAMILIES["blockdiag"]()
+    srv = SpGEMMServer(default_reuse_hint=10, tenant="team-x")
+    srv.submit(a)
+    assert srv.stats["tenant"] == "team-x"
+    assert srv.stats["namespace"] == "team-x"
+    assert srv.planner.cache.namespace == "team-x"
+
+
+# ---------------------------------------------------------------------------
+# learned cost-model calibration (ISSUE 4 / ROADMAP open item)
+# ---------------------------------------------------------------------------
+
+
+def _synthetic_samples(n_specs=4, kernel_factor=2.0):
+    """Fabricated sweep rows: measured kernel_rel = factor × heuristic
+    prediction, over real (generated) suite specs so features exist."""
+    from repro.benchlib import representative_subset
+    from repro.core.suite import generate
+    samples = []
+    specs = representative_subset(n_specs)
+    for spec in specs:
+        f = extract_features(generate(spec))
+        for algo, scheme in (("rcm", "fixed"), ("degree", "fixed"),
+                             ("rcm", "variable")):
+            pred, pre = CostModel._heuristic(f, Candidate(algo, scheme))
+            samples.append({"spec": spec.name, "reorder": algo,
+                            "scheme": scheme,
+                            "kernel_rel": kernel_factor * pred,
+                            "preprocess_rel": pre + 0.1})
+    return samples
+
+
+def test_calibration_fits_kernel_scale():
+    from repro.planner import fit_calibration
+    samples = _synthetic_samples()
+    assert len(samples) >= 8
+    cal = fit_calibration(samples=samples, min_samples=8, min_key_samples=3)
+    assert cal is not None and cal.n_samples == len(samples)
+    # measured = 2 × heuristic → fitted slope ≈ 2 for both schemes
+    for scheme in ("fixed", "variable"):
+        assert cal.kernel_scale[scheme] == pytest.approx(2.0, rel=1e-6)
+    # identity anchors never move: rowwise/original are not overridden
+    assert "rowwise" not in cal.preprocess_scheme
+    assert "original" not in cal.preprocess_reorder
+
+
+def test_calibration_too_few_samples_falls_back():
+    from repro.planner import fit_calibration
+    cal = fit_calibration(samples=_synthetic_samples()[:5], min_samples=8)
+    assert cal is None
+
+
+def test_calibrated_cost_model_keeps_identity_invariant():
+    from repro.planner import fit_calibration
+    cal = fit_calibration(samples=_synthetic_samples(), min_samples=8)
+    model = CostModel(calibration=cal)
+    a = FAMILIES["caveman_scr"]()
+    f = extract_features(a)
+    s_id = model.score(f, IDENTITY, 1)
+    assert s_id.kernel_rel == 1.0 and s_id.preprocess_rel == 0.0
+    assert s_id.amortizes
+    # calibrated candidates score 2× the uncalibrated heuristic
+    plain = CostModel()
+    c = Candidate("rcm", "fixed")
+    assert model.score(f, c, 10).kernel_rel == pytest.approx(
+        2.0 * plain.score(f, c, 10).kernel_rel, rel=1e-6)
+
+
+def test_calibration_fits_real_bench_cache_if_present():
+    """The committed sweep cache (when present) must fit cleanly — this is
+    the exact corpus the ROADMAP item targets."""
+    import os
+    from repro import benchlib
+    from repro.planner import fit_calibration
+    if not os.path.exists(benchlib.CACHE_PATH):
+        pytest.skip("no accumulated bench cache in this checkout")
+    cal = fit_calibration()
+    if cal is None:
+        pytest.skip("bench cache holds too few samples to fit")
+    assert cal.n_samples >= 8
+    for v in cal.kernel_scale.values():
+        assert 0.25 <= v <= 4.0
+    for v in (*cal.preprocess_reorder.values(),
+              *cal.preprocess_scheme.values()):
+        assert v >= 0.0

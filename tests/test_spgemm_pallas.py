@@ -249,3 +249,180 @@ def test_cost_model_gates_pallas_off_tpu():
         assert model.choose(f, reuse).candidate.scheme != "pallas"
         ranked = model.rank(f, reuse)
         assert any(s.candidate.scheme == "pallas" for s in ranked)
+
+
+# ---------------------------------------------------------------------------
+# live-pair compacted grid (ISSUE 4)
+# ---------------------------------------------------------------------------
+
+
+def _pairs_for(a, b, *, block_r=8, block_k=16, bn=16):
+    from repro.core.formats import bcc_from_host, tiled_csr_from_host
+    bcc = bcc_from_host(a, block_r=block_r, block_k=block_k)
+    tiled = tiled_csr_from_host(b, block_k=block_k, bn=bn)
+    stream = ops.bcc_compact_stream(bcc, cover_all_blocks=True)
+    return bcc, tiled, stream, ops.build_live_pairs(bcc, tiled, stream)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(4, 48), st.integers(4, 48), st.floats(0.0, 0.4),
+       st.integers(0, 1000))
+def test_property_live_pair_stream_matches_reference(n, m, density, seed):
+    """The vectorized live-pair builder is bit-identical to the loop
+    oracle, for any shape including fully-empty matrices."""
+    from repro.core.formats import live_pair_stream_reference
+    from repro.core.segment import rank_in_segment
+    a = rand_host(n, m, density, seed)
+    b = rand_host(m, n, density, seed + 31)
+    bcc, tiled, stream, got = _pairs_for(a, b)
+    step_live = rank_in_segment(np.asarray(stream[0], np.int64)) \
+        < np.asarray(bcc.ntiles)[stream[0]]
+    want = live_pair_stream_reference(
+        stream[0], stream[1], np.asarray(tiled.table), nnb=tiled.nnb,
+        nblocks=(a.nrows + 7) // 8, step_live=step_live)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    # structural invariants: grid padded to 8, every block visited,
+    # blocks non-decreasing (one C write-back per block)
+    blocks, js, slots, a_idx = (np.asarray(p) for p in got)
+    assert blocks.shape[0] % 8 == 0
+    assert np.all(np.diff(blocks) >= 0)
+    assert set(range((a.nrows + 7) // 8)) <= set(blocks.tolist())
+
+
+def test_live_pair_counters_units():
+    from repro.core.formats import live_pair_counters
+    a = rand_host(32, 32, 0.2, 70)
+    _, _, _, pairs = _pairs_for(a, a)
+    cnt = live_pair_counters(pairs, block_r=8, block_k=16)
+    blocks, js, slots, a_idx = (np.asarray(p) for p in pairs)
+    assert cnt["grid_steps"] == blocks.shape[0]
+    assert cnt["mxu_issues"] == int((slots > 0).sum())
+    # elision-aware A traffic: one slab per run of equal stream indices
+    runs = 1 + int((np.diff(a_idx) != 0).sum())
+    assert cnt["a_fetches"] == runs
+    assert cnt["a_bytes"] == runs * 8 * 16 * 4
+    assert cnt["steps_per_mxu"] >= 1.0
+
+
+def test_compact_matches_padded_grid_bitwise():
+    """Same accumulation order (s ascending within each strip) → the
+    compacted grid reproduces the PR-3 padded grid bit-for-bit."""
+    a = rand_host(40, 48, 0.15, 80)
+    b = rand_host(48, 40, 0.15, 81)
+    from repro.core.formats import bcc_from_host, tiled_csr_from_host
+    bcc = bcc_from_host(a, block_r=8, block_k=16)
+    tiled = tiled_csr_from_host(b, block_k=16, bn=16)
+    legacy = np.asarray(ops.bcc_spgemm_tiled(bcc, tiled, interpret=True,
+                                             compact=False, resident=True))
+    for kw in ({"resident": True}, {"resident": False,
+                                    "double_buffer": False},
+               {"resident": False, "double_buffer": True}):
+        got = np.asarray(ops.bcc_spgemm_tiled(bcc, tiled, interpret=True,
+                                              compact=True, **kw))
+        np.testing.assert_array_equal(got, legacy)
+
+
+def test_fully_dead_strip_is_zero_initialized():
+    """A (block, j) strip with no live pair — B's columns 16.. are
+    structurally empty — must still read back exactly zero, and a fully
+    empty A row block likewise (per-block sentinel coverage)."""
+    dense_a = np.zeros((32, 32), np.float32)
+    dense_a[0, 5] = 1.0
+    dense_a[17, 2] = 3.0          # rows 8..15: fully-empty A block
+    dense_b = np.zeros((32, 32), np.float32)
+    dense_b[np.arange(8), np.arange(8)] = 2.0   # only B tile (0, 0) live
+    a, b = HostCSR.from_dense(dense_a), HostCSR.from_dense(dense_b)
+    _, _, _, pairs = _pairs_for(a, b, block_k=16, bn=16)
+    slots = np.asarray(pairs[2])
+    assert (slots == 0).sum() > 0              # sentinels exist
+    got = _run_tiled(a, b, block_k=16, bn=16)
+    want = spgemm_reference(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert np.all(got[:, 16:] == 0.0)          # dead column strips
+    assert np.all(got[8:16] == 0.0)            # empty A block strip
+
+
+@pytest.mark.parametrize("n,k,density,seed", [
+    (40, 48, 0.10, 0),      # ragged
+    (17, 33, 0.15, 3),      # maximally ragged
+    (48, 48, 0.12, 12),     # hub (dense row/col injected below)
+])
+def test_bf16_tiles_parity_within_documented_tolerance(n, k, density, seed):
+    """bf16 B tiles halve B's bytes; fp32 accumulation keeps the error
+    within the documented 2e-2 relative bound (vs 1e-4 for fp32 tiles)."""
+    import jax.numpy as jnp
+    a = rand_host(n, k, density, seed)
+    dense_b = np.asarray(rand_host(k, n, density, seed + 100).to_dense())
+    dense_b[:, min(3, n - 1)] = 1.0            # hub column
+    b = HostCSR.from_dense(dense_b)
+    bcc = bcc_from_host(a, block_r=8, block_k=16)
+    tiled16 = tiled_csr_from_host(b, block_k=16, bn=16, dtype=jnp.bfloat16)
+    want = spgemm_reference(a, b)
+    scale = max(np.abs(want).max(), 1e-9)
+    for kw in ({"resident": True}, {"resident": False,
+                                    "double_buffer": False}):
+        got = np.asarray(ops.bcc_spgemm_tiled(bcc, tiled16, interpret=True,
+                                              **kw))
+        assert got.dtype == np.float32         # fp32 accumulate contract
+        assert np.abs(got - want).max() / scale < 2e-2
+
+
+def test_bf16_empty_rows_parity():
+    dense = np.zeros((40, 32), np.float32)
+    dense[0, [1, 9, 30]] = [1.0, 2.0, 3.0]
+    dense[39, 31] = 5.0
+    a = HostCSR.from_dense(dense)
+    b = rand_host(32, 24, 0.4, 7)
+    import jax.numpy as jnp
+    bcc = bcc_from_host(a, block_r=8, block_k=8)
+    tiled16 = tiled_csr_from_host(b, block_k=8, bn=8, dtype=jnp.bfloat16)
+    got = np.asarray(ops.bcc_spgemm_tiled(bcc, tiled16, interpret=True))
+    want = spgemm_reference(a, b)
+    scale = max(np.abs(want).max(), 1e-9)
+    assert np.abs(got - want).max() / scale < 2e-2
+    assert np.all(got[8:32] == 0.0)
+
+
+def test_pairs_kernels_match_packed_oracle():
+    """Drive the raw compacted kernels against the pair-walk oracle."""
+    from repro.kernels.cluster_spgemm import (cluster_spgemm_pairs,
+                                              cluster_spgemm_pairs_db,
+                                              cluster_spgemm_pairs_resident)
+    from repro.kernels.ref import cluster_spgemm_pairs_ref
+    a = rand_host(32, 32, 0.15, 20)
+    b = rand_host(32, 32, 0.15, 21)
+    bcc, tiled, stream, pairs = _pairs_for(a, b)
+    kw = dict(block_r=8, block_k=16, bn=16,
+              nblocks=(a.nrows + 7) // 8, nnb=tiled.nnb)
+    want = cluster_spgemm_pairs_ref(*pairs, stream[2],
+                                    np.asarray(tiled.tiles), **kw)
+    for kernel in (cluster_spgemm_pairs, cluster_spgemm_pairs_resident,
+                   cluster_spgemm_pairs_db):
+        got = np.asarray(kernel(
+            *(np.asarray(p) for p in pairs), stream[2], tiled.tiles,
+            interpret=True, **kw))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_select_block_k_sanity():
+    from repro.core.formats import select_block_k
+    sparse = rand_host(300, 300, 0.02, 5)
+    assert select_block_k(sparse) == 128       # low fill: smallest tiles
+    dense = HostCSR.from_dense(np.ones((512, 512), np.float32))
+    assert select_block_k(dense) == 512        # full fill: fewer steps win
+    assert select_block_k(sparse, candidates=(128,)) == 128
+    with pytest.raises(ValueError):
+        select_block_k(sparse, candidates=(100,))
+
+
+def test_bench_kernels_counter_gates():
+    """The counter-only gates of `make bench-kernels` hold on a small
+    deterministic slice (full quick tier is the benchmark's job)."""
+    from benchmarks.bench_kernels import check_gates
+    ok = {"grid_steps_per_mxu_gm": 1.01, "a_bytes_ratio_compact_gm": 6.0,
+          "b_bytes_ratio_routed_gm": 1.35, "b_bytes_bf16_ratio_gm": 2.0}
+    assert check_gates(ok) == []
+    bad = dict(ok, grid_steps_per_mxu_gm=1.5)
+    assert any("grid_steps_per_mxu_gm" in f for f in check_gates(bad))
+    assert any("missing" in f for f in check_gates({}))
