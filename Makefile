@@ -3,12 +3,22 @@
 PY        ?= python
 PYPATH    := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow bench-quick bench-kernels bench-preprocess \
-        bench-planner bench-trajectory lint
+.PHONY: test test-slow docs-check bench-quick bench-kernels \
+        bench-preprocess bench-planner bench-trajectory lint
 
 ## tier-1 verification (the command CI runs; pytest.ini excludes -m slow)
+## — includes the docs gate: doctests on the two doc-bearing modules and
+## the docs/ cross-reference checker
 test:
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q
+	$(MAKE) docs-check
+
+## runnable docstring examples (core/formats, planner/cost_model) + the
+## docs/*.md link & counters-glossary checker
+docs-check:
+	PYTHONPATH=$(PYPATH) $(PY) -m pytest --doctest-modules -q \
+	    src/repro/core/formats.py src/repro/planner/cost_model.py
+	PYTHONPATH=$(PYPATH) $(PY) tools/check_docs.py
 
 ## the slow split: planner sweep tests and other benchmark-sized tests
 test-slow:

@@ -25,6 +25,12 @@ matrix:
   counter under-reported the padded grid's A traffic ``nnb``-fold.
 * **bf16 tile store**: B bytes of the fp32 tile store over the bf16 one
   (≈ 2× — same live lattice, half the bytes per slot).
+* **revisit + sharding counters** (ISSUE 5): ``b_tile_refetches`` of the
+  (block, s, j)-ordered stream over the B-fetch-deduping revisit order
+  (gate: ≥ 1.15× geomean — triples sharing a tile made adjacent across
+  blocks within VMEM-budget windows), and the worst per-core live-pair
+  imbalance of the 4-way contiguous-block-range partition over the ideal
+  split (gate: ≤ 1.2, i.e. within 20% of ideal).
 * **padding occupancy**: fill of B's live tile lattice and the A-side BCC
   padding fraction — the two waste terms the cost model trades off.
 * wall-clock Pallas-vs-XLA speedup on a TPU backend (interpret mode is
@@ -50,8 +56,10 @@ import numpy as np
 
 from repro.benchlib import representative_subset, time_fn
 from repro.core.clustering import hierarchical_clusters
-from repro.core.formats import (bcc_from_host, csr_from_host,
-                                live_pair_counters, tiled_csr_from_host,
+from repro.core.formats import (COUNTER_UNITS, bcc_from_host, csr_from_host,
+                                live_pair_counters, partition_balance,
+                                partition_pair_stream, revisit_pair_stream,
+                                revisit_window_blocks, tiled_csr_from_host,
                                 tiled_live_tiles)
 from repro.core.reorder import reorder
 from repro.core.spgemm import (b_bytes_rowwise_binned, b_bytes_tiled,
@@ -70,6 +78,11 @@ GATE_STEPS_PER_MXU = 1.1          # compacted grid: ≤ this, geomean
 GATE_A_BYTES_RATIO = 2.0          # padded-grid A bytes / compacted, ≥
 GATE_B_ROUTED_RATIO = 1.2         # routed B-traffic ratio vs XLA, ≥
 GATE_BF16_RATIO = 1.9             # fp32 / bf16 B tile store bytes, ≥
+GATE_B_REFETCH_RATIO = 1.15       # B tile refetches, unordered over
+                                  # revisit-ordered, geomean ≥
+GATE_SHARD_BALANCE = 1.2          # worst per-core live-pair imbalance
+                                  # over the ideal split, ≤ (within 20%)
+BENCH_SHARDS = 4                  # cores the balance gate partitions for
 
 
 def _xla_b_bytes(a) -> int:
@@ -90,6 +103,7 @@ def _spgemm_pallas_vs_xla(tier: str) -> dict:
     rows = []
     ratios_tiled, ratios_routed = [], []
     steps_per_mxu, a_ratios, bf16_ratios = [], [], []
+    refetch_ratios, balances = [], []
     smallest = None              # (nnz, HostCSR) for the parity check below
     for spec in specs:
         a = generate(spec)
@@ -124,8 +138,29 @@ def _spgemm_pallas_vs_xla(tier: str) -> dict:
         padded_steps = tiled_b.nnb * s_steps
         a_bytes_padded = padded_steps * slab_bytes
         a_bytes_legacy = s_steps * slab_bytes
-        cnt = live_pair_counters(pairs, block_r=BLOCK_R, block_k=BLOCK_K)
+        cnt = live_pair_counters(pairs, block_r=BLOCK_R, block_k=BLOCK_K,
+                                 bn=BN)
         a_ratio = a_bytes_padded / max(cnt["a_bytes"], 1)
+        # B-fetch-deduping revisit order (ISSUE 5): within VMEM-budget
+        # windows of C strips, triples sharing a B tile sit adjacent
+        # across blocks — the streamed kernel's DMA elision then fetches
+        # each live tile once per window instead of once per touching
+        # block. The gate is on the refetch excess (fetches beyond one
+        # per distinct tile), floored at 1 so a fully-deduped stream
+        # (0 refetches) still yields a finite ratio.
+        nblocks = (best_mat.nrows + BLOCK_R - 1) // BLOCK_R
+        wb = min(revisit_window_blocks(tiled_b.nnb, block_r=BLOCK_R,
+                                       bn=BN), nblocks)
+        rv = revisit_pair_stream(pairs, window_blocks=wb)
+        cnt_rv = live_pair_counters(rv, block_r=BLOCK_R, block_k=BLOCK_K,
+                                    bn=BN)
+        refetch_ratio = (max(cnt["b_tile_refetches"], 1)
+                         / max(cnt_rv["b_tile_refetches"], 1))
+        # multi-core partition: contiguous block ranges balanced by
+        # live-pair count — worst per-core load over the ideal split
+        _, shard_pairs = partition_pair_stream(
+            pairs, nblocks=nblocks, num_shards=BENCH_SHARDS)
+        balance = partition_balance(shard_pairs)
         # bf16 tile store: measured from the actually-packed stores (not
         # re-derived from the byte formula), so a regression in the bf16
         # packing plumbing shows up as a gate failure
@@ -153,10 +188,19 @@ def _spgemm_pallas_vs_xla(tier: str) -> dict:
             "a_bytes_compact": cnt["a_bytes"],
             "a_bytes_ratio": a_ratio,
             "b_bytes_bf16_ratio": bf16_ratio,
+            "b_tile_fetches": cnt["b_tile_fetches"],
+            "b_tile_refetches": cnt["b_tile_refetches"],
+            "b_tile_refetches_revisit": cnt_rv["b_tile_refetches"],
+            "b_tile_refetch_ratio": refetch_ratio,
+            "revisit_window_blocks": wb,
+            "a_fetches_revisit": cnt_rv["a_fetches"],
+            "shard_balance": balance,
         }
         steps_per_mxu.append(cnt["steps_per_mxu"])
         a_ratios.append(a_ratio)
         bf16_ratios.append(bf16_ratio)
+        refetch_ratios.append(refetch_ratio)
+        balances.append(balance)
         if ops.on_tpu():
             # compiled wall-clock — only meaningful on the real MXU
             t_pal = time_fn(
@@ -170,7 +214,15 @@ def _spgemm_pallas_vs_xla(tier: str) -> dict:
                 lambda: spgemm_rowwise_dense_binned(dev, dev, bins, srows))
             row["pallas_speedup"] = t_xla / max(t_pal, 1e-12)
         rows.append(row)
+    # units discipline: every stream counter this table prints must be
+    # declared (with its unit) in formats.COUNTER_UNITS — the same table
+    # docs/kernels.md renders as the counters glossary
+    undeclared = [k for k in cnt if k not in COUNTER_UNITS]
+    assert not undeclared, f"counters missing units: {undeclared}"
     print_csv(rows, "spgemm_pallas_vs_xla_b_traffic")
+    print("# counter units: counts are DMA/step events, *_bytes are HBM "
+          "bytes — see repro.core.formats.COUNTER_UNITS (rendered in "
+          "docs/kernels.md)")
 
     # interpret-mode parity check (CPU CI): one small matrix end-to-end —
     # fp32 compacted grid (bit-level vs reference tolerance) and the bf16
@@ -187,6 +239,12 @@ def _spgemm_pallas_vs_xla(tier: str) -> dict:
     got16 = np.asarray(ops.bcc_spgemm_tiled(bcc, tiled16, interpret=True))
     scale = max(float(np.abs(want).max()), 1e-9)
     err16 = float(np.abs(got16 - want).max()) / scale
+    # sharded (serial partition) + revisit-ordered variants: bit-identical
+    # to the unsharded compacted grid by construction, so the parity bound
+    # is the same 1e-4
+    got_sh = np.asarray(ops.bcc_spgemm_tiled(bcc, tiled, interpret=True,
+                                             shards=2, revisit=True))
+    err_sh = float(np.abs(got_sh - want).max())
     summary = {
         "b_bytes_ratio_tiled_gm": geomean(ratios_tiled),
         "b_bytes_ratio_routed_gm": geomean(ratios_routed),
@@ -195,8 +253,11 @@ def _spgemm_pallas_vs_xla(tier: str) -> dict:
         "grid_steps_per_mxu_gm": geomean(steps_per_mxu),
         "a_bytes_ratio_compact_gm": geomean(a_ratios),
         "b_bytes_bf16_ratio_gm": geomean(bf16_ratios),
+        "b_tile_refetch_ratio_gm": geomean(refetch_ratios),
+        "shard_balance_worst": max(balances) if balances else float("nan"),
         "interp_parity_max_err": err,
         "interp_parity_bf16_rel_err": err16,
+        "interp_parity_sharded_max_err": err_sh,
         "interp_validate_s": t_interp,
     }
     if ops.on_tpu():
@@ -274,6 +335,8 @@ def check_gates(summary: dict) -> list[str]:
         ("a_bytes_ratio_compact_gm", ">=", GATE_A_BYTES_RATIO),
         ("b_bytes_ratio_routed_gm", ">=", GATE_B_ROUTED_RATIO),
         ("b_bytes_bf16_ratio_gm", ">=", GATE_BF16_RATIO),
+        ("b_tile_refetch_ratio_gm", ">=", GATE_B_REFETCH_RATIO),
+        ("shard_balance_worst", "<=", GATE_SHARD_BALANCE),
     ]
     fails = []
     for key, op, thr in checks:

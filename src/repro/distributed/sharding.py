@@ -34,7 +34,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["Rules", "active_rules", "use_rules", "constrain",
            "param_specs", "batch_specs", "cache_specs", "moe_policy",
-           "tree_shardings"]
+           "tree_shardings", "core_mesh"]
 
 _RULES: contextvars.ContextVar[Optional["Rules"]] = \
     contextvars.ContextVar("sharding_rules", default=None)
@@ -65,6 +65,21 @@ class Rules:
 
     def sharding(self, *spec) -> NamedSharding:
         return NamedSharding(self.mesh, P(*spec))
+
+
+def core_mesh(n: Optional[int] = None, axis: str = "cores") -> Mesh:
+    """1-D mesh over the first ``n`` local devices (default: all).
+
+    The SpGEMM kernel tier's unit of data parallelism: the sharded
+    pair-stream kernel (`kernels.cluster_spgemm.cluster_spgemm_pairs_sharded`)
+    shard_maps each core's sub-stream over this axis. Kept here so the
+    kernel layer has one place that owns device topology."""
+    import numpy as np
+    devs = jax.devices()
+    n = len(devs) if n is None else n
+    if n > len(devs):
+        raise ValueError(f"core_mesh({n}) exceeds {len(devs)} devices")
+    return Mesh(np.asarray(devs[:n]), (axis,))
 
 
 def active_rules() -> Optional[Rules]:

@@ -68,6 +68,26 @@ Variants: ``cluster_spgemm_pairs`` (streamed B, one tile DMA per step),
 with manual async copies — the tile for step t+1 is in flight while step
 t contracts). All three accept fp32 or bf16 B tiles; bf16 halves B's HBM
 bytes and is upcast at the MXU input, accumulation stays fp32.
+
+Multi-core sharding + B-fetch-deduping revisit order (v3)
+---------------------------------------------------------
+
+``cluster_spgemm_pairs_sharded`` scales the pair stream across TPU cores:
+the host partitions the stream into contiguous block ranges balanced by
+live-pair count (:func:`repro.core.formats.partition_pair_stream`) and a
+``shard_map`` over a 1-D core mesh runs each core's sub-stream against
+its own C row-strip range — blocks own disjoint C rows, so no cross-core
+accumulation is needed. Off-TPU (or on one device) the same partition
+runs serially, so results are identical everywhere.
+
+``cluster_spgemm_pairs_window`` runs a *revisit-ordered* stream
+(:func:`repro.core.formats.revisit_pair_stream`): triples sharing a B
+tile sit adjacent across blocks, so the streamed-B DMA elision fetches
+each live tile once per window instead of once per touching block. The
+price is a wider C output window — ``window_blocks`` consecutive block
+strips, zero-initialized on window entry — and the loss of A-slab
+adjacency (A refetches rise; the ``live_pair_counters`` report both
+sides of that trade, and ``bench_kernels`` gates the B-refetch win).
 """
 from __future__ import annotations
 
@@ -75,6 +95,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -88,7 +109,8 @@ if _ANY is None:                                      # pragma: no cover
 
 __all__ = ["cluster_spgemm_tiled", "cluster_spgemm_resident",
            "cluster_spgemm_pairs", "cluster_spgemm_pairs_resident",
-           "cluster_spgemm_pairs_db"]
+           "cluster_spgemm_pairs_db", "cluster_spgemm_pairs_window",
+           "cluster_spgemm_pairs_sharded"]
 
 
 def _is_block_start(block_ids_ref, s):
@@ -430,3 +452,214 @@ def cluster_spgemm_pairs_db(blocks: jax.Array, js: jax.Array,
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(blocks, js, slots, a_idx, a_values, b_tiles)
+
+
+# ---------------------------------------------------------------------------
+# v3: B-fetch-deduping revisit order (windowed C accumulator)
+# ---------------------------------------------------------------------------
+
+
+def _spgemm_kernel_pairs_window(bn, block_r, window_blocks, win_ref,
+                                blk_ref, j_ref, slot_ref, aidx_ref,
+                                a_ref, b_ref, o_ref):
+    t = pl.program_id(0)
+
+    @pl.when(_is_block_start(win_ref, t))
+    def _init():                     # one zero-fill per *window* of strips
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(slot_ref[t] > 0)        # sentinels / tail pads: no MXU issue
+    def _acc():
+        col = pl.multiple_of(j_ref[t] * bn, bn)
+        row = pl.multiple_of(
+            (blk_ref[t] - win_ref[t] * window_blocks) * block_r, block_r)
+        prod = jnp.dot(a_ref[0], b_ref[0].astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        o_ref[pl.ds(row, block_r), pl.ds(col, bn)] += prod.astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_r", "block_k", "bn", "nblocks", "nnb", "window_blocks",
+    "interpret"))
+def cluster_spgemm_pairs_window(wins: jax.Array, blocks: jax.Array,
+                                js: jax.Array, slots: jax.Array,
+                                a_idx: jax.Array, a_values: jax.Array,
+                                b_tiles: jax.Array, *, block_r: int,
+                                block_k: int, bn: int, nblocks: int,
+                                nnb: int, window_blocks: int,
+                                interpret: bool = False) -> jax.Array:
+    """C = A_bcc @ B_tiled over a revisit-ordered pair stream.
+
+    Same contract as :func:`cluster_spgemm_pairs` except the stream is
+    ordered by :func:`repro.core.formats.revisit_pair_stream` — triples
+    sharing a B tile are adjacent across blocks, so the streamed-B DMA is
+    elided down to one fetch per tile per window — and the C output
+    window covers ``window_blocks`` consecutive block strips
+    (``wins[t] = blocks[t] // window_blocks`` must be non-decreasing; the
+    window is zero-initialized on entry, so every strip it owns reads
+    back exactly its accumulated value, dead strips included).
+
+    Returns: (nblocks * block_r, nnb * bn) dense fp32 C.
+    """
+    t_total = blocks.shape[0]
+    assert a_values.shape[1:] == (block_r, block_k)
+    assert b_tiles.shape[1:] == (block_k, bn)
+    nwin = (nblocks + window_blocks - 1) // window_blocks
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(t_total,),
+        in_specs=[
+            pl.BlockSpec((1, block_r, block_k),
+                         lambda t, w, blks, js_, sl, ai: (ai[t], 0, 0)),
+            pl.BlockSpec((1, block_k, bn),
+                         lambda t, w, blks, js_, sl, ai: (sl[t], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((window_blocks * block_r, nnb * bn),
+                               lambda t, w, blks, js_, sl, ai: (w[t], 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_spgemm_kernel_pairs_window, bn, block_r,
+                          window_blocks),
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (nwin * window_blocks * block_r, nnb * bn), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(wins, blocks, js, slots, a_idx, a_values, b_tiles)
+    return out[: nblocks * block_r]
+
+
+# ---------------------------------------------------------------------------
+# v3: multi-core sharded pair stream (shard_map over a 1-D core mesh)
+# ---------------------------------------------------------------------------
+
+
+def _stack_shard_streams(shard_pairs) -> tuple:
+    """Pad every shard's sub-stream to the longest one (zero-slot repeats
+    of its last pair — the live_pair_stream tail convention) and stack
+    into (S, T_max) arrays so shard_map sees a rectangular layout."""
+    t_max = max(p[0].shape[0] for p in shard_pairs)
+    cols = [[], [], [], []]
+    for sb, sj, ss, sa in shard_pairs:
+        pad = t_max - sb.shape[0]
+        cols[0].append(np.concatenate([sb, np.repeat(sb[-1], pad)]))
+        cols[1].append(np.concatenate([sj, np.repeat(sj[-1], pad)]))
+        cols[2].append(np.concatenate([ss, np.zeros(pad, ss.dtype)]))
+        cols[3].append(np.concatenate([sa, np.repeat(sa[-1], pad)]))
+    return tuple(np.stack(c).astype(np.int32) for c in cols)
+
+
+def _shard_local_call(blocks, js, slots, a_idx, a_values, b_tiles, *,
+                      start, block_r, block_k, bn, max_blocks, nnb,
+                      window_blocks, resident, double_buffer, interpret):
+    """One core's kernel launch: localize block ids to the shard's range
+    and run the flat pair grid (windowed when revisit-ordered)."""
+    local = blocks - start
+    if window_blocks is None:
+        if resident:
+            kernel = cluster_spgemm_pairs_resident
+        elif double_buffer:
+            kernel = cluster_spgemm_pairs_db
+        else:
+            kernel = cluster_spgemm_pairs
+        return kernel(
+            local, js, slots, a_idx, a_values, b_tiles,
+            block_r=block_r, block_k=block_k, bn=bn,
+            nblocks=max_blocks, nnb=nnb, interpret=interpret)
+    wins = local // window_blocks
+    return cluster_spgemm_pairs_window(
+        wins, local, js, slots, a_idx, a_values, b_tiles,
+        block_r=block_r, block_k=block_k, bn=bn, nblocks=max_blocks,
+        nnb=nnb, window_blocks=window_blocks, interpret=interpret)
+
+
+def cluster_spgemm_pairs_sharded(shard_pairs, block_ranges,
+                                 a_values: jax.Array, b_tiles: jax.Array,
+                                 *, block_r: int, block_k: int, bn: int,
+                                 nblocks: int, nnb: int,
+                                 window_blocks: int | None = None,
+                                 resident: bool = False,
+                                 double_buffer: bool = False,
+                                 interpret: bool = False,
+                                 use_shard_map: bool | None = None
+                                 ) -> jax.Array:
+    """C = A_bcc @ B_tiled with the pair stream sharded across TPU cores.
+
+    Args:
+      shard_pairs: per-core ``(blocks, js, slots, a_idx)`` sub-streams
+        from :func:`repro.core.formats.partition_pair_stream` (each
+        optionally revisit-ordered relative to its own first block —
+        pass ``window_blocks`` iff so).
+      block_ranges: (S, 2) contiguous ``[start, end)`` block ranges of
+        the same partition — shard ``i`` owns C rows
+        ``start_i*block_r .. end_i*block_r``.
+      a_values / b_tiles: the full (replicated) A slab array and B tile
+        store — every core indexes them through its own sub-stream.
+      window_blocks: the revisit window of each shard's sub-stream, or
+        ``None`` for (block, s, j)-ordered shards.
+      resident: pin B's tile store in each core's VMEM (only for
+        unordered shards — the revisit order exists to dedup *streamed*
+        tile fetches, which a resident store does not pay).
+      double_buffer: run each core's streamed sub-stream through the
+        two-slot manual-DMA prefetch kernel (unordered shards only;
+        ignored when ``resident`` or ``window_blocks`` applies).
+      use_shard_map: force the ``shard_map`` dispatch (needs one device
+        per shard) or the serial loop; default auto — shard_map when the
+        backend has enough devices and compilation is real (interpret
+        mode runs the identical partition serially, so off-TPU tests
+        exercise the same code path minus the mesh).
+
+    Returns: (nblocks * block_r, nnb * bn) dense fp32 C — identical to
+    the unsharded kernel on the unpartitioned stream (shards own
+    disjoint row strips; each strip's accumulation order is unchanged).
+    """
+    ranges = np.asarray(block_ranges, dtype=np.int64)
+    n_shards = len(shard_pairs)
+    assert ranges.shape == (n_shards, 2)
+    max_blocks = int((ranges[:, 1] - ranges[:, 0]).max())
+    if use_shard_map is None:
+        use_shard_map = (not interpret and n_shards > 1
+                         and jax.device_count() >= n_shards)
+    kw = dict(block_r=block_r, block_k=block_k, bn=bn,
+              max_blocks=max_blocks, nnb=nnb,
+              window_blocks=window_blocks, resident=resident,
+              double_buffer=double_buffer, interpret=interpret)
+    if not use_shard_map:
+        # serial fallback: the same partition, one launch per shard
+        outs = []
+        for (start, end), pairs in zip(ranges, shard_pairs):
+            sb, sj, ss, sa = (jnp.asarray(p) for p in pairs)
+            out = _shard_local_call(sb, sj, ss, sa, a_values, b_tiles,
+                                    start=int(start), **kw)
+            outs.append(out[: (int(end) - int(start)) * block_r])
+        return jnp.concatenate(outs, axis=0)
+
+    from repro.distributed.sharding import core_mesh
+    from jax.sharding import PartitionSpec as P
+    mesh = core_mesh(n_shards)
+    blk, js_, sl, ai = (jnp.asarray(c)
+                        for c in _stack_shard_streams(shard_pairs))
+    starts = jnp.asarray(ranges[:, 0].astype(np.int32)).reshape(-1, 1)
+
+    def body(blk, js_, sl, ai, starts, a_values, b_tiles):
+        out = _shard_local_call(blk[0], js_[0], sl[0], ai[0],
+                                a_values, b_tiles,
+                                start=starts[0, 0], **kw)
+        return out[None]
+
+    in_specs = (P("cores"), P("cores"), P("cores"), P("cores"),
+                P("cores"), P(), P())
+    if hasattr(jax, "shard_map"):
+        mapped = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                               out_specs=P("cores"), check_vma=False)
+    else:                             # jax < 0.5: experimental + check_rep
+        from jax.experimental.shard_map import shard_map as _shard_map
+        mapped = _shard_map(body, mesh=mesh, in_specs=in_specs,
+                            out_specs=P("cores"), check_rep=False)
+    stacked = mapped(blk, js_, sl, ai, starts, a_values, b_tiles)
+    # reassemble: shard i's first (end-start) block strips are its C rows
+    outs = [stacked[i, : (int(e) - int(s)) * block_r]
+            for i, (s, e) in enumerate(ranges)]
+    return jnp.concatenate(outs, axis=0)

@@ -13,20 +13,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import BCC, TiledCSR, live_pair_stream
+from repro.core.formats import (BCC, TiledCSR, live_pair_stream,
+                                partition_pair_stream, revisit_pair_stream,
+                                revisit_window_blocks)
 from repro.core.segment import rank_in_segment
 from repro.kernels.cluster_spgemm import (cluster_spgemm_pairs,
                                           cluster_spgemm_pairs_db,
                                           cluster_spgemm_pairs_resident,
+                                          cluster_spgemm_pairs_sharded,
                                           cluster_spgemm_resident,
                                           cluster_spgemm_tiled)
 from repro.kernels.cluster_spmm import cluster_spmm, cluster_spmm_compact
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_chunk import ssd_chunk_scan
 
-__all__ = ["on_tpu", "bcc_spmm", "bcc_compact_stream",
-           "bcc_compact_stream_reference", "bcc_spmm_compact",
-           "build_live_pairs", "compact_grid_ok", "bcc_spgemm_tiled",
+__all__ = ["on_tpu", "pallas_shard_count", "bcc_spmm",
+           "bcc_compact_stream", "bcc_compact_stream_reference",
+           "bcc_spmm_compact", "build_live_pairs", "build_shard_pack",
+           "compact_grid_ok", "compact_grid_ok_ncols", "bcc_spgemm_tiled",
            "flash_mha", "fused_ssd"]
 
 # VMEM budget for pinning TiledCSR's tile store on-chip (leave headroom for
@@ -41,6 +45,14 @@ _COMPACT_C_STRIP_BUDGET = 2 * 2**20
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def pallas_shard_count() -> int:
+    """Cores the sharded pair-stream kernel fans out over: every local
+    device on a TPU backend, 1 elsewhere (the CPU 'devices' are host
+    threads — sharding the stream over them only adds dispatch overhead,
+    and interpret-mode tests want the serial path's determinism)."""
+    return jax.device_count() if on_tpu() else 1
 
 
 def _pad_cols(b: jax.Array, multiple: int) -> jax.Array:
@@ -161,6 +173,15 @@ def bcc_spmm_compact(a: BCC, b: jax.Array, *, bn: int = 128,
     return out[: a.nrows, : n0]
 
 
+def compact_grid_ok_ncols(ncols: int, *, block_r: int = 8,
+                          bn: int = 128) -> bool:
+    """ncols-level form of :func:`compact_grid_ok` at the serving path's
+    default packing — the cost model's pre-packing gate for the per-core
+    shard discount (one source of truth for the strip-budget rule)."""
+    nnb = (max(ncols, 1) + bn - 1) // bn
+    return block_r * nnb * bn * 4 <= _COMPACT_C_STRIP_BUDGET
+
+
 def compact_grid_ok(a: BCC, b: TiledCSR) -> bool:
     """Whether the live-pair compacted grid applies to this operand pair:
     its C output window is a whole ``(block_r, nnb*bn)`` row strip, so B
@@ -168,7 +189,7 @@ def compact_grid_ok(a: BCC, b: TiledCSR) -> bool:
     per-tile grid. Callers that pre-pack the pair stream (the planner's
     serving path) gate the build on this — the intersection would be
     discarded otherwise."""
-    return a.block_r * b.nnb * b.bn * 4 <= _COMPACT_C_STRIP_BUDGET
+    return compact_grid_ok_ncols(b.nnb * b.bn, block_r=a.block_r, bn=b.bn)
 
 
 def build_live_pairs(a: BCC, b: TiledCSR, stream: tuple | None = None
@@ -195,13 +216,44 @@ def build_live_pairs(a: BCC, b: TiledCSR, stream: tuple | None = None
         step_live=step_live)
 
 
+def build_shard_pack(a: BCC, b: TiledCSR, pairs: tuple, *,
+                     shards: int | None = None,
+                     revisit: bool = False) -> tuple | None:
+    """Host-side: partition the live-pair stream into per-core contiguous
+    block ranges (balanced by live-pair count) and optionally revisit-order
+    each core's sub-stream so B tile fetches dedup across blocks. Packed
+    once per cached operand pair by the planner's serving path.
+
+    Returns ``(ranges, shard_pairs, window_blocks)`` — the input of
+    :func:`repro.kernels.cluster_spgemm.cluster_spgemm_pairs_sharded` —
+    or ``None`` when there is nothing to do (one core, no revisit).
+    """
+    if shards is None:
+        shards = pallas_shard_count()
+    if shards <= 1 and not revisit:
+        return None
+    nblocks = (a.nrows + a.block_r - 1) // a.block_r
+    ranges, shard_pairs = partition_pair_stream(
+        pairs, nblocks=nblocks, num_shards=shards)
+    wb = None
+    if revisit:
+        wb = revisit_window_blocks(b.nnb, block_r=a.block_r, bn=b.bn)
+        shard_pairs = [
+            revisit_pair_stream(p, window_blocks=wb, block_base=int(s))
+            for p, (s, _) in zip(shard_pairs, ranges)]
+    return ranges, shard_pairs, wb
+
+
 def bcc_spgemm_tiled(a: BCC, b: TiledCSR, *,
                      interpret: bool | None = None,
                      stream: tuple | None = None,
                      pairs: tuple | None = None,
                      resident: bool | None = None,
                      compact: bool | None = None,
-                     double_buffer: bool | None = None) -> jax.Array:
+                     double_buffer: bool | None = None,
+                     shards: int | None = None,
+                     revisit: bool = False,
+                     shard_pack: tuple | None = None) -> jax.Array:
     """C = A_bcc @ B_tiled via the Pallas Sp×Sp kernel tier. Returns the
     dense ``(a.nrows, b.ncols)`` product (fp32 — bf16 B tiles are upcast
     at the MXU input, accumulation stays fp32).
@@ -220,6 +272,20 @@ def bcc_spgemm_tiled(a: BCC, b: TiledCSR, *,
       * ``stream`` / ``pairs`` override the packed A compact stream and
         the live-pair grid (packed once per operand by callers that
         reuse the plan).
+      * ``shards`` — fan the compacted grid out over this many cores
+        (contiguous block ranges balanced by live-pair count, disjoint C
+        row strips, no cross-core accumulation). Default: auto —
+        ``pallas_shard_count()``, i.e. every TPU core and 1 off-TPU
+        (where the identical partition runs serially).
+      * ``revisit`` — B-fetch-deduping revisit order: each core's
+        sub-stream is resorted (j, slot, block) within VMEM-budget
+        windows so the streamed-B DMA elision fetches each live tile
+        once per window instead of once per touching block. Bit-identical
+        output; counter-visible in ``live_pair_counters`` /
+        ``bench_kernels``. Off by default (the resident variants already
+        fetch B once; the win is for streamed, HBM-resident B).
+      * ``shard_pack`` overrides the packed partition
+        (:func:`build_shard_pack`, cached by the planner's serving path).
     """
     if interpret is None:
         interpret = not on_tpu()
@@ -241,8 +307,22 @@ def bcc_spgemm_tiled(a: BCC, b: TiledCSR, *,
     if compact:
         if pairs is None:
             pairs = build_live_pairs(a, b, stream)
-        blocks, js, slots, a_idx = (jnp.asarray(p) for p in pairs)
         values = jnp.asarray(stream[2])
+        if shard_pack is None:
+            shard_pack = build_shard_pack(a, b, pairs, shards=shards,
+                                          revisit=revisit)
+        if shard_pack is not None:
+            ranges, shard_pairs, wb = shard_pack
+            out = cluster_spgemm_pairs_sharded(
+                shard_pairs, ranges, values, b.tiles,
+                block_r=a.block_r, block_k=a.block_k, bn=b.bn,
+                nblocks=nblocks, nnb=b.nnb, window_blocks=wb,
+                resident=bool(resident) and wb is None,
+                double_buffer=(double_buffer if double_buffer is not None
+                               else on_tpu()),
+                interpret=interpret)
+            return out[: a.nrows, : b.ncols]
+        blocks, js, slots, a_idx = (jnp.asarray(p) for p in pairs)
         if resident:
             kernel = cluster_spgemm_pairs_resident
         elif double_buffer if double_buffer is not None else on_tpu():

@@ -7,7 +7,7 @@ import numpy as np
 
 __all__ = ["cluster_spmm_ref", "cluster_spmm_compact_ref",
            "cluster_spgemm_tiled_ref", "cluster_spgemm_pairs_ref",
-           "flash_attention_ref"]
+           "cluster_spgemm_pairs_sharded_ref", "flash_attention_ref"]
 
 
 def cluster_spmm_ref(tile_ids, a_values, b, *, block_r, block_k,
@@ -88,6 +88,30 @@ def cluster_spgemm_pairs_ref(blocks, js, slots, a_idx, a_values, b_tiles,
         c0 = int(js[t]) * bn
         c[r0:r0 + block_r, c0:c0 + bn] += (
             a_values[int(a_idx[t])] @ b_tiles[int(slots[t])])
+    return c
+
+
+def cluster_spgemm_pairs_sharded_ref(shard_pairs, block_ranges, a_values,
+                                     b_tiles, *, block_r, block_k, bn,
+                                     nblocks, nnb):
+    """Oracle for the sharded (and revisit-ordered) pair kernels: walk
+    every shard's sub-stream into the global C — the pair order within a
+    shard is irrelevant to the oracle (strips are disjoint and += is the
+    same per-element sequence), so one oracle covers both orderings."""
+    a_values = np.asarray(a_values, dtype=np.float32)
+    b_tiles = np.asarray(b_tiles, dtype=np.float32)
+    c = np.zeros((nblocks * block_r, nnb * bn), dtype=np.float32)
+    for (start, end), (blocks, js, slots, a_idx) in zip(
+            np.asarray(block_ranges), shard_pairs):
+        for t in range(np.asarray(blocks).shape[0]):
+            if slots[t] <= 0:
+                continue
+            blk = int(blocks[t])
+            assert start <= blk < end, "pair outside its shard's range"
+            r0 = blk * block_r
+            c0 = int(js[t]) * bn
+            c[r0:r0 + block_r, c0:c0 + bn] += (
+                a_values[int(a_idx[t])] @ b_tiles[int(slots[t])])
     return c
 
 

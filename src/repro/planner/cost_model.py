@@ -66,6 +66,13 @@ PALLAS_SLAB_FILL_BOOST = 4.0
 # step + A DMA per dead (stream step, column strip) pair instead; that
 # cost no longer scales with the lattice.)
 PALLAS_DEAD_STEP_REL = 0.01
+# multi-core sharding: the partitioner splits the pair stream into
+# contiguous block ranges balanced by live-pair count, so each core runs
+# ~1/cores of the grid steps against its own C row strip (no cross-core
+# accumulation). The wall-clock term scales with the *slowest* core's
+# step count; the partitioner's acceptance gate bounds imbalance at 20%
+# of ideal, hence the efficiency discount ≈ 1/1.2.
+PALLAS_SHARD_EFFICIENCY = 0.85
 
 
 def _pallas_on_tpu() -> bool:
@@ -73,9 +80,35 @@ def _pallas_on_tpu() -> bool:
     return on_tpu()
 
 
+def _pallas_core_count() -> int:
+    """Cores the sharded pair-stream kernel would fan out over — the
+    divisor of the per-core step-count term below (tests monkeypatch
+    this to model multi-core backends off-TPU)."""
+    from repro.kernels.ops import pallas_shard_count
+    return pallas_shard_count()
+
+
+def _pallas_compact_ok(ncols: int) -> bool:
+    """Whether the compacted (shardable) grid applies to an A² product on
+    a matrix this wide — ``ops.compact_grid_ok_ncols`` at the serving
+    path's default packing: wide B falls back to the padded per-tile
+    grid, which runs single-stream, so the per-core discount must not
+    apply there."""
+    from repro.kernels.ops import compact_grid_ok_ncols
+    return compact_grid_ok_ncols(ncols)
+
+
 @dataclasses.dataclass(frozen=True)
 class Candidate:
-    """One point of the method menu: a row reordering × a compute scheme."""
+    """One point of the method menu: a row reordering × a compute scheme.
+
+    >>> Candidate("rcm", "fixed").key
+    'rcm+fixed'
+    >>> Candidate("rcm", "banded")
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown scheme 'banded'
+    """
 
     reorder: str          # name in repro.core.reorder.REORDERINGS
     scheme: str           # one of SCHEMES
@@ -151,6 +184,13 @@ class ScoredCandidate:
     ``kernel_rel`` / ``preprocess_rel`` are relative to the identity
     row-wise SpGEMM time of the same matrix; ``total_rel`` is the full
     amortized bill ``preprocess_rel + reuse × kernel_rel``.
+
+    >>> s = ScoredCandidate(Candidate("rcm", "fixed"), kernel_rel=0.8,
+    ...                     preprocess_rel=1.0, reuse=10, measured=True)
+    >>> s.total_rel, round(s.gain_rel, 3), s.amortizes
+    (9.0, 0.2, True)
+    >>> round(s.break_even, 6)
+    5.0
     """
 
     candidate: Candidate
@@ -195,6 +235,13 @@ def amortizes(reuse: int, gain_per_call: float, preprocess: float) -> bool:
     The identity candidate (zero gain, zero preprocessing) amortizes by
     convention; anything with positive preprocessing needs strictly
     positive covered gain.
+
+    >>> amortizes(10, 0.2, 1.5)          # 10 × 0.2 > 1.5
+    True
+    >>> amortizes(1, 0.2, 1.5)           # single-shot: never pays
+    False
+    >>> amortizes(1, 0.0, 0.0)           # identity: free by convention
+    True
     """
     if preprocess <= 0.0:
         return True
@@ -202,7 +249,15 @@ def amortizes(reuse: int, gain_per_call: float, preprocess: float) -> bool:
 
 
 def break_even_reuse(gain_per_call: float, preprocess: float) -> float:
-    """Number of calls after which preprocessing has paid for itself."""
+    """Number of calls after which preprocessing has paid for itself.
+
+    >>> break_even_reuse(0.2, 1.5)
+    7.5
+    >>> break_even_reuse(0.0, 1.0)       # no gain: never pays
+    inf
+    >>> break_even_reuse(0.5, 0.0)       # nothing to pay off
+    0.0
+    """
     if preprocess <= 0.0:
         return 0.0
     if gain_per_call <= 0.0:
@@ -229,6 +284,15 @@ class CostModel:
 
     def observe(self, fingerprint: str, candidate: Candidate,
                 kernel_s: float, preprocess_s: float) -> None:
+        """Record a real (kernel, preprocess) timing for a candidate.
+
+        >>> m = CostModel()
+        >>> m.observe("fp0", IDENTITY, kernel_s=2.0, preprocess_s=0.0)
+        >>> m.measurement("fp0", IDENTITY).kernel_s
+        2.0
+        >>> m.measurement("fp0", Candidate("rcm", "fixed")) is None
+        True
+        """
         self._measured[(fingerprint, candidate.key)] = Measurement(
             kernel_s=float(kernel_s), preprocess_s=float(preprocess_s))
 
@@ -245,8 +309,15 @@ class CostModel:
     # -- heuristic layer -----------------------------------------------------
 
     @staticmethod
-    def _heuristic(f: MatrixFeatures, c: Candidate) -> tuple[float, float]:
-        """(kernel_rel, preprocess_rel) from structural features alone."""
+    def _heuristic(f: MatrixFeatures, c: Candidate,
+                   workload: str = "a2") -> tuple[float, float]:
+        """(kernel_rel, preprocess_rel) from structural features alone.
+
+        ``workload`` matters only to the pallas scheme's multi-core
+        discount: the sharded pair-stream kernel serves the A² (sparse ×
+        sparse) product — the dense-B SpMM path runs the single-stream
+        ``bcc_spmm_compact``, so ``workload="spmm"`` scores pallas
+        without the per-core division."""
         # disorder: how far the current order is from a banded layout —
         # a random symmetric permutation lands at bandwidth_mean ≈ 1/3
         disorder = min(3.0 * f.bandwidth_mean, 1.0)
@@ -309,7 +380,23 @@ class CostModel:
                 a_term = PALLAS_A_BYTES_PER_SLOT / slab_fill
                 kernel_rel = ((b_term + a_term) / PALLAS_GATHER_BYTES
                               + PALLAS_DEAD_STEP_REL)
-                kernel_rel = min(max(kernel_rel, 0.15),
+                # multi-core sharding: per-core step counts — the
+                # traffic terms divide across cores (slowest-core
+                # discount per the partitioner's balance gate), which
+                # is what makes the sharded variant the routed choice
+                # whenever the backend has more than one core. The XLA
+                # gather baseline it is scored against stays
+                # single-stream, matching what execute() would run.
+                # Wide matrices whose C row strip blows the compact
+                # budget fall back to the single-stream padded grid, and
+                # the dense-B SpMM path is not sharded at all — neither
+                # collects the discount.
+                cores = (max(_pallas_core_count(), 1)
+                         if workload == "a2" and _pallas_compact_ok(f.ncols)
+                         else 1)
+                if cores > 1:
+                    kernel_rel /= PALLAS_SHARD_EFFICIENCY * cores
+                kernel_rel = min(max(kernel_rel, 0.15 / cores),
                                  PALLAS_INTERPRET_REL)
 
         pre = _REORDER_PRE.get(c.reorder, 1.0) + _SCHEME_PRE[c.scheme]
@@ -322,7 +409,8 @@ class CostModel:
     # -- public API ----------------------------------------------------------
 
     def score(self, features: MatrixFeatures, candidate: Candidate,
-              reuse: int, fingerprint: str | None = None) -> ScoredCandidate:
+              reuse: int, fingerprint: str | None = None,
+              workload: str = "a2") -> ScoredCandidate:
         base = self._base_kernel_s(fingerprint)
         m = (self._measured.get((fingerprint, candidate.key))
              if fingerprint is not None else None)
@@ -331,7 +419,7 @@ class CostModel:
                 candidate=candidate, kernel_rel=m.kernel_s / base,
                 preprocess_rel=m.preprocess_s / base, reuse=reuse,
                 measured=True)
-        kernel_rel, pre = self._heuristic(features, candidate)
+        kernel_rel, pre = self._heuristic(features, candidate, workload)
         cal = self.calibration
         if cal is not None:
             # fitted slope per scheme (rowwise-normalized so identity
@@ -354,7 +442,8 @@ class CostModel:
 
     def rank(self, features: MatrixFeatures, reuse: int,
              candidates=DEFAULT_CANDIDATES,
-             fingerprint: str | None = None) -> list[ScoredCandidate]:
+             fingerprint: str | None = None,
+             workload: str = "a2") -> list[ScoredCandidate]:
         """Score all candidates; amortizing ones first, by total cost.
 
         Non-amortizing candidates sort after every amortizing one (they
@@ -362,7 +451,7 @@ class CostModel:
         them) but can never be chosen by the planner.
         """
         reuse = max(int(reuse), 1)
-        scored = [self.score(features, c, reuse, fingerprint)
+        scored = [self.score(features, c, reuse, fingerprint, workload)
                   for c in candidates]
         return sorted(scored,
                       key=lambda s: (not s.amortizes, s.total_rel,
@@ -370,11 +459,13 @@ class CostModel:
 
     def choose(self, features: MatrixFeatures, reuse: int,
                candidates=DEFAULT_CANDIDATES,
-               fingerprint: str | None = None) -> ScoredCandidate:
+               fingerprint: str | None = None,
+               workload: str = "a2") -> ScoredCandidate:
         """Best amortizing candidate (identity is always amortizing, so
         the result is never worse than identity *under the model*)."""
-        ranked = self.rank(features, reuse, candidates, fingerprint)
+        ranked = self.rank(features, reuse, candidates, fingerprint,
+                           workload)
         for s in ranked:
             if s.amortizes:
                 return s
-        return self.score(features, IDENTITY, reuse, fingerprint)
+        return self.score(features, IDENTITY, reuse, fingerprint, workload)

@@ -227,7 +227,8 @@ class Planner:
                     return hit
                 use_cache = False
         feats = extract_features(a)
-        ranked = self.cost_model.rank(feats, reuse_hint, cands, fp_w)
+        ranked = self.cost_model.rank(feats, reuse_hint, cands, fp_w,
+                                      workload)
         if measure:
             # the identity baseline normalizes every other measurement —
             # probe it even when the caller's candidate set omits it
@@ -240,7 +241,8 @@ class Planner:
                     m = self._call_measurer(a, sc.candidate, workload)
                     self.cost_model.observe(fp_w, sc.candidate,
                                             m.kernel_s, m.preprocess_s)
-            ranked = self.cost_model.rank(feats, reuse_hint, cands, fp_w)
+            ranked = self.cost_model.rank(feats, reuse_hint, cands, fp_w,
+                                          workload)
             # evidence only: an unmeasured candidate's optimistic heuristic
             # must not outrank the measured shortlist (identity is always
             # measured, so this pool is never empty)
@@ -439,7 +441,8 @@ class Planner:
                 # the Pallas Sp×Sp tier: BCC(A) × TiledCSR(B) on the MXU.
                 # Everything the kernel streams is packed exactly once per
                 # cached operand pair: the adaptive k-tile height, the
-                # compact A stream AND the live-pair compacted grid — a
+                # compact A stream, the live-pair compacted grid AND (on
+                # multi-core backends) its per-core shard partition — a
                 # cache hit goes straight to the kernel with zero host work
                 bk = select_block_k(bh)
                 bcc = bcc_from_host(ap, block_k=bk)
@@ -453,7 +456,11 @@ class Planner:
                 pairs = (kernel_ops.build_live_pairs(bcc, tiled, stream)
                          if kernel_ops.compact_grid_ok(bcc, tiled)
                          else None)
-                cached = ("pallas", bcc, tiled, stream, pairs)
+                shard_pack = (kernel_ops.build_shard_pack(bcc, tiled, pairs)
+                              if pairs is not None
+                              and kernel_ops.pallas_shard_count() > 1
+                              else None)
+                cached = ("pallas", bcc, tiled, stream, pairs, shard_pack)
             else:
                 dev_b = csr_from_host(bh)
                 b_lens = bh.row_nnz()
@@ -481,9 +488,10 @@ class Planner:
             self._exec_put(ck, cached)
         kind = cached[0]
         if kind == "pallas":
-            _, bcc, tiled, stream, pairs = cached
+            _, bcc, tiled, stream, pairs, shard_pack = cached
             out = lambda: kernel_ops.bcc_spgemm_tiled(  # noqa: E731
-                bcc, tiled, stream=stream, pairs=pairs)
+                bcc, tiled, stream=stream, pairs=pairs,
+                shard_pack=shard_pack)
         elif kind == "row":
             _, op_a, op_b, bins, srows = cached
             out = lambda: spgemm_rowwise_dense_binned(  # noqa: E731

@@ -1,0 +1,116 @@
+#!/usr/bin/env python
+"""Docs link/consistency checker (`make docs-check`).
+
+Keeps the `docs/` architecture suite honest against the code it
+describes. Checks, in order:
+
+1. the three guides exist (`docs/formats.md`, `docs/planner.md`,
+   `docs/kernels.md`);
+2. every relative markdown link in `README.md` + `docs/*.md` resolves to
+   an existing file (anchors stripped; http(s) links skipped);
+3. every backticked code cross-reference of the form ``path.py::symbol``
+   (or a bare repo path ending in .py/.md) points at an existing file,
+   and the named symbol occurs in that file's source;
+4. the counters glossary in `docs/kernels.md` stays in two-way sync with
+   ``repro.core.formats.COUNTER_UNITS``: every glossary counter exists in
+   the code (COUNTER_UNITS or the bench_kernels source) and every
+   COUNTER_UNITS entry is documented in the glossary.
+
+Exit code 0 when clean; prints one line per violation otherwise.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+GUIDES = ["docs/formats.md", "docs/planner.md", "docs/kernels.md"]
+DOC_FILES = ["README.md"] + GUIDES
+
+LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+CODEREF_RE = re.compile(r"`([\w./-]+\.(?:py|md))(?:::([A-Za-z_][\w.]*))?`")
+GLOSSARY_ROW_RE = re.compile(r"^\|\s*`([\w]+)`\s*\|")
+
+
+def _read(relpath: str) -> str:
+    with open(os.path.join(ROOT, relpath)) as f:
+        return f.read()
+
+
+def check() -> list[str]:
+    errors: list[str] = []
+    for g in GUIDES:
+        if not os.path.exists(os.path.join(ROOT, g)):
+            errors.append(f"missing guide: {g}")
+    docs = {p: _read(p) for p in DOC_FILES
+            if os.path.exists(os.path.join(ROOT, p))}
+
+    # 2. markdown links resolve
+    for path, text in docs.items():
+        base = os.path.dirname(os.path.join(ROOT, path))
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:                      # pure in-page anchor
+                continue
+            if not os.path.exists(os.path.normpath(os.path.join(base, rel))):
+                errors.append(f"{path}: broken link -> {target}")
+
+    # 3. code cross-references resolve (path exists, symbol in source)
+    for path, text in docs.items():
+        for ref_path, symbol in CODEREF_RE.findall(text):
+            full = os.path.join(ROOT, ref_path)
+            if not os.path.exists(full):
+                errors.append(f"{path}: code ref to missing file "
+                              f"{ref_path}")
+                continue
+            if symbol:
+                src = _read(ref_path)
+                leaf = symbol.split(".")[-1]
+                if leaf not in src:
+                    errors.append(f"{path}: symbol '{symbol}' not found "
+                                  f"in {ref_path}")
+
+    # 4. counters glossary <-> COUNTER_UNITS, two-way
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.core.formats import COUNTER_UNITS
+    kern = docs.get("docs/kernels.md", "")
+    glossary = set()
+    in_glossary = False
+    for line in kern.splitlines():
+        if line.startswith("## "):
+            in_glossary = line.strip().lower() == "## counters glossary"
+            continue
+        if in_glossary:
+            m = GLOSSARY_ROW_RE.match(line)
+            if m:
+                glossary.add(m.group(1))
+    if not glossary:
+        errors.append("docs/kernels.md: no counters glossary table found")
+    bench_src = _read("benchmarks/bench_kernels.py")
+    for name in sorted(glossary):
+        if name not in COUNTER_UNITS and name not in bench_src:
+            errors.append(f"docs/kernels.md glossary cites '{name}' — not "
+                          "in COUNTER_UNITS nor bench_kernels.py")
+    for name in sorted(COUNTER_UNITS):
+        if name not in glossary:
+            errors.append(f"COUNTER_UNITS['{name}'] undocumented in the "
+                          "docs/kernels.md counters glossary")
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    if errors:
+        for e in errors:
+            print(f"docs-check: {e}")
+        return 1
+    print(f"docs-check: {len(DOC_FILES)} files clean (links, code refs, "
+          "counters glossary in sync)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
