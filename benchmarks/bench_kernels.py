@@ -31,6 +31,17 @@ matrix:
   blocks within VMEM-budget windows), and the worst per-core live-pair
   imbalance of the 4-way contiguous-block-range partition over the ideal
   split (gate: ≤ 1.2, i.e. within 20% of ideal).
+* **sparse-C output counters** (ISSUE 6): C bytes the dense row strips
+  would write to HBM over the :class:`~repro.core.formats.CompactedC`
+  live slabs' bytes, known structurally from the live-pair stream (the
+  symbolic phase — no numeric product runs). ``c_bytes_ratio_gm`` gates
+  ≥ 2× over the *sparse-routed* families only (predicted C window
+  density ≤ the ``ops`` auto-select threshold); dense-output families
+  route dense-strip and owe no reduction. The interpret parity check
+  also runs the sparse-C kernel epilogue end-to-end
+  (``CompactedC → HostCSR``) — same accumulation order as the
+  dense-strip kernel, so the round trip reproduces its output bit for
+  bit and its ``spgemm_reference`` error exactly.
 * **padding occupancy**: fill of B's live tile lattice and the A-side BCC
   padding fraction — the two waste terms the cost model trades off.
 * wall-clock Pallas-vs-XLA speedup on a TPU backend (interpret mode is
@@ -56,7 +67,9 @@ import numpy as np
 
 from repro.benchlib import representative_subset, time_fn
 from repro.core.clustering import hierarchical_clusters
-from repro.core.formats import (COUNTER_UNITS, bcc_from_host, csr_from_host,
+from repro.core.formats import (COUNTER_UNITS, CompactedC, bcc_from_host,
+                                compacted_c_counters, compacted_c_table,
+                                compacted_c_to_host, csr_from_host,
                                 live_pair_counters, partition_balance,
                                 partition_pair_stream, revisit_pair_stream,
                                 revisit_window_blocks, tiled_csr_from_host,
@@ -64,7 +77,8 @@ from repro.core.formats import (COUNTER_UNITS, bcc_from_host, csr_from_host,
 from repro.core.reorder import reorder
 from repro.core.spgemm import (b_bytes_rowwise_binned, b_bytes_tiled,
                                flops_spgemm, length_bins, slot_rows_host,
-                               spgemm_reference, spgemm_rowwise_dense_binned)
+                               spgemm_reference, spgemm_rowwise_dense_binned,
+                               symbolic_row_nnz)
 from repro.core.suite import generate
 from repro.kernels import ops
 
@@ -82,6 +96,8 @@ GATE_B_REFETCH_RATIO = 1.15       # B tile refetches, unordered over
                                   # revisit-ordered, geomean ≥
 GATE_SHARD_BALANCE = 1.2          # worst per-core live-pair imbalance
                                   # over the ideal split, ≤ (within 20%)
+GATE_C_BYTES_RATIO = 2.0          # dense-strip / CompactedC C bytes
+                                  # written, sparse-routed families, ≥
 BENCH_SHARDS = 4                  # cores the balance gate partitions for
 
 
@@ -104,6 +120,7 @@ def _spgemm_pallas_vs_xla(tier: str) -> dict:
     ratios_tiled, ratios_routed = [], []
     steps_per_mxu, a_ratios, bf16_ratios = [], [], []
     refetch_ratios, balances = [], []
+    c_ratios_sparse, c_densities = [], []
     smallest = None              # (nnz, HostCSR) for the parity check below
     for spec in specs:
         a = generate(spec)
@@ -161,6 +178,28 @@ def _spgemm_pallas_vs_xla(tier: str) -> dict:
         _, shard_pairs = partition_pair_stream(
             pairs, nblocks=nblocks, num_shards=BENCH_SHARDS)
         balance = partition_balance(shard_pairs)
+        # sparse-C output tier (ISSUE 6): C-side traffic, known before
+        # the numeric phase — the live-pair stream pins the CompactedC
+        # table, which pins the slab bytes; a structural (zero-slab)
+        # CompactedC carries the table through compacted_c_counters with
+        # the exact structural nnz(C) supplied symbolically. Only the
+        # sparse-routed families (density ≤ the ops auto-select
+        # threshold) enter the ≥2× gate — dense-output families ship the
+        # dense-strip path and owe no reduction.
+        c_density = ops.predict_c_window_density(pairs, nblocks=nblocks,
+                                                 nnb=tiled_b.nnb)
+        c_table, c_live = compacted_c_table(pairs, nblocks=nblocks,
+                                            nnb=tiled_b.nnb)
+        c_struct = CompactedC(
+            slabs=jnp.zeros((c_live + 1, BLOCK_R, BN), jnp.float32),
+            table=c_table, nrows=best_mat.nrows, ncols=best_mat.ncols,
+            block_r=BLOCK_R, bn=BN)
+        c_cnt = compacted_c_counters(
+            c_struct,
+            c_nnz=int(symbolic_row_nnz(best_mat, best_mat).sum()))
+        c_ratio = (c_cnt["c_bytes_dense"]
+                   / max(c_cnt["c_bytes_sparse"], 1))
+        c_sparse_routed = c_density <= ops._SPARSE_C_DENSITY
         # bf16 tile store: measured from the actually-packed stores (not
         # re-derived from the byte formula), so a regression in the bf16
         # packing plumbing shows up as a gate failure
@@ -195,12 +234,19 @@ def _spgemm_pallas_vs_xla(tier: str) -> dict:
             "revisit_window_blocks": wb,
             "a_fetches_revisit": cnt_rv["a_fetches"],
             "shard_balance": balance,
+            "c_window_density": c_density,
+            "c_routed": "sparse" if c_sparse_routed else "dense",
+            "c_bytes_ratio": c_ratio,
+            **c_cnt,
         }
         steps_per_mxu.append(cnt["steps_per_mxu"])
         a_ratios.append(a_ratio)
         bf16_ratios.append(bf16_ratio)
         refetch_ratios.append(refetch_ratio)
         balances.append(balance)
+        c_densities.append(c_density)
+        if c_sparse_routed:
+            c_ratios_sparse.append(c_ratio)
         if ops.on_tpu():
             # compiled wall-clock — only meaningful on the real MXU
             t_pal = time_fn(
@@ -217,7 +263,7 @@ def _spgemm_pallas_vs_xla(tier: str) -> dict:
     # units discipline: every stream counter this table prints must be
     # declared (with its unit) in formats.COUNTER_UNITS — the same table
     # docs/kernels.md renders as the counters glossary
-    undeclared = [k for k in cnt if k not in COUNTER_UNITS]
+    undeclared = [k for k in {**cnt, **c_cnt} if k not in COUNTER_UNITS]
     assert not undeclared, f"counters missing units: {undeclared}"
     print_csv(rows, "spgemm_pallas_vs_xla_b_traffic")
     print("# counter units: counts are DMA/step events, *_bytes are HBM "
@@ -245,6 +291,17 @@ def _spgemm_pallas_vs_xla(tier: str) -> dict:
     got_sh = np.asarray(ops.bcc_spgemm_tiled(bcc, tiled, interpret=True,
                                              shards=2, revisit=True))
     err_sh = float(np.abs(got_sh - want).max())
+    # sparse-C kernel epilogue end-to-end: windowed-scatter compaction in
+    # the kernel, CompactedC → HostCSR — same s-ascending fp32
+    # accumulation per window as the dense-strip kernel, so the round
+    # trip must reproduce its output bit for bit (and its reference
+    # error exactly)
+    cc_sm = ops.bcc_spgemm_sparse_c(bcc, tiled, interpret=True,
+                                    epilogue="kernel")
+    got_sc = compacted_c_to_host(cc_sm).to_dense()
+    assert np.array_equal(got_sc, got[:got_sc.shape[0], :got_sc.shape[1]]), \
+        "sparse-C round trip diverged from the dense-strip kernel"
+    err_sc = float(np.abs(got_sc - want).max())
     summary = {
         "b_bytes_ratio_tiled_gm": geomean(ratios_tiled),
         "b_bytes_ratio_routed_gm": geomean(ratios_routed),
@@ -255,9 +312,15 @@ def _spgemm_pallas_vs_xla(tier: str) -> dict:
         "b_bytes_bf16_ratio_gm": geomean(bf16_ratios),
         "b_tile_refetch_ratio_gm": geomean(refetch_ratios),
         "shard_balance_worst": max(balances) if balances else float("nan"),
+        "c_bytes_ratio_gm": (geomean(c_ratios_sparse)
+                             if c_ratios_sparse else float("nan")),
+        "c_window_density_gm": geomean(c_densities),
+        "c_sparse_routed_pct": (100.0 * len(c_ratios_sparse)
+                                / max(len(rows), 1)),
         "interp_parity_max_err": err,
         "interp_parity_bf16_rel_err": err16,
         "interp_parity_sharded_max_err": err_sh,
+        "interp_parity_sparse_c_max_err": err_sc,
         "interp_validate_s": t_interp,
     }
     if ops.on_tpu():
@@ -337,6 +400,7 @@ def check_gates(summary: dict) -> list[str]:
         ("b_bytes_bf16_ratio_gm", ">=", GATE_BF16_RATIO),
         ("b_tile_refetch_ratio_gm", ">=", GATE_B_REFETCH_RATIO),
         ("shard_balance_worst", "<=", GATE_SHARD_BALANCE),
+        ("c_bytes_ratio_gm", ">=", GATE_C_BYTES_RATIO),
     ]
     fails = []
     for key, op, thr in checks:

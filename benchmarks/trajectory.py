@@ -70,6 +70,11 @@ _GATED = [
     # B-fetch-deduping revisit order (ISSUE 5): unordered-over-revisit
     # B tile refetch excess (higher is better — the dedup win)
     ("kernels", ("b_tile_refetch_ratio_gm",), True),
+    # sparse-C output tier (ISSUE 6): dense-strip over CompactedC C bytes
+    # written, geomean over the sparse-routed (output-density ≤ threshold)
+    # families — the ≥2× acceptance gate lives in bench_kernels; here the
+    # diff gate keeps later PRs from eroding it
+    ("kernels", ("c_bytes_ratio_gm",), True),
 ]
 
 
@@ -167,7 +172,9 @@ def _sum_kernels(res: dict) -> dict:
             "interp_parity_bf16_rel_err", "grid_steps_per_mxu_gm",
             "a_bytes_ratio_compact_gm", "b_bytes_bf16_ratio_gm",
             "b_tile_refetch_ratio_gm", "shard_balance_worst",
-            "interp_parity_sharded_max_err", "pallas_wallclock_speedup_gm")
+            "interp_parity_sharded_max_err", "pallas_wallclock_speedup_gm",
+            "c_bytes_ratio_gm", "c_window_density_gm",
+            "interp_parity_sparse_c_max_err")
     return {k: float(s[k]) for k in keys if k in s}
 
 
@@ -271,8 +278,13 @@ def compare(old: dict, new: dict,
 def diff_latest(tier: str, threshold: float = REGRESSION_THRESHOLD) -> int:
     paths = list_artifacts(tier)
     if len(paths) < 2:
-        print(f"# trajectory: {len(paths)} artifact(s) for tier '{tier}' — "
-              "need 2 to diff; passing")
+        have = ", ".join(os.path.basename(p) for p in paths) or "none"
+        print(f"# trajectory: need >= 2 committed artifacts for tier "
+              f"'{tier}' to diff — found {len(paths)} ({have}).")
+        print("# baseline re-anchored: stale pre-seed artifacts were "
+              "retired; `benchmarks/run.py --tier quick` at a clean "
+              "commit emits the fresh baseline. The gate passes until "
+              "an artifact pair exists.")
         return 0
     old_p, new_p = paths[-2], paths[-1]
     with open(old_p) as f:

@@ -1,15 +1,18 @@
 """Serve a small MoE model with batched requests through the continuous-
 batching engine — the cluster-wise dispatch (paper Alg. 1 ↔ models/moe.py)
-running in its natural habitat.
+running in its natural habitat — then serve the MoE's *expert-routing
+masks* as chained sparse products through the planner's
+``workload="chain"`` path (the sparse-C output tier's live consumer).
 
     PYTHONPATH=src python examples/serve_moe.py
 """
 import numpy as np
 
 from repro.configs.base import smoke_config
+from repro.core.formats import HostCSR
 from repro.launch.serve import run_serving
 from repro.models.transformer import init_params
-from repro.serve.engine import Request, ServingEngine
+from repro.serve.engine import Request, ServingEngine, SpGEMMServer
 
 import jax
 
@@ -33,6 +36,29 @@ def main() -> None:
     eng.run(steps=64)
     done = 6 - sum(r is not None for r in eng.requests) - len(eng._queue)
     print(f"[engine] completed {done}/6 ragged requests through 4 slots ✓")
+
+    # 3) expert-routing masks as chained sparse products. Top-2 routing
+    # gives a (tokens × experts) one-hot mask R; the expert co-activation
+    # graph G = bool(RᵀR) is square and sparse, and the multi-hop
+    # reachability mask G³ ("which experts share tokens within two
+    # routing hops") is exactly the chained product the planner's
+    # workload="chain" path serves — each hop re-fingerprints the
+    # sparse intermediate, and on pallas-scheme hops the CompactedC
+    # output feeds the next hop without a dense intermediate.
+    tokens, experts = 512, 64
+    route_rng = np.random.default_rng(1)
+    r = np.zeros((tokens, experts), np.float32)
+    for t in range(tokens):
+        r[t, route_rng.choice(experts, size=2, replace=False)] = 1.0
+    g = HostCSR.from_dense((r.T @ r > 0).astype(np.float32))
+    srv = SpGEMMServer()
+    first = srv.submit(g, hops=2)
+    second = srv.submit(g, hops=2)
+    assert second.plan_cache_hit, "repeat chain must hit the plan cache"
+    print(f"[chain] expert mask G³: nnz(G)={g.nnz} → "
+          f"nnz(G³)={second.result.nnz} via workload={second.workload} "
+          f"(kernel_path={first.kernel_path}, "
+          f"2nd-call plan-cache hit ✓)")
 
 
 if __name__ == "__main__":

@@ -7,6 +7,9 @@ static (reorder × scheme) grid it chooses from.
 Prints, per matrix: speedup of each static config relative to
 row-wise/original order (the shape of paper Fig. 2 / Fig. 3 / Table 2),
 then the planner's pick and its regret vs the best static config.
+Closes with an A^(hops+1) chain study through ``workload="chain"`` —
+each hop re-planned on the re-fingerprinted sparse intermediate, with
+the second run expected to hit the plan cache at every hop.
 Full-suite version: ``python -m benchmarks.run --only planner``.
 """
 import argparse
@@ -25,6 +28,8 @@ def main() -> None:
     ap.add_argument("--reorders", nargs="*",
                     default=["original", "rcm", "gp", "degree"])
     ap.add_argument("--reuse-hint", type=int, default=20)
+    ap.add_argument("--hops", type=int, default=2,
+                    help="chain-study hop count (A^(hops+1))")
     args = ap.parse_args()
 
     schemes = ["rowwise", "fixed", "variable"]
@@ -68,6 +73,25 @@ def main() -> None:
         row.append(f"{chosen.kernel_s / best.kernel_s:7.2f}x")
         print(f"{row[0]:<18}" + "".join(row[1:]))
     benchlib.save_cache()
+
+    # Chain study: serve A^(hops+1) through workload="chain" — every hop
+    # is planned on the re-fingerprinted sparse intermediate, and the
+    # pallas-scheme hops feed the CompactedC output straight into the
+    # next hop's repack instead of a dense intermediate.
+    power = args.hops + 1
+    print(f"\nchain study: A^{power} via workload=\"chain\" "
+          f"({args.hops} hops, second run re-planned from cache)")
+    print(f"{'matrix':<18}{'nnz(A)':>10}{'nnz(A^' + str(power) + ')':>12}"
+          f"{'hop schemes':>32}{'2nd-run hits':>14}")
+    for spec in specs[:min(4, len(specs))]:
+        a = generate(spec)
+        planner = Planner()
+        c, plans = planner.execute_chain(a, hops=args.hops)
+        _, plans2 = planner.execute_chain(a, hops=args.hops)
+        hops = "+".join(f"{p.reorder}/{p.scheme}" for p in plans)
+        hits = sum(p.from_cache for p in plans2)
+        print(f"{spec.name[:17]:<18}{a.nnz:>10}{c.nnz:>12}"
+              f"{hops:>32}{f'{hits}/{len(plans2)}':>14}")
 
 
 if __name__ == "__main__":

@@ -25,7 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.segment import (boundary_mask, expand_indptr, key_table,
-                                ragged_gather_indices, segmented_count)
+                                ragged_gather_indices, segmented_count,
+                                segmented_sum)
 
 __all__ = [
     "HostCSR",
@@ -33,6 +34,7 @@ __all__ = [
     "CSRCluster",
     "BCC",
     "TiledCSR",
+    "CompactedC",
     "csr_from_host",
     "csr_cluster_from_host",
     "csr_cluster_from_host_reference",
@@ -50,6 +52,13 @@ __all__ = [
     "partition_balance",
     "revisit_pair_stream",
     "revisit_window_blocks",
+    "tile_col_occupancy",
+    "symbolic_strip_nnz",
+    "symbolic_strip_nnz_reference",
+    "compacted_c_table",
+    "compacted_c_from_dense",
+    "compacted_c_to_host",
+    "compacted_c_counters",
     "COUNTER_UNITS",
     "csr_cluster_nbytes_exact",
     "csr_cluster_nbytes_exact_reference",
@@ -416,6 +425,71 @@ class TiledCSR:
                 out = jax.lax.dynamic_update_slice(
                     out, self.tiles[table[kb, nb]],
                     (kb * self.block_k, nb * self.bn))
+        return out[: self.nrows, : self.ncols]
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class CompactedC:
+    """Sparse-C output format of the two-phase Sp×Sp pipeline.
+
+    The dense kernels write every ``(block_r, bn)`` window of C back to
+    HBM, live or dead. ``CompactedC`` keeps only the *live* windows —
+    those the symbolic pass (:func:`symbolic_strip_nnz` /
+    :func:`compacted_c_table`) proves can hold a nonzero — as packed
+    value slabs, mirroring :class:`TiledCSR`'s layout on the output
+    side::
+
+        slabs : (slab_cap, block_r, bn)   slabs[0] is the reserved
+                                          all-zero slab; live windows
+                                          occupy 1..nslabs_live
+        table : (nblocks * nnb,) int32    (row block blk, col strip j) →
+                                          slab at table[blk * nnb + j];
+                                          0 = dead (the zero slab)
+
+    Slot **0 is reserved** (the ``TiledCSR`` zero-slot sentinel carried
+    to the output): dead windows cost no HBM write and no storage, yet
+    read back exactly zero through the table — so C bytes written scale
+    with nnz(C)'s window footprint, not ``rows × nnb·bn``.
+    """
+
+    _static = ("nrows", "ncols", "block_r", "bn")
+
+    slabs: jax.Array         # (slab_cap, block_r, bn)
+    table: jax.Array         # (nblocks * nnb,) int32, 0 = dead
+    nrows: int
+    ncols: int
+    block_r: int
+    bn: int
+
+    @property
+    def nblocks(self) -> int:
+        return (self.nrows + self.block_r - 1) // self.block_r
+
+    @property
+    def nnb(self) -> int:
+        return (self.ncols + self.bn - 1) // self.bn
+
+    @property
+    def slab_cap(self) -> int:
+        return self.slabs.shape[0]
+
+    @property
+    def nslabs_live(self) -> int:
+        """Live windows (excludes the reserved zero slab)."""
+        return int((np.asarray(self.table) > 0).sum())
+
+    def nbytes_slabs(self) -> int:
+        """HBM footprint of the slab store — what the numeric kernel
+        writes back instead of the dense row strips."""
+        return int(self.slabs.size * self.slabs.dtype.itemsize)
+
+    def to_dense(self) -> jax.Array:
+        # one gather through the table, window-major → row-major reshape
+        windows = self.slabs[self.table]         # (nblocks*nnb, br, bn)
+        out = windows.reshape(self.nblocks, self.nnb, self.block_r,
+                              self.bn).transpose(0, 2, 1, 3)
+        out = out.reshape(self.nblocks * self.block_r, self.nnb * self.bn)
         return out[: self.nrows, : self.ncols]
 
 
@@ -921,6 +995,10 @@ COUNTER_UNITS = {
     "b_tile_refetches": "live B tile DMAs beyond the first per tile (count)",
     "b_distinct_tiles": "distinct live B tiles touched (count)",
     "b_bytes": "live B tile HBM traffic (bytes)",
+    "c_nnz": "C nonzeros (count)",
+    "c_bytes_dense": "dense C row-strip HBM writes (bytes)",
+    "c_bytes_sparse": "CompactedC live-slab HBM writes (bytes)",
+    "c_compaction_steps": "sparse-C compaction windows written (count)",
 }
 
 
@@ -1172,6 +1250,183 @@ def revisit_pair_stream(pairs, *, window_blocks: int, block_base: int = 0
     win = (blocks.astype(np.int64) - block_base) // window_blocks
     order = np.lexsort((blocks, slots, js, win))
     return (blocks[order], js[order], slots[order], a_idx[order])
+
+
+# ---------------------------------------------------------------------------
+# sparse-C two-phase pipeline: symbolic per-strip bound + CompactedC packers
+# ---------------------------------------------------------------------------
+
+
+def tile_col_occupancy(b: TiledCSR) -> np.ndarray:
+    """(tile_cap, bn) bool — which lanes (output columns) of each B tile
+    hold at least one nonzero. Row 0 (the reserved zero tile) is all
+    False. This is the symbolic pass's B-side input: a C window's column
+    support is the union of its touching tiles' occupied lanes.
+
+    >>> b = tiled_csr_from_host(
+    ...     HostCSR.from_dense(np.eye(8, dtype=np.float32)),
+    ...     block_k=8, bn=8)
+    >>> tile_col_occupancy(b).astype(int).tolist()
+    [[0, 0, 0, 0, 0, 0, 0, 0], [1, 1, 1, 1, 1, 1, 1, 1]]
+    """
+    return np.asarray((np.asarray(b.tiles) != 0).any(axis=1))
+
+
+def symbolic_strip_nnz(pairs, occupancy, *, nblocks: int, nnb: int
+                       ) -> np.ndarray:
+    """Symbolic phase: per-C-row-strip nnz upper bound from the live-pair
+    stream — the tightening of ``core/spgemm.py``'s whole-matrix
+    :func:`repro.core.spgemm.symbolic_nnz` scalar down to row-block
+    granularity, without touching a single value.
+
+    For strip ``blk``, ``ub[blk] = Σ_j |∪ occupied lanes of the B tiles
+    the live pairs (blk, j, slot) contract|``: any nonzero ``C[r, c]`` of
+    a row ``r`` in the strip needs a ``k`` with ``A[r, k] ≠ 0`` (so the
+    k-tile is live in A's block ``blk``) and ``B[k, c] ≠ 0`` (so tile
+    ``(kb, j)`` is live and lane ``c % bn`` occupied) — hence every
+    row's column support lies inside the per-window unions, and
+    ``ub[blk]`` bounds each row's nnz in the strip. Exact (per row) when
+    rows within a block share their A pattern and the contracted B tiles
+    have disjoint, cancellation-free column supports.
+
+    Vectorized: one lexsort groups pairs by (blk, j) window, one
+    ``np.logical_or.reduceat`` over :func:`repro.core.segment.boundary_mask`
+    run starts takes each window's lane union, and a
+    :func:`repro.core.segment.segmented_sum` folds windows into strips.
+
+    Returns (nblocks,) int64.
+    """
+    blocks, js, slots, _ = (np.asarray(p) for p in pairs)
+    occ = np.asarray(occupancy, dtype=bool)
+    live = slots > 0
+    b = blocks[live].astype(np.int64)
+    j = js[live].astype(np.int64)
+    s = slots[live].astype(np.int64)
+    if b.size == 0:
+        return np.zeros(nblocks, dtype=np.int64)
+    key = b * nnb + j
+    order = np.argsort(key, kind="stable")
+    skey, ss = key[order], s[order]
+    first = boundary_mask(skey)
+    starts = np.flatnonzero(first)
+    union = np.logical_or.reduceat(occ[ss], starts, axis=0)  # (W, bn)
+    counts = union.sum(axis=1).astype(np.float64)
+    return segmented_sum(skey[first] // nnb, counts,
+                         nblocks).astype(np.int64)
+
+
+def symbolic_strip_nnz_reference(pairs, occupancy, *, nblocks: int,
+                                 nnb: int) -> np.ndarray:
+    """Loop reference for :func:`symbolic_strip_nnz` (test oracle)."""
+    blocks, js, slots, _ = (np.asarray(p) for p in pairs)
+    occ = np.asarray(occupancy, dtype=bool)
+    ub = np.zeros(nblocks, dtype=np.int64)
+    for blk in range(nblocks):
+        for j in range(nnb):
+            union = np.zeros(occ.shape[1], dtype=bool)
+            for t in range(blocks.shape[0]):
+                if (int(blocks[t]) == blk and int(js[t]) == j
+                        and int(slots[t]) > 0):
+                    union |= occ[int(slots[t])]
+            ub[blk] += int(union.sum())
+    return ub
+
+
+def compacted_c_table(pairs, *, nblocks: int, nnb: int
+                      ) -> tuple[np.ndarray, int]:
+    """Slab table of the live C windows: the distinct ``(blk, j)`` windows
+    touched by a live pair get slabs ``1..nlive`` in ascending window-key
+    order (:func:`repro.core.segment.key_table` with ``base=1`` — slab 0
+    stays the reserved zero slab, the :class:`TiledCSR` convention).
+    Windows no live pair touches are provably all-zero, so the numeric
+    phase never writes them. Returns ``(table, nslabs_live)``.
+
+    >>> table, n = compacted_c_table(([0, 1], [1, 0], [3, 5], [0, 1]),
+    ...                              nblocks=2, nnb=2)
+    >>> table.tolist(), n
+    ([0, 1, 2, 0], 2)
+    """
+    blocks, js, slots, _ = (np.asarray(p) for p in pairs)
+    live = slots > 0
+    key = blocks[live].astype(np.int64) * nnb + js[live].astype(np.int64)
+    ukey = np.unique(key)
+    return key_table(ukey, nblocks * nnb, base=1), int(ukey.size)
+
+
+def compacted_c_from_dense(dense, table, *, nrows: int, ncols: int,
+                           block_r: int, bn: int) -> CompactedC:
+    """XLA segment-compaction epilogue: gather the live ``(block_r, bn)``
+    windows of a dense C into packed :class:`CompactedC` slabs. This is
+    the off-TPU fallback of the sparse-C kernels' windowed-scatter
+    epilogue — same table, same slab order, bit-identical slabs (values
+    are moved, never recomputed)."""
+    table = np.asarray(table, dtype=np.int32)
+    nblocks = (nrows + block_r - 1) // block_r
+    nnb = (ncols + bn - 1) // bn
+    dense = jnp.asarray(dense)
+    pad_r = nblocks * block_r - dense.shape[0]
+    pad_c = nnb * bn - dense.shape[1]
+    if pad_r or pad_c:
+        dense = jnp.pad(dense, ((0, max(pad_r, 0)), (0, max(pad_c, 0))))
+    # (nblocks, block_r, nnb, bn) → (window, block_r, bn), window-major
+    windows = dense.reshape(nblocks, block_r, nnb, bn).transpose(0, 2, 1, 3)
+    windows = windows.reshape(nblocks * nnb, block_r, bn)
+    live_keys = np.flatnonzero(table > 0)
+    slabs = jnp.concatenate(
+        [jnp.zeros((1, block_r, bn), dense.dtype), windows[live_keys]],
+        axis=0)
+    return CompactedC(slabs=slabs, table=jnp.asarray(table),
+                      nrows=nrows, ncols=ncols, block_r=block_r, bn=bn)
+
+
+def compacted_c_to_host(c: CompactedC) -> HostCSR:
+    """CompactedC → HostCSR, values moved bit-for-bit (the round-trip the
+    sparse-C parity tests and the chain workload's per-hop repacking
+    use). Windows are disjoint, so no duplicate summing happens."""
+    table = np.asarray(c.table).reshape(c.nblocks, c.nnb)
+    slabs = np.asarray(c.slabs)
+    blk, j = np.nonzero(table > 0)
+    if blk.size == 0:
+        return HostCSR(np.zeros(c.nrows + 1, np.int64),
+                       np.empty(0, np.int32), np.empty(0, np.float32),
+                       (c.nrows, c.ncols))
+    vals = slabs[table[blk, j]]                  # (L, block_r, bn)
+    lw, rr, cc = np.nonzero(vals)
+    rows = blk[lw] * c.block_r + rr
+    cols = j[lw] * c.bn + cc
+    data = vals[lw, rr, cc]
+    keep = (rows < c.nrows) & (cols < c.ncols)
+    return HostCSR.from_coo(rows[keep], cols[keep], data[keep],
+                            (c.nrows, c.ncols), sum_duplicates=False)
+
+
+def compacted_c_counters(c: CompactedC, *, c_nnz: int | None = None,
+                         value_bytes: int = 4) -> dict:
+    """C-side traffic counters of the sparse-C tier (units per
+    :data:`COUNTER_UNITS`): what the dense row strips would have written
+    to HBM vs what the compacted slabs actually write, plus the
+    windowed-scatter epilogue's step count. ``c_nnz`` defaults to the
+    numeric slab count (exact nnz(C) including cancellation); pass the
+    structural count to match a boolean symbolic reference.
+
+    >>> c = compacted_c_from_dense(
+    ...     np.eye(8, dtype=np.float32), [1, 0],
+    ...     nrows=8, ncols=16, block_r=8, bn=8)
+    >>> k = compacted_c_counters(c)
+    >>> k["c_nnz"], k["c_compaction_steps"]
+    (8, 1)
+    >>> k["c_bytes_dense"], k["c_bytes_sparse"]
+    (512, 256)
+    """
+    live = c.nslabs_live
+    if c_nnz is None:
+        c_nnz = int(np.count_nonzero(np.asarray(c.slabs)))
+    return {
+        "c_nnz": int(c_nnz),
+        "c_bytes_dense": c.nblocks * c.block_r * c.nnb * c.bn * value_bytes,
+        "c_bytes_sparse": live * c.block_r * c.bn * value_bytes,
+        "c_compaction_steps": live,
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -48,7 +48,7 @@ __all__ = [
     "spgemm_rowwise_dense_binned", "spgemm_clusterwise_dense_binned",
     "length_bins", "slot_rows_host",
     "spmm_rowwise", "spmm_clusterwise",
-    "spgemm_reference", "symbolic_nnz", "flops_spgemm",
+    "spgemm_reference", "symbolic_nnz", "symbolic_row_nnz", "flops_spgemm",
     "gathers_rowwise", "gathers_clusterwise",
     "b_bytes_rowwise_binned", "b_bytes_tiled",
 ]
@@ -328,10 +328,25 @@ def spgemm_reference(a: HostCSR, b: HostCSR) -> np.ndarray:
 
 
 def symbolic_nnz(a: HostCSR, b: HostCSR) -> int:
-    """Symbolic-phase nnz(C) (exact, host-side)."""
+    """Symbolic-phase nnz(C) (exact, host-side, whole-matrix scalar).
+
+    The sparse-C tier tightens this to per-row-strip granularity from the
+    live-pair stream — :func:`repro.core.formats.symbolic_strip_nnz` —
+    without densifying either operand; this dense-boolean scalar stays as
+    the exact oracle those bounds are property-tested against."""
     c = (a.to_dense() != 0).astype(np.float32) @ \
         (b.to_dense() != 0).astype(np.float32)
     return int((c != 0).sum())
+
+
+def symbolic_row_nnz(a: HostCSR, b: HostCSR) -> np.ndarray:
+    """Exact per-row nnz(C) (structural — cancellation ignored), the
+    row-granular oracle for the sparse-C symbolic pass: for every row
+    block, ``symbolic_strip_nnz``'s per-strip bound must dominate each of
+    these rows."""
+    c = (a.to_dense() != 0).astype(np.float32) @ \
+        (b.to_dense() != 0).astype(np.float32)
+    return (c != 0).sum(axis=1).astype(np.int64)
 
 
 def flops_spgemm(a: HostCSR, b: HostCSR) -> int:

@@ -80,6 +80,21 @@ its own C row-strip range — blocks own disjoint C rows, so no cross-core
 accumulation is needed. Off-TPU (or on one device) the same partition
 runs serially, so results are identical everywhere.
 
+Sparse-C output (v4 — the two-phase pipeline's numeric phase)
+-------------------------------------------------------------
+
+Every kernel above writes *dense* C row strips — ``rows × nnb·bn`` HBM
+bytes regardless of nnz(C). ``cluster_spgemm_pairs_sparse{,_db}`` take a
+window-major re-sort of the live-pair stream (each pair tagged with its
+destination ``CompactedC`` slab from the symbolic pass's table) and emit
+only the *live* ``(block_r, bn)`` C windows as packed slabs: the VMEM
+accumulator is one window, zero-initialized on window entry and written
+back once on window exit — the windowed-scatter epilogue happens in the
+kernel's output BlockSpec itself, so C bytes written scale with nnz(C)'s
+window footprint. Within a window pairs stay s-ascending, so each C
+element sees the same fp32 accumulation order as the dense-strip kernels
+— bit-identical values, compacted layout.
+
 ``cluster_spgemm_pairs_window`` runs a *revisit-ordered* stream
 (:func:`repro.core.formats.revisit_pair_stream`): triples sharing a B
 tile sit adjacent across blocks, so the streamed-B DMA elision fetches
@@ -110,7 +125,8 @@ if _ANY is None:                                      # pragma: no cover
 __all__ = ["cluster_spgemm_tiled", "cluster_spgemm_resident",
            "cluster_spgemm_pairs", "cluster_spgemm_pairs_resident",
            "cluster_spgemm_pairs_db", "cluster_spgemm_pairs_window",
-           "cluster_spgemm_pairs_sharded"]
+           "cluster_spgemm_pairs_sharded", "cluster_spgemm_pairs_sparse",
+           "cluster_spgemm_pairs_sparse_db"]
 
 
 def _is_block_start(block_ids_ref, s):
@@ -663,3 +679,145 @@ def cluster_spgemm_pairs_sharded(shard_pairs, block_ranges,
     outs = [stacked[i, : (int(e) - int(s)) * block_r]
             for i, (s, e) in enumerate(ranges)]
     return jnp.concatenate(outs, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# v4: sparse-C output — compact live C windows on block exit
+# ---------------------------------------------------------------------------
+
+
+def _spgemm_kernel_pairs_sparse(cw_ref, slot_ref, aidx_ref,
+                                a_ref, b_ref, o_ref):
+    t = pl.program_id(0)
+
+    @pl.when(_is_block_start(cw_ref, t))
+    def _init():                     # one zero-fill per live C window
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(slot_ref[t] > 0)        # slab-0 sentinel / tail pads: no MXU
+    def _acc():
+        prod = jnp.dot(a_ref[0], b_ref[0].astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        o_ref[0] += prod.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_r", "block_k", "bn", "nslabs", "interpret"))
+def cluster_spgemm_pairs_sparse(c_slots: jax.Array, slots: jax.Array,
+                                a_idx: jax.Array, a_values: jax.Array,
+                                b_tiles: jax.Array, *, block_r: int,
+                                block_k: int, bn: int, nslabs: int,
+                                interpret: bool = False) -> jax.Array:
+    """Numeric phase of the sparse-C pipeline: accumulate each live
+    ``(blk, j)`` C window in VMEM and write it back once as a packed
+    :class:`repro.core.formats.CompactedC` slab.
+
+    Args:
+      c_slots: (T,) int32, non-decreasing — destination slab of each pair
+        (``CompactedC.table[blk*nnb + j]``). The stream MUST be
+        window-major (sorted by (blk, j), s ascending within a window —
+        :func:`repro.kernels.ops.build_sparse_c_pairs`) so each output
+        slab is visited contiguously: Pallas writes an output block back
+        when its index changes, and revisiting it later would clobber.
+        Slot 0 (the reserved zero slab) is visited by one leading
+        sentinel pair so it initializes.
+      slots: (T,) int32 — B tile slot per pair, 0 = no MXU issue (the
+        sentinel and tail pads).
+      a_idx: (T,) int32 — A stream index per pair.
+      a_values / b_tiles: as in :func:`cluster_spgemm_pairs`.
+
+    Returns: (nslabs, block_r, bn) fp32 slab store — ``CompactedC.slabs``.
+    """
+    t_total = c_slots.shape[0]
+    assert a_values.shape[1:] == (block_r, block_k)
+    assert b_tiles.shape[1:] == (block_k, bn)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(t_total,),
+        in_specs=[
+            pl.BlockSpec((1, block_r, block_k),
+                         lambda t, cw, sl, ai: (ai[t], 0, 0)),
+            pl.BlockSpec((1, block_k, bn),
+                         lambda t, cw, sl, ai: (sl[t], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_r, bn),
+                               lambda t, cw, sl, ai: (cw[t], 0, 0)),
+    )
+    return pl.pallas_call(
+        _spgemm_kernel_pairs_sparse,
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((nslabs, block_r, bn), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(c_slots, slots, a_idx, a_values, b_tiles)
+
+
+def _spgemm_kernel_pairs_sparse_db(cw_ref, slot_ref, aidx_ref,
+                                   a_ref, b_hbm, o_ref, b_buf, sem):
+    t = pl.program_id(0)
+    nt = pl.num_programs(0)
+
+    def _tile_dma(pos, buf):
+        return pltpu.make_async_copy(b_hbm.at[slot_ref[pos]],
+                                     b_buf.at[buf], sem.at[buf])
+
+    @pl.when(t == 0)
+    def _warm():                      # prime the pipeline
+        _tile_dma(0, 0).start()
+
+    @pl.when(t + 1 < nt)
+    def _ahead():                     # overlap: fetch t+1 while t computes
+        _tile_dma(t + 1, (t + 1) % 2).start()
+
+    _tile_dma(t, t % 2).wait()
+
+    @pl.when(_is_block_start(cw_ref, t))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(slot_ref[t] > 0)
+    def _acc():
+        prod = jnp.dot(a_ref[0], b_buf[t % 2].astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        o_ref[0] += prod.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_r", "block_k", "bn", "nslabs", "interpret"))
+def cluster_spgemm_pairs_sparse_db(c_slots: jax.Array, slots: jax.Array,
+                                   a_idx: jax.Array, a_values: jax.Array,
+                                   b_tiles: jax.Array, *, block_r: int,
+                                   block_k: int, bn: int, nslabs: int,
+                                   interpret: bool = False) -> jax.Array:
+    """Sparse-C variant with manual double-buffered B tile prefetch: B
+    stays in HBM (``ANY`` space) and step t+1's tile is in flight while
+    step t contracts — :func:`cluster_spgemm_pairs_db`'s pipeline on the
+    sparse-C output path. Same contract as
+    :func:`cluster_spgemm_pairs_sparse`."""
+    t_total = c_slots.shape[0]
+    assert a_values.shape[1:] == (block_r, block_k)
+    assert b_tiles.shape[1:] == (block_k, bn)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(t_total,),
+        in_specs=[
+            pl.BlockSpec((1, block_r, block_k),
+                         lambda t, cw, sl, ai: (ai[t], 0, 0)),
+            pl.BlockSpec(memory_space=_ANY),
+        ],
+        out_specs=pl.BlockSpec((1, block_r, bn),
+                               lambda t, cw, sl, ai: (cw[t], 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, block_k, bn), b_tiles.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    return pl.pallas_call(
+        _spgemm_kernel_pairs_sparse_db,
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((nslabs, block_r, bn), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(c_slots, slots, a_idx, a_values, b_tiles)

@@ -13,14 +13,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import (BCC, TiledCSR, live_pair_stream,
-                                partition_pair_stream, revisit_pair_stream,
-                                revisit_window_blocks)
+from repro.core.formats import (BCC, CompactedC, TiledCSR,
+                                compacted_c_from_dense, compacted_c_table,
+                                live_pair_stream, partition_pair_stream,
+                                revisit_pair_stream, revisit_window_blocks)
 from repro.core.segment import rank_in_segment
 from repro.kernels.cluster_spgemm import (cluster_spgemm_pairs,
                                           cluster_spgemm_pairs_db,
                                           cluster_spgemm_pairs_resident,
                                           cluster_spgemm_pairs_sharded,
+                                          cluster_spgemm_pairs_sparse,
+                                          cluster_spgemm_pairs_sparse_db,
                                           cluster_spgemm_resident,
                                           cluster_spgemm_tiled)
 from repro.kernels.cluster_spmm import cluster_spmm, cluster_spmm_compact
@@ -30,8 +33,9 @@ from repro.kernels.ssd_chunk import ssd_chunk_scan
 __all__ = ["on_tpu", "pallas_shard_count", "bcc_spmm",
            "bcc_compact_stream", "bcc_compact_stream_reference",
            "bcc_spmm_compact", "build_live_pairs", "build_shard_pack",
+           "build_sparse_c_pairs", "predict_c_window_density",
            "compact_grid_ok", "compact_grid_ok_ncols", "bcc_spgemm_tiled",
-           "flash_mha", "fused_ssd"]
+           "bcc_spgemm_sparse_c", "flash_mha", "fused_ssd"]
 
 # VMEM budget for pinning TiledCSR's tile store on-chip (leave headroom for
 # the A slab / C tile double buffers out of the 16 MiB core budget)
@@ -41,6 +45,12 @@ _RESIDENT_B_BUDGET = 8 * 2**20
 # fp32, double-buffered by the pipeline): B matrices wide enough to blow
 # it fall back to the per-tile padded grid, whose C window is one tile
 _COMPACT_C_STRIP_BUDGET = 2 * 2**20
+
+# predicted C window density (live (blk, j) windows / all windows) at or
+# below which bcc_spgemm_tiled routes through the sparse-C output tier:
+# at 0.5 the compacted slab writes are at most half the dense strips'
+# bytes, so the 2× C-bytes gate holds by construction on routed families
+_SPARSE_C_DENSITY = 0.5
 
 
 def on_tpu() -> bool:
@@ -244,6 +254,134 @@ def build_shard_pack(a: BCC, b: TiledCSR, pairs: tuple, *,
     return ranges, shard_pairs, wb
 
 
+def predict_c_window_density(pairs, *, nblocks: int, nnb: int) -> float:
+    """Predicted density of C's ``(block_r, bn)`` window lattice: distinct
+    live ``(blk, j)`` windows over all ``nblocks × nnb`` windows — known
+    *before* the numeric phase from the live-pair stream alone (a window
+    with no live pair is provably zero). This is the output-density
+    threshold :func:`bcc_spgemm_tiled` auto-selects dense-strip vs
+    sparse-C on: the sparse tier's C bytes are exactly ``density`` of the
+    dense strips'."""
+    blocks, js, slots, _ = (np.asarray(p) for p in pairs)
+    live = slots > 0
+    key = blocks[live].astype(np.int64) * nnb + js[live].astype(np.int64)
+    return np.unique(key).size / max(nblocks * nnb, 1)
+
+
+def build_sparse_c_pairs(a: BCC, b: TiledCSR, pairs: tuple | None = None,
+                         stream: tuple | None = None, *, pad_to: int = 8
+                         ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                    np.ndarray, int]:
+    """Host-side: re-sort the live-pair stream window-major for the
+    sparse-C kernels and tag each pair with its destination
+    :class:`repro.core.formats.CompactedC` slab.
+
+    The dense kernels need (block, s, j) order — one C *strip* per block,
+    visited once. The sparse-C kernels' output block is one ``(blk, j)``
+    *window*, so the stream re-sorts by (blk, j, s): every slab is
+    visited contiguously (Pallas writes an output block back when its
+    index changes; revisiting would clobber), and within a window pairs
+    stay s-ascending — the same per-element fp32 accumulation order as
+    the dense kernels, hence bit-identical values.
+
+    Zero-slot sentinels and tail pads of the input stream are dropped
+    (dead windows need no zero-init — the reserved zero slab covers them
+    through the table); one leading sentinel pair (slab 0, B slot 0) is
+    prepended so the reserved slab zero-initializes, and the tail is
+    re-padded to ``pad_to`` with no-MXU repeats of the last window.
+
+    Returns ``(c_slots, slots, a_idx, table, nslabs)`` — the first three
+    are the kernel's scalar-prefetched stream, ``table``/``nslabs`` the
+    CompactedC lookup table and slab count (live windows + the zero
+    slab).
+    """
+    if stream is None:
+        stream = bcc_compact_stream(a, cover_all_blocks=True)
+    if pairs is None:
+        pairs = build_live_pairs(a, b, stream)
+    nblocks = (a.nrows + a.block_r - 1) // a.block_r
+    table, nlive = compacted_c_table(pairs, nblocks=nblocks, nnb=b.nnb)
+    blocks, js, slots, a_idx = (np.asarray(p) for p in pairs)
+    live = slots > 0
+    bl = blocks[live].astype(np.int64)
+    jl = js[live].astype(np.int64)
+    sl = slots[live]
+    al = a_idx[live]
+    order = np.lexsort((al, jl, bl))
+    bl, jl, sl, al = bl[order], jl[order], sl[order], al[order]
+    c_slots = table[bl * b.nnb + jl].astype(np.int64)
+    anchor = int(al[0]) if al.size else 0
+    c_slots = np.concatenate([[0], c_slots])
+    sl = np.concatenate([[0], sl.astype(np.int64)])
+    al = np.concatenate([[anchor], al.astype(np.int64)])
+    pad = (-c_slots.size) % pad_to
+    if pad:
+        c_slots = np.concatenate([c_slots, np.repeat(c_slots[-1], pad)])
+        sl = np.concatenate([sl, np.zeros(pad, np.int64)])
+        al = np.concatenate([al, np.repeat(al[-1], pad)])
+    return (c_slots.astype(np.int32), sl.astype(np.int32),
+            al.astype(np.int32), table, nlive + 1)
+
+
+def bcc_spgemm_sparse_c(a: BCC, b: TiledCSR, *,
+                        interpret: bool | None = None,
+                        stream: tuple | None = None,
+                        pairs: tuple | None = None,
+                        sparse_pairs: tuple | None = None,
+                        double_buffer: bool | None = None,
+                        epilogue: str | None = None) -> CompactedC:
+    """C = A_bcc @ B_tiled into the sparse-C output tier: the numeric
+    phase accumulates each live C window in VMEM exactly like the
+    dense-strip kernels but writes back *only* the live windows as
+    packed :class:`repro.core.formats.CompactedC` slabs — C bytes to HBM
+    scale with nnz(C)'s window footprint, not ``rows × nnb·bn``.
+
+    ``epilogue`` selects where the compaction happens:
+      * ``"kernel"`` — the windowed-scatter epilogue runs inside the
+        Pallas kernel (its output BlockSpec scatters straight into the
+        slab store). Default on TPU; also interpret-capable, which is
+        what the bit-identity tests exercise.
+      * ``"xla"`` — dense-strip product first, then an XLA
+        segment-compaction gather of the live windows
+        (:func:`repro.core.formats.compacted_c_from_dense`). Default
+        off-TPU; same table, bit-identical slabs.
+
+    ``sparse_pairs`` overrides the packed window-major stream
+    (:func:`build_sparse_c_pairs` — cached per operand pair by the
+    planner's chain workload).
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    if a.block_k != b.block_k:
+        raise ValueError(f"A block_k {a.block_k} != B block_k {b.block_k}")
+    if stream is None:
+        stream = bcc_compact_stream(a, cover_all_blocks=True)
+    if sparse_pairs is None:
+        sparse_pairs = build_sparse_c_pairs(a, b, pairs, stream)
+    c_slots, slots, a_idx, table, nslabs = sparse_pairs
+    if epilogue is None:
+        epilogue = "kernel" if on_tpu() else "xla"
+    if epilogue == "xla":
+        dense = bcc_spgemm_tiled(a, b, interpret=interpret, stream=stream,
+                                 pairs=pairs, sparse_c=False)
+        return compacted_c_from_dense(dense, table, nrows=a.nrows,
+                                      ncols=b.ncols, block_r=a.block_r,
+                                      bn=b.bn)
+    if epilogue != "kernel":
+        raise ValueError(f"unknown epilogue '{epilogue}'")
+    values = jnp.asarray(stream[2])
+    db = double_buffer if double_buffer is not None else on_tpu()
+    kernel = (cluster_spgemm_pairs_sparse_db if db
+              else cluster_spgemm_pairs_sparse)
+    slabs = kernel(jnp.asarray(c_slots), jnp.asarray(slots),
+                   jnp.asarray(a_idx), values, b.tiles,
+                   block_r=a.block_r, block_k=a.block_k, bn=b.bn,
+                   nslabs=int(nslabs), interpret=interpret)
+    return CompactedC(slabs=slabs, table=jnp.asarray(table),
+                      nrows=a.nrows, ncols=b.ncols,
+                      block_r=a.block_r, bn=b.bn)
+
+
 def bcc_spgemm_tiled(a: BCC, b: TiledCSR, *,
                      interpret: bool | None = None,
                      stream: tuple | None = None,
@@ -253,7 +391,8 @@ def bcc_spgemm_tiled(a: BCC, b: TiledCSR, *,
                      double_buffer: bool | None = None,
                      shards: int | None = None,
                      revisit: bool = False,
-                     shard_pack: tuple | None = None) -> jax.Array:
+                     shard_pack: tuple | None = None,
+                     sparse_c: bool | None = None) -> jax.Array:
     """C = A_bcc @ B_tiled via the Pallas Sp×Sp kernel tier. Returns the
     dense ``(a.nrows, b.ncols)`` product (fp32 — bf16 B tiles are upcast
     at the MXU input, accumulation stays fp32).
@@ -286,6 +425,15 @@ def bcc_spgemm_tiled(a: BCC, b: TiledCSR, *,
         fetch B once; the win is for streamed, HBM-resident B).
       * ``shard_pack`` overrides the packed partition
         (:func:`build_shard_pack`, cached by the planner's serving path).
+      * ``sparse_c`` — route the unsharded compact path through the
+        sparse-C output tier (:func:`bcc_spgemm_sparse_c`) and densify
+        the :class:`repro.core.formats.CompactedC` result on the way out
+        (bit-identical values; C HBM writes scale with the live-window
+        count). Default: auto — sparse when the predicted C window
+        density (:func:`predict_c_window_density`) is at most
+        ``_SPARSE_C_DENSITY`` and the product is not sharded; callers
+        that want the compacted format itself call
+        :func:`bcc_spgemm_sparse_c` directly.
     """
     if interpret is None:
         interpret = not on_tpu()
@@ -311,6 +459,16 @@ def bcc_spgemm_tiled(a: BCC, b: TiledCSR, *,
         if shard_pack is None:
             shard_pack = build_shard_pack(a, b, pairs, shards=shards,
                                           revisit=revisit)
+        if sparse_c is None:
+            sparse_c = (shard_pack is None
+                        and predict_c_window_density(
+                            pairs, nblocks=nblocks, nnb=b.nnb)
+                        <= _SPARSE_C_DENSITY)
+        if sparse_c and shard_pack is None:
+            cc = bcc_spgemm_sparse_c(
+                a, b, interpret=interpret, stream=stream, pairs=pairs,
+                double_buffer=double_buffer, epilogue="kernel")
+            return cc.to_dense()
         if shard_pack is not None:
             ranges, shard_pairs, wb = shard_pack
             out = cluster_spgemm_pairs_sharded(

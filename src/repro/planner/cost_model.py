@@ -317,7 +317,10 @@ class CostModel:
         discount: the sharded pair-stream kernel serves the A² (sparse ×
         sparse) product — the dense-B SpMM path runs the single-stream
         ``bcc_spmm_compact``, so ``workload="spmm"`` scores pallas
-        without the per-core division."""
+        without the per-core division. ``workload="chain"`` (repeated
+        sparse × sparse hops over a re-fingerprinted ``CompactedC``
+        intermediate) is A²-shaped per hop and collects the same
+        discount."""
         # disorder: how far the current order is from a banded layout —
         # a random symmetric permutation lands at bandwidth_mean ≈ 1/3
         disorder = min(3.0 * f.bandwidth_mean, 1.0)
@@ -392,7 +395,8 @@ class CostModel:
                 # the dense-B SpMM path is not sharded at all — neither
                 # collects the discount.
                 cores = (max(_pallas_core_count(), 1)
-                         if workload == "a2" and _pallas_compact_ok(f.ncols)
+                         if workload in ("a2", "chain")
+                         and _pallas_compact_ok(f.ncols)
                          else 1)
                 if cores > 1:
                     kernel_rel /= PALLAS_SHARD_EFFICIENCY * cores

@@ -20,6 +20,12 @@ Typical serving flow::
 ``HostCSR`` (general SpGEMM) or a dense ``(ncols, width)`` array (the
 tall-skinny SpMM workload) and always returns the product in the
 *original* row/column order — permutations are internal to the plan.
+
+``execute_chain`` is the chained-product entry point (A³, Markov steps,
+MoE routing masks): each hop re-fingerprints the sparse intermediate,
+plans it under ``workload="chain"``, and — on pallas-scheme hops — runs
+the sparse-C tier so the intermediate round-trips as
+``CompactedC → HostCSR`` without a dense materialization.
 """
 from __future__ import annotations
 
@@ -35,8 +41,9 @@ from repro.core.clustering import (DEFAULT_MAX_CLUSTER,
                                    hierarchical_clusters,
                                    variable_length_clusters)
 from repro.core.formats import (HostCSR, bcc_from_host,
-                                csr_cluster_from_host, csr_from_host,
-                                select_block_k, tiled_csr_from_host)
+                                compacted_c_to_host, csr_cluster_from_host,
+                                csr_from_host, select_block_k,
+                                tiled_csr_from_host)
 from repro.core.reorder import reorder as apply_reorder
 from repro.core.spgemm import (length_bins, slot_rows_host,
                                spgemm_clusterwise_dense_binned,
@@ -50,8 +57,8 @@ from repro.planner.features import extract_features, fingerprint
 from repro.planner.plan_cache import (DEFAULT_CACHE_DIR, DEFAULT_MAX_BYTES,
                                       Plan, PlanCache)
 
-__all__ = ["Planner", "plan_spgemm", "execute", "default_planner",
-           "reset_default_planner"]
+__all__ = ["Planner", "plan_spgemm", "execute", "execute_chain",
+           "default_planner", "reset_default_planner"]
 
 
 # ---------------------------------------------------------------------------
@@ -204,11 +211,14 @@ class Planner:
         measured mode, probed) on: ``"a2"`` — the paper's sparse×sparse
         product; ``"spmm"`` — the square × tall-skinny dense-B workload
         (measurements then run ``spmm_rowwise`` / ``spmm_clusterwise`` /
-        ``cluster_spmm_compact``, not A² proxies). Cache entries are
-        workload-keyed, so the two never shadow each other.
+        ``cluster_spmm_compact``, not A² proxies); ``"chain"`` — one hop
+        of a chained sparse product (A²-shaped per hop, probed as A²,
+        but executed through :meth:`execute_chain`'s sparse-C route when
+        the pallas scheme wins). Cache entries are workload-keyed, so
+        the workloads never shadow each other.
         """
         reuse_hint = max(int(reuse_hint), 1)
-        if workload not in ("a2", "spmm"):
+        if workload not in ("a2", "spmm", "chain"):
             raise ValueError(f"unknown workload '{workload}'")
         fp = fingerprint(a)
         # workload-qualified key for cost-model measurements: an identity
@@ -375,6 +385,103 @@ class Planner:
         """
         runner = self._build_runner(plan, a, b)
         return np.asarray(runner())
+
+    # -- chained products (workload="chain") ---------------------------------
+
+    def execute_chain(self, a: HostCSR, *, hops: int = 2,
+                      reuse_hint: Optional[int] = None,
+                      measure: bool = False,
+                      candidates: Optional[Sequence[Candidate]] = None
+                      ) -> tuple[HostCSR, list[Plan]]:
+        """Chained sparse product ``A^(hops+1)`` — left-chained hops
+        ``C₁ = A·A``, ``C₂ = C₁·A``, … (``hops=2`` is the A³ demo).
+
+        Each hop re-fingerprints the *current* sparse intermediate and
+        plans it under ``workload="chain"`` — the plan cache keys on the
+        per-hop fingerprint, so a repeated chain (the A³ / Markov-step
+        serving pattern) hits the cache at every hop of the second call.
+        Pallas-scheme hops run the sparse-C tier
+        (:func:`repro.kernels.ops.bcc_spgemm_sparse_c`) and feed the
+        ``CompactedC → HostCSR`` conversion straight back as the next
+        hop's operand — the intermediate is repacked through
+        ``tiled_csr_from_host`` on the next hop without ever
+        materializing a dense matrix; XLA-scheme hops densify and
+        re-sparsify.
+
+        Returns ``(C, plans)``: ``C`` a :class:`HostCSR` in the original
+        row/column order, ``plans`` the per-hop plans (``len == hops``).
+        """
+        if a.nrows != a.ncols:
+            raise ValueError("chain workload needs a square matrix")
+        hops = int(hops)
+        if hops < 1:
+            raise ValueError(f"hops must be >= 1, got {hops}")
+        if reuse_hint is None:
+            # each hop's plan serves one product per chain call; the
+            # chain itself is the reuse unit, so default to expecting a
+            # handful of repeated chains (the serving pattern)
+            reuse_hint = max(hops, 2)
+        cur = a
+        plans: list[Plan] = []
+        for k in range(hops):
+            plan = self.plan(cur, reuse_hint, measure=measure,
+                             candidates=candidates, workload="chain")
+            plans.append(plan)
+            cur = self._chain_hop(plan, cur, None if k == 0 else a)
+        return cur, plans
+
+    def _chain_hop(self, plan: Plan, cur: HostCSR,
+                   b: Optional[HostCSR]) -> HostCSR:
+        """One hop ``cur · (b if b is not None else cur)`` → HostCSR."""
+        if plan.scheme == "pallas":
+            host = self._chain_hop_sparse(plan, cur, b)
+            if host is not None:
+                return host
+        dense = self.execute(plan, cur, b)
+        return HostCSR.from_dense(dense)
+
+    def _chain_hop_sparse(self, plan: Plan, cur: HostCSR,
+                          b: Optional[HostCSR]) -> Optional[HostCSR]:
+        """The sparse-C route of a pallas chain hop, or ``None`` when the
+        compacted grid does not apply (wide B → padded per-tile grid →
+        dense fallback through :meth:`execute`). The packed operands —
+        including the window-major sparse-pair stream — are exec-cached
+        exactly like the dense paths', so the second chain call skips
+        all host packing."""
+        bh_cols = (cur if b is None else b).ncols
+        if not kernel_ops.compact_grid_ok_ncols(bh_cols):
+            return None
+        vk = (_value_digest(cur) if b is None else
+              f"{_value_digest(cur)}|{fingerprint(b)}|{_value_digest(b)}")
+        ck = (f"{plan.fingerprint}|{_plan_digest(plan)}|chain"
+              f"|{'sq' if b is None else 'ab'}|{vk}")
+        cached = self._exec_cache.get(ck)
+        if cached is None:
+            ap = _apply_plan_perm(cur, plan, symmetric=b is None)
+            bh = ap if b is None else b
+            bk = select_block_k(bh)
+            bcc = bcc_from_host(ap, block_k=bk)
+            tiled = tiled_csr_from_host(bh, block_k=bk,
+                                        dtype=self.pallas_b_dtype)
+            if not kernel_ops.compact_grid_ok(bcc, tiled):
+                return None
+            stream = kernel_ops.bcc_compact_stream(bcc,
+                                                   cover_all_blocks=True)
+            pairs = kernel_ops.build_live_pairs(bcc, tiled, stream)
+            sparse_pairs = kernel_ops.build_sparse_c_pairs(
+                bcc, tiled, pairs, stream)
+            cached = ("chain", bcc, tiled, stream, pairs, sparse_pairs)
+            self._exec_put(ck, cached)
+        _, bcc, tiled, stream, pairs, sparse_pairs = cached
+        cc = kernel_ops.bcc_spgemm_sparse_c(
+            bcc, tiled, stream=stream, pairs=pairs,
+            sparse_pairs=sparse_pairs)
+        host = compacted_c_to_host(cc)
+        if plan.perm is not None:
+            inv = np.argsort(np.asarray(plan.perm, dtype=np.int64))
+            host = (host.permute_symmetric(inv) if b is None
+                    else host.permute_rows(inv))
+        return host
 
     def _build_runner(self, plan: Plan, a: HostCSR,
                       b: HostCSR | np.ndarray | None):
@@ -569,3 +676,10 @@ def execute(plan: Plan, a: HostCSR,
             b: HostCSR | np.ndarray | None = None) -> np.ndarray:
     """Execute a planned product (see :meth:`Planner.execute`)."""
     return default_planner().execute(plan, a, b)
+
+
+def execute_chain(a: HostCSR, *, hops: int = 2,
+                  **kwargs) -> tuple[HostCSR, list]:
+    """Chained product ``A^(hops+1)`` via the default planner (see
+    :meth:`Planner.execute_chain`)."""
+    return default_planner().execute_chain(a, hops=hops, **kwargs)

@@ -54,11 +54,11 @@ def make_serve_step(cfg, *, sample: bool = False,
 
 @dataclasses.dataclass
 class SpGEMMResponse:
-    result: np.ndarray
+    result: "np.ndarray | HostCSR"  # HostCSR for chain requests (sparse C)
     fingerprint: str
     reorder: str
     scheme: str
-    workload: str              # a2 | spmm — which kernel family was planned
+    workload: str              # a2 | spmm | chain — planned kernel family
     kernel_path: str           # "pallas" (MXU tiled kernel) or "xla"
     plan_cache_hit: bool
     plan_s: float              # planning + preprocessing wall time (0-ish on hit)
@@ -95,15 +95,41 @@ class SpGEMMServer:
 
     def submit(self, a: HostCSR,
                b: HostCSR | np.ndarray | None = None, *,
-               reuse_hint: Optional[int] = None) -> SpGEMMResponse:
+               reuse_hint: Optional[int] = None,
+               hops: Optional[int] = None) -> SpGEMMResponse:
         """Plan (or fetch the cached plan for) ``a``, then execute a·b.
 
         A dense ``b`` routes the request through the planner's ``spmm``
         workload — its plan is scored (and measured) on the tall-skinny
         kernel menu, cached separately from the same pattern's A² plan.
+
+        ``hops`` routes the request through the planner's ``chain``
+        workload instead: the result is ``A^(hops+1)`` computed by
+        :meth:`repro.planner.service.Planner.execute_chain` (``b`` must
+        be ``None``), ``result`` is the sparse :class:`HostCSR` product,
+        and the response reports the first hop's plan — with
+        ``plan_cache_hit`` true only when *every* hop hit the cache (the
+        steady serving state for a recurring chain).
         """
         self.requests += 1
         hint = self.default_reuse_hint if reuse_hint is None else reuse_hint
+        if hops is not None:
+            if b is not None:
+                raise ValueError("chain requests take b=None (A^k workload)")
+            t0 = time.perf_counter()
+            out, plans = self.planner.execute_chain(
+                a, hops=hops, reuse_hint=hint, measure=self.measure)
+            t1 = time.perf_counter()
+            hit = all(p.from_cache for p in plans)
+            if hit:
+                self.plan_hits += 1
+            lead = plans[0]
+            return SpGEMMResponse(
+                result=out, fingerprint=lead.fingerprint,
+                reorder=lead.reorder, scheme=lead.scheme, workload="chain",
+                kernel_path=("pallas" if any(p.scheme == "pallas"
+                                             for p in plans) else "xla"),
+                plan_cache_hit=hit, plan_s=0.0, execute_s=t1 - t0)
         workload = "spmm" if (b is not None
                               and not isinstance(b, HostCSR)) else "a2"
         t0 = time.perf_counter()

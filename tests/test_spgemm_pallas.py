@@ -422,10 +422,13 @@ def test_bench_kernels_counter_gates():
     from benchmarks.bench_kernels import check_gates
     ok = {"grid_steps_per_mxu_gm": 1.01, "a_bytes_ratio_compact_gm": 6.0,
           "b_bytes_ratio_routed_gm": 1.35, "b_bytes_bf16_ratio_gm": 2.0,
-          "b_tile_refetch_ratio_gm": 90.0, "shard_balance_worst": 1.05}
+          "b_tile_refetch_ratio_gm": 90.0, "shard_balance_worst": 1.05,
+          "c_bytes_ratio_gm": 2.5}
     assert check_gates(ok) == []
     bad = dict(ok, grid_steps_per_mxu_gm=1.5)
     assert any("grid_steps_per_mxu_gm" in f for f in check_gates(bad))
+    bad = dict(ok, c_bytes_ratio_gm=1.2)
+    assert any("c_bytes_ratio_gm" in f for f in check_gates(bad))
     bad = dict(ok, b_tile_refetch_ratio_gm=1.0)
     assert any("b_tile_refetch_ratio_gm" in f for f in check_gates(bad))
     bad = dict(ok, shard_balance_worst=1.4)
