@@ -3,7 +3,7 @@
 PY        ?= python
 PYPATH    := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow docs-check bench-quick bench-kernels \
+.PHONY: test test-slow docs-check trace-report bench-quick bench-kernels \
         bench-preprocess bench-planner bench-trajectory lint
 
 ## tier-1 verification (the command CI runs; pytest.ini excludes -m slow)
@@ -12,6 +12,7 @@ PYPATH    := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 test:
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q
 	$(MAKE) docs-check
+	$(MAKE) trace-report
 
 ## runnable docstring examples (core/formats, planner/cost_model) + the
 ## docs/*.md link & counters-glossary checker
@@ -19,6 +20,12 @@ docs-check:
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest --doctest-modules -q \
 	    src/repro/core/formats.py src/repro/planner/cost_model.py
 	PYTHONPATH=$(PYPATH) $(PY) tools/check_docs.py
+
+## end-to-end tracing smoke: run a small traced serving workload, export
+## experiments/traces/ (JSONL + Perfetto), render the report and assert
+## the span structure (nested plan/execute with fingerprint+scheme)
+trace-report:
+	PYTHONPATH=$(PYPATH) $(PY) tools/trace_report.py --generate --tier quick --check
 
 ## the slow split: planner sweep tests and other benchmark-sized tests
 test-slow:

@@ -1,0 +1,148 @@
+"""Observability overhead benchmark (ISSUE 7): enabled-vs-disabled tracer.
+
+The obs layer's contract is that the *disabled* tracer is a strict no-op
+and the *enabled* tracer costs a bounded sliver of serving wall time.
+This bench measures both states on the steady serving state (every
+pattern plan-cache-hit, every operand exec-cache-hit — the state where
+per-request work is smallest and tracing overhead proportionally
+largest) and gates
+
+    tracing_overhead_frac = max(0, t_on / t_off - 1) <= 0.03
+
+with best-of-N minimum times on interleaved passes to suppress host
+noise. The enabled pass's span buffer also yields the per-stage
+breakdown (plan / pack / execute / kernel totals) that feeds the
+trajectory artifact's ``obs`` table.
+
+Device-counter emission stays OFF here: it is opt-in precisely because
+it costs O(pairs) host work (see ``repro.obs.metrics``).
+"""
+from __future__ import annotations
+
+import gc
+import time
+
+import numpy as np
+
+from repro.core.formats import HostCSR
+from repro.obs.trace import get_tracer
+from repro.serve.engine import SpGEMMServer
+
+# overhead ceiling the trajectory gate (``_ABS_GATED``) also enforces on
+# committed artifacts
+OVERHEAD_GATE = 0.03
+
+_REPS = 12         # interleaved off/on passes; min over passes is scored
+_ATTEMPTS = 3      # full re-measurements before the gate failure is real
+
+
+def _mats(tier: str) -> list[HostCSR]:
+    # per-request work must be representative of real serving (a few ms,
+    # not sub-ms toys) or the fixed per-span cost reads as an inflated
+    # fraction of an unrealistically tiny denominator
+    n = 192 if tier == "quick" else 256
+    out = []
+    for seed in range(3):
+        rng = np.random.default_rng(11 + seed)
+        out.append(HostCSR.from_dense(
+            (rng.random((n, n)) < 0.08).astype(np.float32)))
+    return out
+
+
+def _pass_seconds(srv: SpGEMMServer, mats: list[HostCSR],
+                  repeats: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        for a in mats:
+            srv.submit(a)
+    return time.perf_counter() - t0
+
+
+def _measure_once(srv: SpGEMMServer, mats: list[HostCSR],
+                  repeats: int) -> tuple[float, float]:
+    """(t_off, t_on): best-of-_REPS interleaved disabled/enabled passes.
+
+    GC is held off during the timed passes (collected between them):
+    the enabled tracer is what allocates, so collector pauses would
+    otherwise land disproportionately in the enabled passes and read as
+    tracing overhead.
+    """
+    tracer = get_tracer()
+    t_off = t_on = float("inf")
+    gc_was_enabled = gc.isenabled()
+    try:
+        for _ in range(_REPS):
+            tracer.disable()
+            gc.collect()
+            gc.disable()
+            t_off = min(t_off, _pass_seconds(srv, mats, repeats))
+            gc.enable()
+            tracer.enable()
+            gc.collect()
+            gc.disable()
+            t_on = min(t_on, _pass_seconds(srv, mats, repeats))
+            gc.enable()
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+        else:
+            gc.disable()
+    tracer.disable()
+    return t_off, t_on
+
+
+def run(tier: str = "quick") -> dict:
+    tracer = get_tracer()
+    was_enabled = tracer.enabled
+    tracer.disable()
+    mats = _mats(tier)
+    # passes long enough that per-request jitter averages out, short
+    # enough that many interleaved passes fit — the min over _REPS
+    # alternated passes is what beats host scheduling noise at the gate
+    repeats = 4 if tier == "quick" else 6
+    srv = SpGEMMServer(tenant="bench-obs")
+    _pass_seconds(srv, mats, 1)         # warm: plans, packings, compiles
+
+    overhead = float("inf")
+    t_off = t_on = 0.0
+    for attempt in range(_ATTEMPTS):
+        tracer.clear()
+        t_off, t_on = _measure_once(srv, mats, repeats)
+        overhead = max(0.0, t_on / t_off - 1.0)
+        if overhead <= OVERHEAD_GATE:
+            break
+        print(f"# bench_obs: attempt {attempt + 1}: overhead "
+              f"{overhead:.4f} > {OVERHEAD_GATE} — re-measuring")
+
+    # per-stage breakdown from the enabled passes' span buffer
+    stage_totals: dict[str, float] = {}
+    spans = tracer.spans()
+    for sp in spans:
+        stage_totals[sp.name] = stage_totals.get(sp.name, 0.0) + sp.duration
+    requests = sum(1 for sp in spans if sp.name == "request")
+
+    n_req = repeats * len(mats)
+    print(f"# bench_obs: {n_req} requests/pass, best-of-{_REPS}: "
+          f"off {t_off * 1e3:.2f} ms, on {t_on * 1e3:.2f} ms, "
+          f"overhead {overhead:.4f} (gate {OVERHEAD_GATE})")
+    for name in sorted(stage_totals):
+        print(f"#   stage {name:<8} {stage_totals[name] * 1e3:9.2f} ms "
+              "(traced passes total)")
+    if overhead > OVERHEAD_GATE:
+        raise RuntimeError(
+            f"tracing overhead {overhead:.4f} exceeds the "
+            f"{OVERHEAD_GATE} gate after {_ATTEMPTS} attempts")
+    if was_enabled:
+        tracer.enable()
+    return {"summary": {
+        "tracing_overhead_frac": overhead,
+        "t_off_s": t_off,
+        "t_on_s": t_on,
+        "requests_per_pass": n_req,
+        "spans_per_request": len(spans) / max(requests, 1),
+        "stage_totals_s": stage_totals,
+    }}
+
+
+if __name__ == "__main__":
+    run("quick")

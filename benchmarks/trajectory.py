@@ -77,6 +77,14 @@ _GATED = [
     ("kernels", ("c_bytes_ratio_gm",), True),
 ]
 
+# absolute ceilings checked on the *newest* artifact alone (no baseline
+# pair needed): (table, key-path, max_allowed). The obs tier's tracing
+# overhead is a contract, not a trend — a 2.9% -> 2.95% drift would pass
+# a relative gate while eating the whole budget.
+_ABS_GATED = [
+    ("obs", ("tracing_overhead_frac",), 0.03),
+]
+
 
 def git_sha() -> str:
     """Short HEAD sha, suffixed ``-dirty`` when the tree has uncommitted
@@ -178,6 +186,13 @@ def _sum_kernels(res: dict) -> dict:
     return {k: float(s[k]) for k in keys if k in s}
 
 
+def _sum_obs(res: dict) -> dict:
+    s = res.get("summary", {})
+    keys = ("tracing_overhead_frac", "t_off_s", "t_on_s",
+            "requests_per_pass", "spans_per_request")
+    return {k: float(s[k]) for k in keys if k in s}
+
+
 _SUMMARIZERS = {
     "fig2": _sum_fig2,
     "fig3": _sum_fig3,
@@ -188,6 +203,7 @@ _SUMMARIZERS = {
     "table3": _sum_tallskinny,
     "preprocess": _sum_preprocess,
     "kernels": _sum_kernels,
+    "obs": _sum_obs,
 }
 
 
@@ -275,8 +291,29 @@ def compare(old: dict, new: dict,
     return regressions
 
 
+def check_absolute(artifact: dict) -> list[str]:
+    """Violations of the ``_ABS_GATED`` ceilings in one artifact."""
+    bad = []
+    for table, path, ceiling in _ABS_GATED:
+        for k, v in _metric_values(artifact, table, path).items():
+            if v > ceiling:
+                bad.append(f"{table}.{'.'.join(path)}.{k}: {v:.4g} "
+                           f"exceeds ceiling {ceiling:g}")
+    return bad
+
+
 def diff_latest(tier: str, threshold: float = REGRESSION_THRESHOLD) -> int:
     paths = list_artifacts(tier)
+    if paths:
+        with open(paths[-1]) as f:
+            newest = json.load(f)
+        abs_bad = check_absolute(newest)
+        if abs_bad:
+            print(f"# trajectory: absolute-ceiling violation(s) in "
+                  f"{os.path.basename(paths[-1])}:")
+            for b in abs_bad:
+                print(f"#   CEILING {b}")
+            return 1
     if len(paths) < 2:
         have = ", ".join(os.path.basename(p) for p in paths) or "none"
         print(f"# trajectory: need >= 2 committed artifacts for tier "

@@ -29,6 +29,7 @@ the pipeline hardcoding one.
 from __future__ import annotations
 
 import functools
+import time
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -37,6 +38,8 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.formats import HostCSR
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import get_tracer
 from repro.planner.plan_cache import Plan
 from repro.planner.service import Planner, default_planner
 
@@ -132,11 +135,17 @@ def plan_pipeline_stages(stage_mats: Sequence[HostCSR],
     """
     planner = planner if planner is not None else default_planner()
     reuse = max(num_microbatches * passes, 1)
+    tracer = get_tracer()
     # pipeline stages apply sparse weights to dense activations — the
     # tall-skinny workload, so plans are scored (and in measured mode,
     # probed) on the SpMM kernel menu, not A² proxies
-    return [planner.plan(m, reuse, measure=measure, workload="spmm")
-            for m in stage_mats]
+    plans = []
+    for i, m in enumerate(stage_mats):
+        with tracer.span("stage", stage=i, phase="plan") as sp:
+            plan = planner.plan(m, reuse, measure=measure, workload="spmm")
+            sp.set(scheme=plan.scheme, fingerprint=plan.fingerprint)
+        plans.append(plan)
+    return plans
 
 
 def pipeline_spmm_apply(plans: Sequence[Plan],
@@ -162,11 +171,18 @@ def pipeline_spmm_apply(plans: Sequence[Plan],
     planner = planner if planner is not None else default_planner()
     m, bsz, feat = x.shape
     acts = np.asarray(x, dtype=np.float32)
-    for plan, mat in zip(plans, stage_mats):
+    tracer = get_tracer()
+    stage_hist = obs_metrics.get_registry().histogram("pipeline_stage_s")
+    for i, (plan, mat) in enumerate(zip(plans, stage_mats)):
         if mat.nrows != mat.ncols or mat.ncols != feat:
             raise ValueError("stage matrices must be (F, F)")
-        # one (F, M·B) SpMM per stage: microbatches ride the dense width
-        flat = acts.reshape(m * bsz, feat).T            # (F, M·B)
-        out = planner.execute(plan, mat, flat)          # (F, M·B)
-        acts = out.T.reshape(m, bsz, feat)
+        with tracer.span("stage", stage=i, phase="execute",
+                         scheme=plan.scheme):
+            t0 = time.perf_counter()
+            # one (F, M·B) SpMM per stage: microbatches ride the dense
+            # width; the planner runner device-syncs before returning
+            flat = acts.reshape(m * bsz, feat).T        # (F, M·B)
+            out = planner.execute(plan, mat, flat)      # (F, M·B)
+            acts = out.T.reshape(m, bsz, feat)
+            stage_hist.observe(time.perf_counter() - t0)
     return acts

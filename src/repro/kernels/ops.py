@@ -14,10 +14,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.formats import (BCC, CompactedC, TiledCSR,
-                                compacted_c_from_dense, compacted_c_table,
+                                compacted_c_counters, compacted_c_from_dense,
+                                compacted_c_table, live_pair_counters,
                                 live_pair_stream, partition_pair_stream,
                                 revisit_pair_stream, revisit_window_blocks)
 from repro.core.segment import rank_in_segment
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import get_tracer
 from repro.kernels.cluster_spgemm import (cluster_spgemm_pairs,
                                           cluster_spgemm_pairs_db,
                                           cluster_spgemm_pairs_resident,
@@ -51,6 +54,24 @@ _COMPACT_C_STRIP_BUDGET = 2 * 2**20
 # at 0.5 the compacted slab writes are at most half the dense strips'
 # bytes, so the 2× C-bytes gate holds by construction on routed families
 _SPARSE_C_DENSITY = 0.5
+
+
+def _note_kernel_launch(variant: str, *, pairs=None, block_r=None,
+                        block_k=None, bn=None, cc=None) -> None:
+    """Account one Sp×Sp dispatch: the ``kernel_launches`` counter
+    (labelled by variant) plus — only when the registry's opt-in
+    ``device_emission`` flag is on, the counters are O(pairs) host work —
+    the declared device traffic counters of the launch."""
+    reg = obs_metrics.get_registry()
+    reg.counter("kernel_launches", variant=variant).inc()
+    if not reg.device_emission:
+        return
+    if pairs is not None:
+        reg.emit_device_counters(
+            live_pair_counters(pairs, block_r=block_r, block_k=block_k,
+                               bn=bn), variant=variant)
+    if cc is not None:
+        reg.emit_device_counters(compacted_c_counters(cc), variant=variant)
 
 
 def on_tpu() -> bool:
@@ -373,13 +394,17 @@ def bcc_spgemm_sparse_c(a: BCC, b: TiledCSR, *,
     db = double_buffer if double_buffer is not None else on_tpu()
     kernel = (cluster_spgemm_pairs_sparse_db if db
               else cluster_spgemm_pairs_sparse)
-    slabs = kernel(jnp.asarray(c_slots), jnp.asarray(slots),
-                   jnp.asarray(a_idx), values, b.tiles,
-                   block_r=a.block_r, block_k=a.block_k, bn=b.bn,
-                   nslabs=int(nslabs), interpret=interpret)
-    return CompactedC(slabs=slabs, table=jnp.asarray(table),
-                      nrows=a.nrows, ncols=b.ncols,
-                      block_r=a.block_r, bn=b.bn)
+    with get_tracer().span("kernel_variant", variant="sparse_c",
+                           epilogue="kernel"):
+        slabs = kernel(jnp.asarray(c_slots), jnp.asarray(slots),
+                       jnp.asarray(a_idx), values, b.tiles,
+                       block_r=a.block_r, block_k=a.block_k, bn=b.bn,
+                       nslabs=int(nslabs), interpret=interpret)
+    out = CompactedC(slabs=slabs, table=jnp.asarray(table),
+                     nrows=a.nrows, ncols=b.ncols,
+                     block_r=a.block_r, bn=b.bn)
+    _note_kernel_launch("sparse_c", cc=out)
+    return out
 
 
 def bcc_spgemm_tiled(a: BCC, b: TiledCSR, *,
@@ -471,31 +496,43 @@ def bcc_spgemm_tiled(a: BCC, b: TiledCSR, *,
             return cc.to_dense()
         if shard_pack is not None:
             ranges, shard_pairs, wb = shard_pack
-            out = cluster_spgemm_pairs_sharded(
-                shard_pairs, ranges, values, b.tiles,
-                block_r=a.block_r, block_k=a.block_k, bn=b.bn,
-                nblocks=nblocks, nnb=b.nnb, window_blocks=wb,
-                resident=bool(resident) and wb is None,
-                double_buffer=(double_buffer if double_buffer is not None
-                               else on_tpu()),
-                interpret=interpret)
+            variant = "sharded_revisit" if wb is not None else "sharded"
+            with get_tracer().span("kernel_variant", variant=variant,
+                                   shards=len(shard_pairs)):
+                out = cluster_spgemm_pairs_sharded(
+                    shard_pairs, ranges, values, b.tiles,
+                    block_r=a.block_r, block_k=a.block_k, bn=b.bn,
+                    nblocks=nblocks, nnb=b.nnb, window_blocks=wb,
+                    resident=bool(resident) and wb is None,
+                    double_buffer=(double_buffer
+                                   if double_buffer is not None
+                                   else on_tpu()),
+                    interpret=interpret)
+            _note_kernel_launch(variant, pairs=pairs, block_r=a.block_r,
+                                block_k=a.block_k, bn=b.bn)
             return out[: a.nrows, : b.ncols]
         blocks, js, slots, a_idx = (jnp.asarray(p) for p in pairs)
         if resident:
-            kernel = cluster_spgemm_pairs_resident
+            kernel, variant = cluster_spgemm_pairs_resident, "resident"
         elif double_buffer if double_buffer is not None else on_tpu():
-            kernel = cluster_spgemm_pairs_db
+            kernel, variant = cluster_spgemm_pairs_db, "streamed_db"
         else:
-            kernel = cluster_spgemm_pairs
-        out = kernel(blocks, js, slots, a_idx, values, b.tiles,
-                     block_r=a.block_r, block_k=a.block_k, bn=b.bn,
-                     nblocks=nblocks, nnb=b.nnb, interpret=interpret)
+            kernel, variant = cluster_spgemm_pairs, "streamed"
+        with get_tracer().span("kernel_variant", variant=variant):
+            out = kernel(blocks, js, slots, a_idx, values, b.tiles,
+                         block_r=a.block_r, block_k=a.block_k, bn=b.bn,
+                         nblocks=nblocks, nnb=b.nnb, interpret=interpret)
+        _note_kernel_launch(variant, pairs=pairs, block_r=a.block_r,
+                            block_k=a.block_k, bn=b.bn)
         return out[: a.nrows, : b.ncols]
     block_ids, tile_ids, values = (jnp.asarray(s) for s in stream)
     kernel = cluster_spgemm_resident if resident else cluster_spgemm_tiled
-    out = kernel(block_ids, tile_ids, b.table, values, b.tiles,
-                 block_r=a.block_r, block_k=a.block_k, bn=b.bn,
-                 nblocks=nblocks, nnb=b.nnb, interpret=interpret)
+    with get_tracer().span("kernel_variant", variant="padded",
+                           resident=bool(resident)):
+        out = kernel(block_ids, tile_ids, b.table, values, b.tiles,
+                     block_r=a.block_r, block_k=a.block_k, bn=b.bn,
+                     nblocks=nblocks, nnb=b.nnb, interpret=interpret)
+    _note_kernel_launch("padded")
     return out[: a.nrows, : b.ncols]
 
 

@@ -1,0 +1,29 @@
+"""Observability for the SpGEMM serving stack (ISSUE 7).
+
+Three dependency-free layers, threaded through the whole request path
+(``SpGEMMServer`` → ``Planner.plan/execute`` → ``kernels.ops``):
+
+* :mod:`repro.obs.trace` — context-manager spans with monotonic timing,
+  nesting, per-span attributes, a bounded ring buffer and JSONL /
+  Chrome-trace exporters (loadable in Perfetto). Disabled by default;
+  the disabled tracer is a strict no-op on the hot path.
+* :mod:`repro.obs.metrics` — a registry of counters/gauges/histograms
+  that unifies host-side serving events with the device traffic
+  counters declared in ``repro.core.formats::COUNTER_UNITS`` (every
+  emitted device counter name is validated against that table).
+* :mod:`repro.obs.audit` — the cost-model drift auditor: per executed
+  plan it records the predicted score next to measured wall time,
+  keeps rolling per-scheme residuals, flags drifting fingerprints, and
+  exposes samples in the exact format
+  ``planner/calibration.py::fit_calibration`` consumes.
+"""
+from repro.obs.audit import AuditRecord, DriftAuditor, get_auditor
+from repro.obs.metrics import (METRIC_CATALOG, MetricsRegistry,
+                               get_registry)
+from repro.obs.trace import Span, Tracer, get_tracer, span
+
+__all__ = [
+    "Span", "Tracer", "get_tracer", "span",
+    "METRIC_CATALOG", "MetricsRegistry", "get_registry",
+    "AuditRecord", "DriftAuditor", "get_auditor",
+]

@@ -33,6 +33,7 @@ import hashlib
 import time
 from typing import Callable, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -50,6 +51,9 @@ from repro.core.spgemm import (length_bins, slot_rows_host,
                                spgemm_rowwise_dense_binned, spmm_clusterwise,
                                spmm_rowwise)
 from repro.kernels import ops as kernel_ops
+from repro.obs import audit as obs_audit
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import get_tracer
 from repro.planner.cost_model import (Candidate, CostModel,
                                       DEFAULT_CANDIDATES, IDENTITY,
                                       Measurement, ScoredCandidate)
@@ -165,6 +169,9 @@ class Planner:
         ``None`` keeps fp32 (bit-compatible with the XLA paths);
         ``jnp.bfloat16`` halves B's streamed bytes at the documented
         looser parity tolerance (fp32 accumulation either way).
+      auditor: drift auditor executed plans are recorded into (predicted
+        score vs measured wall time — see :mod:`repro.obs.audit`).
+        Defaults to the process-global auditor.
     """
 
     def __init__(self, cache: Optional[PlanCache] = None,
@@ -175,8 +182,11 @@ class Planner:
                  measure_budget: float = 1.3,
                  candidates: Sequence[Candidate] = DEFAULT_CANDIDATES,
                  calibration=None,
-                 pallas_b_dtype=None):
+                 pallas_b_dtype=None,
+                 auditor: Optional[obs_audit.DriftAuditor] = None):
         self.cache = cache if cache is not None else PlanCache()
+        self.auditor = (auditor if auditor is not None
+                        else obs_audit.get_auditor())
         self.cost_model = (cost_model if cost_model is not None
                            else CostModel(calibration=calibration))
         self.pallas_b_dtype = (pallas_b_dtype if pallas_b_dtype is not None
@@ -217,6 +227,25 @@ class Planner:
         the pallas scheme wins). Cache entries are workload-keyed, so
         the workloads never shadow each other.
         """
+        with get_tracer().span("plan", workload=workload,
+                               measure=measure) as sp:
+            plan = self._plan_impl(a, reuse_hint, measure=measure,
+                                   candidates=candidates,
+                                   use_cache=use_cache, workload=workload)
+            sp.set(fingerprint=plan.fingerprint, scheme=plan.scheme,
+                   reorder=plan.reorder, cache_hit=plan.from_cache)
+        reg = obs_metrics.get_registry()
+        reg.counter("plan_total").inc()
+        cs = self.cache.stats
+        for key in ("hits", "misses", "evictions", "entries", "bytes"):
+            reg.gauge(f"plan_cache_{key}").set(cs[key])
+        return plan
+
+    def _plan_impl(self, a: HostCSR, reuse_hint: int, *,
+                   measure: bool,
+                   candidates: Optional[Sequence[Candidate]],
+                   use_cache: bool, workload: str) -> Plan:
+        """:meth:`plan` minus the span/metric bookkeeping."""
         reuse_hint = max(int(reuse_hint), 1)
         if workload not in ("a2", "spmm", "chain"):
             raise ValueError(f"unknown workload '{workload}'")
@@ -240,17 +269,20 @@ class Planner:
         ranked = self.cost_model.rank(feats, reuse_hint, cands, fp_w,
                                       workload)
         if measure:
-            # the identity baseline normalizes every other measurement —
-            # probe it even when the caller's candidate set omits it
-            if self.cost_model.measurement(fp_w, IDENTITY) is None:
-                m = self._call_measurer(a, IDENTITY, workload)
-                self.cost_model.observe(fp_w, IDENTITY,
-                                        m.kernel_s, m.preprocess_s)
-            for sc in self._shortlist(ranked):
-                if self.cost_model.measurement(fp_w, sc.candidate) is None:
-                    m = self._call_measurer(a, sc.candidate, workload)
-                    self.cost_model.observe(fp_w, sc.candidate,
+            with get_tracer().span("probe", fingerprint=fp,
+                                   workload=workload):
+                # the identity baseline normalizes every other measurement
+                # — probe it even when the caller's candidate set omits it
+                if self.cost_model.measurement(fp_w, IDENTITY) is None:
+                    m = self._call_measurer(a, IDENTITY, workload)
+                    self.cost_model.observe(fp_w, IDENTITY,
                                             m.kernel_s, m.preprocess_s)
+                for sc in self._shortlist(ranked):
+                    if self.cost_model.measurement(fp_w,
+                                                   sc.candidate) is None:
+                        m = self._call_measurer(a, sc.candidate, workload)
+                        self.cost_model.observe(fp_w, sc.candidate,
+                                                m.kernel_s, m.preprocess_s)
             ranked = self.cost_model.rank(feats, reuse_hint, cands, fp_w,
                                           workload)
             # evidence only: an unmeasured candidate's optimistic heuristic
@@ -382,9 +414,28 @@ class Planner:
         with A row-permuted only. A dense array → tall-skinny SpMM.
         The packed device operands are cached per (plan, workload), so
         repeated calls — the whole point of planning — skip packing too.
+
+        Every execution is device-synced (``jax.block_until_ready``) and
+        its wall time fed to the drift auditor next to the plan's
+        predicted score.
         """
-        runner = self._build_runner(plan, a, b)
-        return np.asarray(runner())
+        tracer = get_tracer()
+        with tracer.span("execute", fingerprint=plan.fingerprint,
+                         scheme=plan.scheme, reorder=plan.reorder,
+                         workload=plan.workload) as sp:
+            runner = self._build_runner(plan, a, b)
+            with tracer.span("kernel", scheme=plan.scheme):
+                t0 = time.perf_counter()
+                out = runner()      # block_until_ready inside the runner
+                kernel_s = time.perf_counter() - t0
+            rec = self.auditor.record(plan, kernel_s)
+            if tracer.enabled:
+                sp.set(kernel_s=kernel_s)
+                if rec is not None:
+                    sp.set(predicted_rel=rec.predicted_rel,
+                           measured_rel=rec.measured_rel,
+                           residual=rec.residual)
+            return out
 
     # -- chained products (workload="chain") ---------------------------------
 
@@ -423,11 +474,16 @@ class Planner:
             reuse_hint = max(hops, 2)
         cur = a
         plans: list[Plan] = []
+        tracer = get_tracer()
+        hop_counter = obs_metrics.get_registry().counter("chain_hops")
         for k in range(hops):
-            plan = self.plan(cur, reuse_hint, measure=measure,
-                             candidates=candidates, workload="chain")
-            plans.append(plan)
-            cur = self._chain_hop(plan, cur, None if k == 0 else a)
+            with tracer.span("hop", hop=k, hops=hops) as sp:
+                plan = self.plan(cur, reuse_hint, measure=measure,
+                                 candidates=candidates, workload="chain")
+                plans.append(plan)
+                sp.set(fingerprint=plan.fingerprint, scheme=plan.scheme)
+                cur = self._chain_hop(plan, cur, None if k == 0 else a)
+            hop_counter.inc()
         return cur, plans
 
     def _chain_hop(self, plan: Plan, cur: HostCSR,
@@ -455,27 +511,36 @@ class Planner:
               f"{_value_digest(cur)}|{fingerprint(b)}|{_value_digest(b)}")
         ck = (f"{plan.fingerprint}|{_plan_digest(plan)}|chain"
               f"|{'sq' if b is None else 'ab'}|{vk}")
+        tracer = get_tracer()
         cached = self._exec_cache.get(ck)
         if cached is None:
-            ap = _apply_plan_perm(cur, plan, symmetric=b is None)
-            bh = ap if b is None else b
-            bk = select_block_k(bh)
-            bcc = bcc_from_host(ap, block_k=bk)
-            tiled = tiled_csr_from_host(bh, block_k=bk,
-                                        dtype=self.pallas_b_dtype)
-            if not kernel_ops.compact_grid_ok(bcc, tiled):
-                return None
-            stream = kernel_ops.bcc_compact_stream(bcc,
-                                                   cover_all_blocks=True)
-            pairs = kernel_ops.build_live_pairs(bcc, tiled, stream)
-            sparse_pairs = kernel_ops.build_sparse_c_pairs(
-                bcc, tiled, pairs, stream)
-            cached = ("chain", bcc, tiled, stream, pairs, sparse_pairs)
-            self._exec_put(ck, cached)
+            with tracer.span("pack", fingerprint=plan.fingerprint,
+                             scheme=plan.scheme, kind="sparse_c"):
+                ap = _apply_plan_perm(cur, plan, symmetric=b is None)
+                bh = ap if b is None else b
+                bk = select_block_k(bh)
+                bcc = bcc_from_host(ap, block_k=bk)
+                tiled = tiled_csr_from_host(bh, block_k=bk,
+                                            dtype=self.pallas_b_dtype)
+                if not kernel_ops.compact_grid_ok(bcc, tiled):
+                    return None
+                stream = kernel_ops.bcc_compact_stream(
+                    bcc, cover_all_blocks=True)
+                pairs = kernel_ops.build_live_pairs(bcc, tiled, stream)
+                sparse_pairs = kernel_ops.build_sparse_c_pairs(
+                    bcc, tiled, pairs, stream)
+                cached = ("chain", bcc, tiled, stream, pairs, sparse_pairs)
+                self._exec_put(ck, cached)
+            self._note_pack()
         _, bcc, tiled, stream, pairs, sparse_pairs = cached
-        cc = kernel_ops.bcc_spgemm_sparse_c(
-            bcc, tiled, stream=stream, pairs=pairs,
-            sparse_pairs=sparse_pairs)
+        with tracer.span("kernel", scheme=plan.scheme, variant="sparse_c"):
+            t0 = time.perf_counter()
+            cc = kernel_ops.bcc_spgemm_sparse_c(
+                bcc, tiled, stream=stream, pairs=pairs,
+                sparse_pairs=sparse_pairs)
+            jax.block_until_ready(cc.slabs)
+            kernel_s = time.perf_counter() - t0
+        self.auditor.record(plan, kernel_s)
         host = compacted_c_to_host(cc)
         if plan.perm is not None:
             inv = np.argsort(np.asarray(plan.perm, dtype=np.int64))
@@ -509,21 +574,24 @@ class Planner:
         if dense_b:
             bd = jnp.asarray(np.asarray(b, dtype=np.float32))
             if cached is None:
-                ap = _apply_plan_perm(a, plan, symmetric=False)
-                if plan.scheme == "rowwise":
-                    dev = csr_from_host(ap)
-                    cached = ("spmm_row", dev)
-                elif plan.scheme == "pallas":
-                    bcc = bcc_from_host(ap)
-                    stream = kernel_ops.bcc_compact_stream(
-                        bcc, cover_all_blocks=True)
-                    cached = ("spmm_pallas", bcc, stream)
-                else:
-                    cc = csr_cluster_from_host(
-                        ap, self._bounds(plan, ap),
-                        max_cluster=plan.max_cluster)
-                    cached = ("spmm_cluster", cc)
-                self._exec_put(ck, cached)
+                with get_tracer().span("pack", fingerprint=plan.fingerprint,
+                                       scheme=plan.scheme, kind="dense_b"):
+                    ap = _apply_plan_perm(a, plan, symmetric=False)
+                    if plan.scheme == "rowwise":
+                        dev = csr_from_host(ap)
+                        cached = ("spmm_row", dev)
+                    elif plan.scheme == "pallas":
+                        bcc = bcc_from_host(ap)
+                        stream = kernel_ops.bcc_compact_stream(
+                            bcc, cover_all_blocks=True)
+                        cached = ("spmm_pallas", bcc, stream)
+                    else:
+                        cc = csr_cluster_from_host(
+                            ap, self._bounds(plan, ap),
+                            max_cluster=plan.max_cluster)
+                        cached = ("spmm_cluster", cc)
+                    self._exec_put(ck, cached)
+                self._note_pack()
             kind = cached[0]
             if kind == "spmm_row":
                 op = cached[1]
@@ -538,61 +606,72 @@ class Planner:
             return self._unpermuted(out, perm, rows_only=True)
 
         if cached is None:
-            if squared:
-                ap = _apply_plan_perm(a, plan, symmetric=True)
-                bh = ap
-            else:
-                ap = _apply_plan_perm(a, plan, symmetric=False)
-                bh = b
-            if plan.scheme == "pallas":
-                # the Pallas Sp×Sp tier: BCC(A) × TiledCSR(B) on the MXU.
-                # Everything the kernel streams is packed exactly once per
-                # cached operand pair: the adaptive k-tile height, the
-                # compact A stream, the live-pair compacted grid AND (on
-                # multi-core backends) its per-core shard partition — a
-                # cache hit goes straight to the kernel with zero host work
-                bk = select_block_k(bh)
-                bcc = bcc_from_host(ap, block_k=bk)
-                tiled = tiled_csr_from_host(bh, block_k=bk,
-                                            dtype=self.pallas_b_dtype)
-                stream = kernel_ops.bcc_compact_stream(
-                    bcc, cover_all_blocks=True)
-                # the intersection is only worth packing when the
-                # compacted grid will actually run (wide B falls back to
-                # the padded per-tile grid, which ignores it)
-                pairs = (kernel_ops.build_live_pairs(bcc, tiled, stream)
-                         if kernel_ops.compact_grid_ok(bcc, tiled)
-                         else None)
-                shard_pack = (kernel_ops.build_shard_pack(bcc, tiled, pairs)
-                              if pairs is not None
-                              and kernel_ops.pallas_shard_count() > 1
-                              else None)
-                cached = ("pallas", bcc, tiled, stream, pairs, shard_pack)
-            else:
-                dev_b = csr_from_host(bh)
-                b_lens = bh.row_nnz()
-                if plan.scheme == "rowwise":
-                    dev_a = csr_from_host(ap)
-                    fetch = np.zeros(dev_a.nnz_cap, dtype=np.int64)
-                    fetch[: ap.nnz] = b_lens[ap.indices.astype(np.int64)]
-                    bins = length_bins(fetch, pad_sentinel=dev_a.nnz_cap)
-                    srows = slot_rows_host(np.asarray(dev_a.indptr),
-                                           dev_a.nnz_cap)
-                    cached = ("row", dev_a, dev_b, bins, srows)
+            with get_tracer().span("pack", fingerprint=plan.fingerprint,
+                                   scheme=plan.scheme,
+                                   kind="sq" if squared else "ab"):
+                if squared:
+                    ap = _apply_plan_perm(a, plan, symmetric=True)
+                    bh = ap
                 else:
-                    cc = csr_cluster_from_host(ap, self._bounds(plan, ap),
-                                               max_cluster=plan.max_cluster)
-                    total = int(np.asarray(cc.cluster_ptr)[-1])
-                    slot_cols = np.asarray(cc.cols)[:total].astype(np.int64)
-                    fetch = np.zeros(cc.slot_cap, dtype=np.int64)
-                    fetch[:total] = np.where(
-                        slot_cols < bh.nrows, b_lens[
-                            np.clip(slot_cols, 0, bh.nrows - 1)], 0)
-                    bins = length_bins(fetch, pad_sentinel=cc.slot_cap)
-                    sclust = slot_rows_host(np.asarray(cc.cluster_ptr),
-                                            cc.slot_cap)
-                    cached = ("cluster", cc, dev_b, bins, sclust)
-            self._exec_put(ck, cached)
+                    ap = _apply_plan_perm(a, plan, symmetric=False)
+                    bh = b
+                if plan.scheme == "pallas":
+                    # the Pallas Sp×Sp tier: BCC(A) × TiledCSR(B) on the
+                    # MXU. Everything the kernel streams is packed exactly
+                    # once per cached operand pair: the adaptive k-tile
+                    # height, the compact A stream, the live-pair compacted
+                    # grid AND (on multi-core backends) its per-core shard
+                    # partition — a cache hit goes straight to the kernel
+                    # with zero host work
+                    bk = select_block_k(bh)
+                    bcc = bcc_from_host(ap, block_k=bk)
+                    tiled = tiled_csr_from_host(bh, block_k=bk,
+                                                dtype=self.pallas_b_dtype)
+                    stream = kernel_ops.bcc_compact_stream(
+                        bcc, cover_all_blocks=True)
+                    # the intersection is only worth packing when the
+                    # compacted grid will actually run (wide B falls back
+                    # to the padded per-tile grid, which ignores it)
+                    pairs = (kernel_ops.build_live_pairs(bcc, tiled, stream)
+                             if kernel_ops.compact_grid_ok(bcc, tiled)
+                             else None)
+                    shard_pack = (
+                        kernel_ops.build_shard_pack(bcc, tiled, pairs)
+                        if pairs is not None
+                        and kernel_ops.pallas_shard_count() > 1
+                        else None)
+                    cached = ("pallas", bcc, tiled, stream, pairs,
+                              shard_pack)
+                else:
+                    dev_b = csr_from_host(bh)
+                    b_lens = bh.row_nnz()
+                    if plan.scheme == "rowwise":
+                        dev_a = csr_from_host(ap)
+                        fetch = np.zeros(dev_a.nnz_cap, dtype=np.int64)
+                        fetch[: ap.nnz] = b_lens[
+                            ap.indices.astype(np.int64)]
+                        bins = length_bins(fetch,
+                                           pad_sentinel=dev_a.nnz_cap)
+                        srows = slot_rows_host(np.asarray(dev_a.indptr),
+                                               dev_a.nnz_cap)
+                        cached = ("row", dev_a, dev_b, bins, srows)
+                    else:
+                        cc = csr_cluster_from_host(
+                            ap, self._bounds(plan, ap),
+                            max_cluster=plan.max_cluster)
+                        total = int(np.asarray(cc.cluster_ptr)[-1])
+                        slot_cols = np.asarray(
+                            cc.cols)[:total].astype(np.int64)
+                        fetch = np.zeros(cc.slot_cap, dtype=np.int64)
+                        fetch[:total] = np.where(
+                            slot_cols < bh.nrows, b_lens[
+                                np.clip(slot_cols, 0, bh.nrows - 1)], 0)
+                        bins = length_bins(fetch, pad_sentinel=cc.slot_cap)
+                        sclust = slot_rows_host(np.asarray(cc.cluster_ptr),
+                                                cc.slot_cap)
+                        cached = ("cluster", cc, dev_b, bins, sclust)
+                self._exec_put(ck, cached)
+            self._note_pack()
         kind = cached[0]
         if kind == "pallas":
             _, bcc, tiled, stream, pairs, shard_pack = cached
@@ -614,6 +693,12 @@ class Planner:
             self._exec_cache.pop(next(iter(self._exec_cache)))
         self._exec_cache[key] = packed
 
+    def _note_pack(self) -> None:
+        """Account one exec-cache packing miss in the metrics registry."""
+        reg = obs_metrics.get_registry()
+        reg.counter("exec_cache_packs").inc()
+        reg.gauge("exec_cache_entries").set(len(self._exec_cache))
+
     @staticmethod
     def _bounds(plan: Plan, ap: HostCSR) -> list[int]:
         if plan.boundaries is None:
@@ -622,12 +707,16 @@ class Planner:
 
     @staticmethod
     def _unpermuted(run, perm: Optional[np.ndarray], *, rows_only: bool):
+        # block_until_ready before np.asarray: the conversion would sync
+        # anyway, but syncing explicitly makes every timed region around a
+        # runner measure device completion, not dispatch (and it is a
+        # no-op passthrough for host-side numpy results)
         if perm is None:
-            return lambda: np.asarray(run())
+            return lambda: np.asarray(jax.block_until_ready(run()))
         p = np.asarray(perm, dtype=np.int64)
 
         def wrapped():
-            cp = np.asarray(run())
+            cp = np.asarray(jax.block_until_ready(run()))
             out = np.empty_like(cp)
             if rows_only:
                 out[p] = cp

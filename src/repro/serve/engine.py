@@ -27,6 +27,8 @@ import numpy as np
 
 from repro.core.formats import HostCSR
 from repro.models.transformer import decode_step, init_cache, prefill
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import get_tracer
 from repro.planner.service import Planner
 
 __all__ = ["make_serve_step", "ServingEngine", "SpGEMMServer"]
@@ -63,6 +65,7 @@ class SpGEMMResponse:
     plan_cache_hit: bool
     plan_s: float              # planning + preprocessing wall time (0-ish on hit)
     execute_s: float
+    trace_id: str = ""         # root span's trace id ("" when tracing is off)
 
 
 class SpGEMMServer:
@@ -110,12 +113,42 @@ class SpGEMMServer:
         and the response reports the first hop's plan — with
         ``plan_cache_hit`` true only when *every* hop hit the cache (the
         steady serving state for a recurring chain).
+
+        Each request runs under a root ``request`` span (its trace id is
+        returned as ``SpGEMMResponse.trace_id`` when tracing is on) and
+        feeds the per-tenant ``serve_*`` metrics.
         """
         self.requests += 1
         hint = self.default_reuse_hint if reuse_hint is None else reuse_hint
+        if hops is not None and b is not None:
+            raise ValueError("chain requests take b=None (A^k workload)")
+        workload = ("chain" if hops is not None
+                    else "spmm" if (b is not None
+                                    and not isinstance(b, HostCSR))
+                    else "a2")
+        reg = obs_metrics.get_registry()
+        reg.counter("serve_requests", tenant=self.tenant).inc()
+        with get_tracer().span("request", tenant=self.tenant,
+                               workload=workload) as root:
+            resp = self._submit_impl(a, b, hint=hint, hops=hops,
+                                     workload=workload)
+            resp.trace_id = root.trace_id
+            root.set(fingerprint=resp.fingerprint, scheme=resp.scheme,
+                     cache_hit=resp.plan_cache_hit)
+        reg.histogram("serve_request_s", tenant=self.tenant,
+                      scheme=resp.scheme).observe(resp.plan_s
+                                                  + resp.execute_s)
+        reg.histogram("serve_plan_s", tenant=self.tenant).observe(resp.plan_s)
+        reg.histogram("serve_execute_s",
+                      tenant=self.tenant).observe(resp.execute_s)
+        return resp
+
+    def _submit_impl(self, a: HostCSR, b, *, hint: int,
+                     hops: Optional[int], workload: str) -> SpGEMMResponse:
+        """:meth:`submit` minus the span/metric bookkeeping. Timed
+        regions are device-synced: planner runners block until the device
+        result is ready before the closing ``perf_counter`` read."""
         if hops is not None:
-            if b is not None:
-                raise ValueError("chain requests take b=None (A^k workload)")
             t0 = time.perf_counter()
             out, plans = self.planner.execute_chain(
                 a, hops=hops, reuse_hint=hint, measure=self.measure)
@@ -130,13 +163,11 @@ class SpGEMMServer:
                 kernel_path=("pallas" if any(p.scheme == "pallas"
                                              for p in plans) else "xla"),
                 plan_cache_hit=hit, plan_s=0.0, execute_s=t1 - t0)
-        workload = "spmm" if (b is not None
-                              and not isinstance(b, HostCSR)) else "a2"
         t0 = time.perf_counter()
         plan = self.planner.plan(a, hint, measure=self.measure,
                                  workload=workload)
         t1 = time.perf_counter()
-        out = self.planner.execute(plan, a, b)
+        out = jax.block_until_ready(self.planner.execute(plan, a, b))
         t2 = time.perf_counter()
         if plan.from_cache:
             self.plan_hits += 1
@@ -147,10 +178,15 @@ class SpGEMMServer:
             plan_cache_hit=plan.from_cache,
             plan_s=t1 - t0, execute_s=t2 - t1)
 
-    @property
     def stats(self) -> dict:
+        """Serving snapshot: request/hit counts, the tenant's plan-cache
+        partition (``PlanCache.stats``, both spread flat for
+        back-compat and nested under ``"plan_cache"``) and the drift
+        auditor's rolling summary under ``"audit"``."""
         return {"requests": self.requests, "plan_hits": self.plan_hits,
-                "tenant": self.tenant, **self.planner.stats}
+                "tenant": self.tenant, **self.planner.stats,
+                "plan_cache": dict(self.planner.cache.stats),
+                "audit": self.planner.auditor.summary()}
 
 
 @dataclasses.dataclass

@@ -1,0 +1,391 @@
+"""Observability subsystem tests (ISSUE 7).
+
+Covers the contracted behaviors:
+  * span nesting: children inherit trace_id and record the parent span id;
+  * the disabled tracer is a strict no-op (shared singleton span, zero
+    ring-buffer writes — asserted with a call-count shim on ``_record``);
+  * metrics-name validation: undeclared host metrics, kind mismatches and
+    unknown device counters all raise;
+  * drift-audit samples round-trip through
+    ``planner.calibration.fit_calibration(samples=...)``;
+  * ``SpGEMMServer.stats()`` surfaces per-tenant serving, plan-cache and
+    audit state;
+  * exporters emit parseable JSONL / Chrome trace-event JSON;
+  * ``tools/trace_report`` summarize + structural check.
+"""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.formats import COUNTER_UNITS, HostCSR
+from repro.obs import (DriftAuditor, MetricsRegistry, Span, Tracer,
+                       get_tracer)
+from repro.obs.trace import NOOP_SPAN
+from repro.planner.calibration import fit_calibration
+from repro.planner.plan_cache import Plan
+from repro.serve.engine import SpGEMMServer
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+import trace_report  # noqa: E402
+
+
+def _mat(n=64, density=0.08, seed=0):
+    rng = np.random.default_rng(seed)
+    return HostCSR.from_dense(
+        (rng.random((n, n)) < density).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# tracing spans
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_and_trace_id_inheritance():
+    tr = Tracer(enabled=True)
+    with tr.span("request", tenant="t") as root:
+        with tr.span("plan") as plan:
+            plan.set(scheme="rowwise")
+        with tr.span("execute") as ex:
+            with tr.span("kernel"):
+                pass
+    spans = {s.name: s for s in tr.spans()}
+    assert set(spans) == {"request", "plan", "execute", "kernel"}
+    req = spans["request"]
+    assert req.parent_id == 0
+    for child in ("plan", "execute"):
+        assert spans[child].trace_id == req.trace_id
+        assert spans[child].parent_id == req.span_id
+    assert spans["kernel"].parent_id == spans["execute"].span_id
+    assert spans["kernel"].trace_id == req.trace_id
+    assert spans["plan"].attrs == {"scheme": "rowwise"}
+    assert root.trace_id == req.trace_id
+    assert ex.span_id == spans["execute"].span_id
+    # children close before parents: durations nest
+    assert spans["kernel"].duration <= spans["execute"].duration
+    assert spans["execute"].duration <= req.duration
+
+
+def test_sibling_requests_get_distinct_trace_ids():
+    tr = Tracer(enabled=True)
+    for _ in range(3):
+        with tr.span("request"):
+            pass
+    ids = [s.trace_id for s in tr.spans()]
+    assert len(set(ids)) == 3
+
+
+def test_disabled_tracer_is_strict_noop():
+    tr = Tracer(enabled=False)
+    calls = []
+    orig = tr._record
+    tr._record = lambda rec: (calls.append(rec), orig(rec))
+    s1 = tr.span("request", tenant="x")
+    s2 = tr.span("plan")
+    assert s1 is NOOP_SPAN and s2 is NOOP_SPAN   # one shared singleton
+    with s1 as opened:
+        assert opened is NOOP_SPAN
+        opened.set(anything=1)                   # set() is a no-op too
+    assert calls == []                           # zero ring-buffer writes
+    assert tr.spans() == []
+    assert s1.trace_id == "" and s1.span_id == 0
+
+
+def test_ring_buffer_bounded_with_drop_count():
+    tr = Tracer(capacity=4, enabled=True)
+    for i in range(10):
+        with tr.span("s", i=i):
+            pass
+    spans = tr.spans()
+    assert len(spans) == 4
+    assert tr.dropped == 6
+    assert [s.attrs["i"] for s in spans] == [6, 7, 8, 9]   # oldest dropped
+
+
+def test_exception_unwinds_span_stack():
+    tr = Tracer(enabled=True)
+    with pytest.raises(RuntimeError):
+        with tr.span("outer"):
+            with tr.span("inner"):
+                raise RuntimeError("boom")
+    spans = {s.name: s for s in tr.spans()}
+    assert set(spans) == {"outer", "inner"}
+    assert tr._stack() == []                     # stack fully unwound
+    assert spans["inner"].parent_id == spans["outer"].span_id
+
+
+def test_exporters_jsonl_and_chrome(tmp_path):
+    tr = Tracer(enabled=True)
+    with tr.span("request", tenant="t"):
+        with tr.span("plan"):
+            pass
+    jsonl = tmp_path / "trace.jsonl"
+    chrome = tmp_path / "chrome.json"
+    assert tr.export_jsonl(str(jsonl)) == 2
+    rows = [json.loads(line) for line in jsonl.read_text().splitlines()]
+    assert {r["name"] for r in rows} == {"request", "plan"}
+    for r in rows:
+        assert {"trace_id", "span_id", "parent_id", "ts", "dur",
+                "attrs"} <= set(r)
+    assert tr.export_chrome(str(chrome)) == 2
+    doc = json.loads(chrome.read_text())
+    events = doc["traceEvents"]
+    complete = [e for e in events if e["ph"] == "X"]
+    meta = [e for e in events if e["ph"] == "M"]
+    assert len(complete) == 2 and len(meta) == 1
+    assert all(e["dur"] >= 0 for e in complete)
+    assert meta[0]["name"] == "thread_name"
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_undeclared_host_metric_raises():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError, match="METRIC_CATALOG"):
+        reg.counter("totally_unknown_metric")
+
+
+def test_metric_kind_mismatch_raises():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError, match="counter"):
+        reg.gauge("serve_requests")      # declared as a counter
+
+
+def test_unknown_device_counter_raises_with_names():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError, match="not_a_counter"):
+        reg.emit_device_counters({"b_bytes": 1.0, "not_a_counter": 2.0})
+
+
+def test_device_counters_accumulate_and_ratio_is_gauge():
+    reg = MetricsRegistry()
+    ratio_name = next(n for n, u in COUNTER_UNITS.items()
+                      if "(ratio)" in u)
+    reg.emit_device_counters({"b_bytes": 100.0, ratio_name: 0.5})
+    reg.emit_device_counters({"b_bytes": 50.0, ratio_name: 0.25})
+    snap = reg.snapshot()
+    assert snap["device_b_bytes"] == 150          # counter: accumulates
+    assert snap[f"device_{ratio_name}"] == 0.25   # gauge: last value wins
+
+
+def test_labels_key_instruments_and_empty_labels_drop():
+    reg = MetricsRegistry()
+    reg.counter("serve_requests", tenant="a").inc()
+    reg.counter("serve_requests", tenant="a").inc()
+    reg.counter("serve_requests", tenant="b").inc()
+    reg.counter("serve_requests", tenant="").inc()
+    snap = reg.snapshot()
+    assert snap["serve_requests{tenant=a}"] == 2
+    assert snap["serve_requests{tenant=b}"] == 1
+    assert snap["serve_requests"] == 1            # empty label dropped
+
+
+def test_histogram_snapshot_percentiles():
+    reg = MetricsRegistry()
+    h = reg.histogram("serve_request_s")
+    for v in range(1, 101):
+        h.observe(v / 100.0)
+    snap = h.snapshot()
+    assert snap["count"] == 100
+    assert snap["min"] == 0.01 and snap["max"] == 1.0
+    assert 0.45 <= snap["p50"] <= 0.55
+    assert 0.90 <= snap["p95"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# drift auditor -> calibration
+# ---------------------------------------------------------------------------
+
+
+def _plan(fp="fp0", reorder="rcm", scheme="fixed", pred=0.8, pre=0.3,
+          cached=False):
+    return Plan(fingerprint=fp, reorder=reorder, scheme=scheme,
+                reuse_hint=16, predicted={"kernel_rel": pred},
+                preprocess_s=pre, from_cache=cached)
+
+
+def test_auditor_first_sample_seeds_baseline_zero_residual():
+    aud = DriftAuditor()
+    rec = aud.record(_plan(), 0.010)
+    assert rec.residual == pytest.approx(0.0)
+    assert rec.baseline_s == pytest.approx(0.010 / 0.8)
+
+
+def test_auditor_flags_drifted_fingerprint():
+    aud = DriftAuditor()
+    aud.record(_plan(fp="drifty"), 0.010)       # seeds the baseline
+    # measured 3x what the prediction implies: the residual EWMA crosses
+    # the threshold while the rolling baseline is still catching up
+    aud.record(_plan(fp="drifty", cached=True, pre=0.0), 0.030)
+    aud.record(_plan(fp="drifty", cached=True, pre=0.0), 0.030)
+    flagged = aud.flagged()
+    assert "drifty" in flagged
+    assert flagged["drifty"]["scheme"] == "fixed"
+    summary = aud.summary()
+    assert summary["per_scheme"]["fixed"]["n"] == 3
+    assert summary["per_scheme"]["fixed"]["regret"] > 0.0
+    # a sustained shift is eventually absorbed into the implied baseline
+    # (with single-scheme traffic it is indistinguishable from a wrong
+    # seed) — the flag is the transient alarm, recalibration the cure
+    for _ in range(40):
+        aud.record(_plan(fp="drifty", cached=True, pre=0.0), 0.030)
+    assert abs(aud._fp_residual["drifty"]) < aud.threshold
+    assert "drifty" not in aud.flagged()
+
+
+def test_auditor_rejects_unusable_measurements():
+    aud = DriftAuditor()
+    assert aud.record(_plan(), 0.0) is None
+    assert aud.record(_plan(), float("nan")) is None
+    assert len(aud.records) == 0
+
+
+def test_audit_samples_fit_calibration_roundtrip():
+    aud = DriftAuditor()
+    rng = np.random.default_rng(0)
+    for i in range(6):                  # ≥ min_samples across two configs
+        aud.record(_plan(fp=f"f{i}", reorder="rcm", scheme="fixed",
+                         pred=0.8, pre=0.4 * 0.01),
+                   0.008 * (1 + 0.02 * rng.random()))
+        aud.record(_plan(fp=f"g{i}", reorder="original", scheme="rowwise",
+                         pred=1.0, pre=0.0),
+                   0.010 * (1 + 0.02 * rng.random()))
+    samples = aud.samples()
+    assert len(samples) == 12
+    for s in samples:
+        assert s["spec"].startswith("serve:")
+        assert set(s) == {"spec", "reorder", "scheme", "kernel_rel",
+                          "preprocess_rel"}
+    cal = fit_calibration(samples=samples)
+    assert cal is not None
+    assert cal.n_samples == 12
+    # serve:* specs have no suite features -> no kernel-scale fit, but
+    # the preprocess indicator fit consumes them: rcm's constant is the
+    # injected preprocess_rel (original anchors at zero by convention)
+    assert cal.kernel_scale == {}
+    assert "rcm" in cal.preprocess_reorder
+    assert "fixed" in cal.preprocess_scheme
+    # rcm always co-occurs with fixed in these samples, so the indicator
+    # fit can only identify their sum — the injected 0.4 preprocess_rel
+    total = cal.preprocess_reorder["rcm"] + cal.preprocess_scheme["fixed"]
+    assert total == pytest.approx(0.4, rel=0.15)
+
+
+def test_fit_calibration_below_min_samples_returns_none():
+    aud = DriftAuditor()
+    aud.record(_plan(), 0.01)
+    assert fit_calibration(samples=aud.samples()) is None
+
+
+# ---------------------------------------------------------------------------
+# server integration
+# ---------------------------------------------------------------------------
+
+
+def test_server_stats_per_tenant_and_trace_ids():
+    tracer = get_tracer()
+    was = tracer.enabled
+    tracer.enable()
+    try:
+        srv_a = SpGEMMServer(tenant="team-a")
+        srv_b = SpGEMMServer(tenant="team-b")
+        a = _mat(seed=1)
+        r1 = srv_a.submit(a)
+        r2 = srv_a.submit(a)
+        r3 = srv_b.submit(_mat(seed=2))
+        assert r1.trace_id and r2.trace_id and r3.trace_id
+        assert len({r1.trace_id, r2.trace_id, r3.trace_id}) == 3
+        stats = srv_a.stats()
+        assert stats["tenant"] == "team-a"
+        assert stats["requests"] == 2
+        assert stats["plan_hits"] == 1            # same pattern -> hit
+        assert {"hits", "misses", "entries"} <= set(stats["plan_cache"])
+        audit = stats["audit"]
+        assert audit["records"] >= 2
+        assert "per_scheme" in audit and "flagged" in audit
+        assert srv_b.stats()["tenant"] == "team-b"
+        assert srv_b.stats()["requests"] == 1
+    finally:
+        if not was:
+            tracer.disable()
+
+
+def test_server_span_tree_covers_request():
+    tracer = get_tracer()
+    was = tracer.enabled
+    tracer.enable()
+    tracer.clear()
+    try:
+        srv = SpGEMMServer(tenant="span-test")
+        resp = srv.submit(_mat(seed=3))
+        fam = [s for s in tracer.spans() if s.trace_id == resp.trace_id]
+        names = {s.name for s in fam}
+        assert {"request", "plan", "execute"} <= names
+        req = next(s for s in fam if s.name == "request")
+        plan = next(s for s in fam if s.name == "plan")
+        assert plan.parent_id == req.span_id
+        assert "fingerprint" in plan.attrs and "scheme" in plan.attrs
+    finally:
+        tracer.clear()
+        if not was:
+            tracer.disable()
+
+
+# ---------------------------------------------------------------------------
+# trace_report
+# ---------------------------------------------------------------------------
+
+
+def _demo_spans():
+    tr = Tracer(enabled=True)
+    for hit in (False, True):
+        with tr.span("request", tenant="t"):
+            with tr.span("plan") as p:
+                p.set(fingerprint="fp", scheme="rowwise", cache_hit=hit)
+            if not hit:
+                with tr.span("pack"):
+                    pass
+            with tr.span("execute") as e:
+                e.set(fingerprint="fp", scheme="rowwise", residual=0.1)
+                with tr.span("kernel"):
+                    pass
+    return [json.loads(json.dumps(s.to_json())) for s in tr.spans()]
+
+
+def test_trace_report_summarize():
+    summary = trace_report.summarize(_demo_spans())
+    assert summary["spans"]["request"]["count"] == 2
+    # self-time excludes children: request self < request total
+    req = summary["spans"]["request"]
+    assert req["self_s"] <= req["total_s"]
+    assert summary["cache"]["plan_calls"] == 2
+    assert summary["cache"]["plan_cache_hits"] == 1
+    assert summary["cache"]["plan_cache_hit_rate"] == 0.5
+    assert summary["cache"]["exec_cache_packs"] == 1
+    assert summary["drift"]["rowwise"]["n"] == 2
+    assert summary["drift"]["rowwise"]["regret"] == pytest.approx(0.1)
+    assert summary["tenants"]["t"]["requests"] == 2
+
+
+def test_trace_report_structure_check():
+    spans = _demo_spans()
+    assert trace_report.check_structure(spans) == []
+    # drop the execute spans: every request must then fail the check
+    broken = [s for s in spans if s["name"] != "execute"]
+    errors = trace_report.check_structure(broken)
+    assert any("execute" in e for e in errors)
+    assert trace_report.check_structure([]) == ["no spans in trace"]
+
+
+def test_span_dataclass_json_roundtrip():
+    sp = Span(name="plan", trace_id="t1", span_id=2, parent_id=1,
+              t0=0.5, duration=0.25, attrs={"scheme": "fixed"})
+    d = json.loads(json.dumps(sp.to_json()))
+    assert d == {"name": "plan", "trace_id": "t1", "span_id": 2,
+                 "parent_id": 1, "ts": 0.5, "dur": 0.25,
+                 "attrs": {"scheme": "fixed"}}

@@ -384,7 +384,7 @@ def test_serve_engine_spgemm_server_stats():
     r1 = srv.submit(a)
     r2 = srv.submit(HostCSR(a.indptr, a.indices, a.data * 0.5, a.shape))
     assert not r1.plan_cache_hit and r2.plan_cache_hit
-    assert srv.stats["requests"] == 2 and srv.stats["plan_hits"] == 1
+    assert srv.stats()["requests"] == 2 and srv.stats()["plan_hits"] == 1
     np.testing.assert_allclose(r2.result, 0.25 * spgemm_reference(a, a),
                                rtol=1e-3, atol=1e-3)
 
@@ -459,8 +459,8 @@ def test_spgemm_server_tenant_namespace():
     a = FAMILIES["blockdiag"]()
     srv = SpGEMMServer(default_reuse_hint=10, tenant="team-x")
     srv.submit(a)
-    assert srv.stats["tenant"] == "team-x"
-    assert srv.stats["namespace"] == "team-x"
+    assert srv.stats()["tenant"] == "team-x"
+    assert srv.stats()["namespace"] == "team-x"
     assert srv.planner.cache.namespace == "team-x"
 
 

@@ -4,8 +4,8 @@
 Keeps the `docs/` architecture suite honest against the code it
 describes. Checks, in order:
 
-1. the three guides exist (`docs/formats.md`, `docs/planner.md`,
-   `docs/kernels.md`);
+1. the guides exist (`docs/formats.md`, `docs/planner.md`,
+   `docs/kernels.md`, `docs/observability.md`);
 2. every relative markdown link in `README.md` + `docs/*.md` resolves to
    an existing file (anchors stripped; http(s) links skipped);
 3. every backticked code cross-reference of the form ``path.py::symbol``
@@ -14,7 +14,11 @@ describes. Checks, in order:
 4. the counters glossary in `docs/kernels.md` stays in two-way sync with
    ``repro.core.formats.COUNTER_UNITS``: every glossary counter exists in
    the code (COUNTER_UNITS or the bench_kernels source) and every
-   COUNTER_UNITS entry is documented in the glossary.
+   COUNTER_UNITS entry is documented in the glossary;
+5. the metric-catalog table in `docs/observability.md` stays in two-way
+   sync with ``repro.obs.metrics.METRIC_CATALOG``: every documented
+   metric is declared (with the same kind) and every declared metric is
+   documented.
 
 Exit code 0 when clean; prints one line per violation otherwise.
 """
@@ -25,12 +29,28 @@ import re
 import sys
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
-GUIDES = ["docs/formats.md", "docs/planner.md", "docs/kernels.md"]
+GUIDES = ["docs/formats.md", "docs/planner.md", "docs/kernels.md",
+          "docs/observability.md"]
 DOC_FILES = ["README.md"] + GUIDES
 
 LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
 CODEREF_RE = re.compile(r"`([\w./-]+\.(?:py|md))(?:::([A-Za-z_][\w.]*))?`")
 GLOSSARY_ROW_RE = re.compile(r"^\|\s*`([\w]+)`\s*\|")
+METRIC_ROW_RE = re.compile(r"^\|\s*`([\w]+)`\s*\|\s*(\w+)\s*\|")
+
+
+def _section_rows(text: str, heading: str, row_re: re.Pattern) -> list:
+    """Table-row regex matches inside one ``## heading`` section."""
+    rows, inside = [], False
+    for line in text.splitlines():
+        if line.startswith("## "):
+            inside = line.strip().lower() == f"## {heading}"
+            continue
+        if inside:
+            m = row_re.match(line)
+            if m:
+                rows.append(m.groups())
+    return rows
 
 
 def _read(relpath: str) -> str:
@@ -98,6 +118,27 @@ def check() -> list[str]:
         if name not in glossary:
             errors.append(f"COUNTER_UNITS['{name}'] undocumented in the "
                           "docs/kernels.md counters glossary")
+
+    # 5. metric-catalog table <-> METRIC_CATALOG, two-way (names + kinds)
+    from repro.obs.metrics import METRIC_CATALOG
+    obs_doc = docs.get("docs/observability.md", "")
+    doc_rows = dict(_section_rows(obs_doc, "metric catalog", METRIC_ROW_RE))
+    doc_rows.pop("metric", None)                 # the header row
+    if not doc_rows:
+        errors.append("docs/observability.md: no metric catalog table "
+                      "found")
+    for name, kind in sorted(doc_rows.items()):
+        entry = METRIC_CATALOG.get(name)
+        if entry is None:
+            errors.append(f"docs/observability.md catalog cites '{name}' "
+                          "— not in METRIC_CATALOG")
+        elif entry[0] != kind:
+            errors.append(f"docs/observability.md: '{name}' documented as "
+                          f"{kind}, declared as {entry[0]}")
+    for name in sorted(METRIC_CATALOG):
+        if name not in doc_rows:
+            errors.append(f"METRIC_CATALOG['{name}'] undocumented in the "
+                          "docs/observability.md metric catalog")
     return errors
 
 
@@ -108,7 +149,7 @@ def main() -> int:
             print(f"docs-check: {e}")
         return 1
     print(f"docs-check: {len(DOC_FILES)} files clean (links, code refs, "
-          "counters glossary in sync)")
+          "counters glossary + metric catalog in sync)")
     return 0
 
 
