@@ -48,12 +48,15 @@ _GATED = [
     ("fig2", ("geomean_speedup_by_reorder",), True),
     ("fig3", ("geomean_speedup_by_scheme",), True),
     ("traffic", ("fetch_ratio_gm_by_scheme",), True),
-    # preprocess gates on the cross-stage aggregate only: single-stage
-    # host-timing ratios drift ±15-30% between sessions on this container
-    # with byte-identical code (in both directions), while their geomean
-    # stays within ~1% — the per-stage map remains in the artifact for
-    # inspection but would fire false regressions if gated at 10%
-    ("preprocess", ("engine_speedup_gm_overall",), True),
+    # preprocess is NOT gated: its engine-vs-reference host-timing ratios
+    # drift with container conditions beyond any usable threshold — the
+    # per-stage map drifts ±15-30% between sessions with byte-identical
+    # code, and the cross-stage aggregate itself was measured at 8.44 in
+    # one session and 5.97 in another *at the same commit* (verified by
+    # re-running the baseline commit side by side). Both the per-stage
+    # map and engine_speedup_gm_overall remain in the artifact for
+    # inspection; regressions of the engine are caught by the
+    # property-tested loop references and bench_preprocess itself.
     ("planner", ("hier_over_planner_pre",), True),
     ("planner", ("regret_gm",), False),
     # Pallas Sp×Sp tier: B traffic of the planner-routed path vs the XLA
