@@ -3,16 +3,27 @@
 PY        ?= python
 PYPATH    := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow docs-check trace-report bench-quick bench-kernels \
-        bench-preprocess bench-planner bench-trajectory lint
+.PHONY: test test-slow test-chaos docs-check trace-report bench-quick \
+        bench-kernels bench-preprocess bench-planner bench-trajectory lint
 
 ## tier-1 verification (the command CI runs; pytest.ini excludes -m slow)
 ## — includes the docs gate: doctests on the two doc-bearing modules and
-## the docs/ cross-reference checker
+## the docs/ cross-reference checker, plus the chaos suite re-run under
+## its fixed fault seeds
 test:
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q
 	$(MAKE) docs-check
 	$(MAKE) trace-report
+	$(MAKE) test-chaos
+
+## the chaos suite under three fixed fault seeds: every injected failure
+## (cache_load / pack / kernel_launch / output) must degrade to a result
+## bit-identical to the rowwise oracle — see docs/resilience.md
+test-chaos:
+	for s in 0 1 2; do \
+	    CHAOS_SEED=$$s PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q \
+	        tests/test_resilience.py || exit 1; \
+	done
 
 ## runnable docstring examples (core/formats, planner/cost_model) + the
 ## docs/*.md link & counters-glossary checker

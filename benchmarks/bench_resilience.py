@@ -1,0 +1,203 @@
+"""Resilience benchmark (ISSUE 8): guard overhead + chaos recovery.
+
+Two measurements, both on the steady cache-hit serving state:
+
+1. **Guard overhead.** The resilience guards — boundary validation, the
+   output finiteness check, the breaker's closed-state reads — sit on
+   every request. This bench measures serving throughput with the
+   policy fully disabled (``ResiliencePolicy.disabled()`` — the raw
+   pre-resilience path) vs fully enabled (the default), and gates
+
+       guard_overhead_frac = max(0, t_on / t_off - 1) <= 0.02
+
+   with best-of-N minimum times on interleaved passes (the bench_obs
+   measurement pattern: GC parked during timed passes, repeated
+   attempts before a gate failure is real).
+
+2. **Chaos recovery.** Under a seeded :class:`FaultPlan` firing at each
+   injection site in turn, every submit must return a result
+   **bit-identical** to the rowwise oracle (integer-valued operands
+   make fp32 accumulation exact across kernel tiers) — the degradation
+   ladder's acceptance criterion, re-checked here at bench scale.
+"""
+from __future__ import annotations
+
+import gc
+import time
+
+import numpy as np
+
+from repro.core.formats import HostCSR
+from repro.planner.plan_cache import Plan, PlanCache
+from repro.planner.service import Planner
+from repro.planner.features import fingerprint
+from repro.resilience import (FaultPlan, ResiliencePolicy, get_policy,
+                              injected, reset_policy, set_policy)
+from repro.resilience import faults
+from repro.serve.engine import SpGEMMServer
+
+# overhead ceiling the trajectory gate (``_ABS_GATED``) also enforces on
+# committed artifacts
+OVERHEAD_GATE = 0.02
+
+_REPS = 12         # interleaved off/on passes; min over passes is scored
+_ATTEMPTS = 3      # full re-measurements before the gate failure is real
+_CHAOS_SEEDS = (0, 1, 2)
+
+
+def _mats(tier: str, *, integer: bool = False) -> list[HostCSR]:
+    # per-request work must be representative of real serving (a few ms,
+    # not sub-ms toys) or the fixed per-request guard cost reads as an
+    # inflated fraction of an unrealistically tiny denominator
+    n = 192 if tier == "quick" else 256
+    out = []
+    for seed in range(3):
+        rng = np.random.default_rng(11 + seed)
+        mask = rng.random((n, n)) < 0.08
+        if integer:
+            dense = (mask * rng.integers(1, 4, (n, n))).astype(np.float32)
+        else:
+            dense = mask.astype(np.float32)
+        out.append(HostCSR.from_dense(dense))
+    return out
+
+
+def _pass_seconds(srv: SpGEMMServer, mats: list[HostCSR],
+                  repeats: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        for a in mats:
+            srv.submit(a)
+    return time.perf_counter() - t0
+
+
+def _measure_once(srv_off: SpGEMMServer, srv_on: SpGEMMServer,
+                  mats: list[HostCSR], repeats: int) -> tuple[float, float]:
+    """(t_off, t_on): best-of-_REPS interleaved disabled/enabled passes,
+    GC parked during the timed regions (collected between them)."""
+    t_off = t_on = float("inf")
+    gc_was_enabled = gc.isenabled()
+    try:
+        for _ in range(_REPS):
+            gc.collect()
+            gc.disable()
+            t_off = min(t_off, _pass_seconds(srv_off, mats, repeats))
+            gc.enable()
+            gc.collect()
+            gc.disable()
+            t_on = min(t_on, _pass_seconds(srv_on, mats, repeats))
+            gc.enable()
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+        else:
+            gc.disable()
+    return t_off, t_on
+
+
+def _guard_overhead(tier: str) -> dict:
+    mats = _mats(tier)
+    repeats = 4 if tier == "quick" else 6
+    # two servers over the SAME planner state shape: one with every
+    # guard off (the raw pre-resilience path), one with the defaults on
+    srv_off = SpGEMMServer(
+        planner=Planner(cache=PlanCache(),
+                        resilience=ResiliencePolicy.disabled()),
+        tenant="bench-res-off")
+    srv_on = SpGEMMServer(
+        planner=Planner(cache=PlanCache(),
+                        resilience=ResiliencePolicy()),
+        tenant="bench-res-on")
+    _pass_seconds(srv_off, mats, 1)     # warm: plans, packings, compiles
+    _pass_seconds(srv_on, mats, 1)
+
+    overhead = float("inf")
+    t_off = t_on = 0.0
+    for attempt in range(_ATTEMPTS):
+        t_off, t_on = _measure_once(srv_off, srv_on, mats, repeats)
+        overhead = max(0.0, t_on / t_off - 1.0)
+        if overhead <= OVERHEAD_GATE:
+            break
+        print(f"# bench_resilience: attempt {attempt + 1}: overhead "
+              f"{overhead:.4f} > {OVERHEAD_GATE} — re-measuring")
+
+    n_req = repeats * len(mats)
+    print(f"# bench_resilience: {n_req} requests/pass, best-of-{_REPS}: "
+          f"off {t_off * 1e3:.2f} ms, on {t_on * 1e3:.2f} ms, "
+          f"guard overhead {overhead:.4f} (gate {OVERHEAD_GATE})")
+    if overhead > OVERHEAD_GATE:
+        raise RuntimeError(
+            f"guard overhead {overhead:.4f} exceeds the "
+            f"{OVERHEAD_GATE} gate after {_ATTEMPTS} attempts")
+    return {"guard_overhead_frac": overhead,
+            "t_off_s": t_off, "t_on_s": t_on,
+            "requests_per_pass": n_req}
+
+
+def _chaos_recovery(tier: str) -> dict:
+    """Faults at every site, every seed: submit must stay bit-identical
+    to the rowwise oracle. Returns the fault/fallback accounting."""
+    import tempfile
+    mats = _mats(tier, integer=True)
+    checked = 0
+    fired = 0
+    fallbacks = 0
+    for seed in _CHAOS_SEEDS:
+        cache = PlanCache(path=tempfile.mkdtemp(prefix="bench-res-"),
+                          max_bytes=1 << 24)
+        planner = Planner(cache=cache)
+        srv = SpGEMMServer(planner=planner, default_reuse_hint=20)
+        oracles = {}
+
+        def _reseed():
+            """Fresh policy + re-pinned pallas plans: each site starts
+            from a healthy quarantine-free steady state."""
+            reset_policy()
+            for m in mats:
+                cache.put(Plan(fingerprint=fingerprint(m),
+                               reorder="original", scheme="pallas",
+                               reuse_hint=20))
+
+        _reseed()
+        for a in mats:
+            d = a.to_dense()
+            oracles[id(a)] = (d @ d).astype(np.float32)
+            warm = srv.submit(a)
+            np.testing.assert_array_equal(np.asarray(warm.result),
+                                          oracles[id(a)])
+        for site in faults.SITES:
+            _reseed()
+            if site == "cache_load":
+                cache.clear_memory()    # force the disk round-trip
+            elif site == "pack":
+                planner._exec_cache.clear()
+            for a in mats:
+                with injected(FaultPlan(seed=seed, sites=(site,))) as fp:
+                    resp = srv.submit(a)
+                np.testing.assert_array_equal(np.asarray(resp.result),
+                                              oracles[id(a)])
+                checked += 1
+                fired += fp.total_fires()
+            fallbacks += get_policy().fallbacks
+        reset_policy()
+    print(f"# bench_resilience: chaos recovery — {checked} faulted "
+          f"requests over seeds {_CHAOS_SEEDS}, {fired} faults fired, "
+          f"{fallbacks} ladder fallbacks, all bit-identical to oracle")
+    return {"chaos_requests": checked, "faults_fired": fired,
+            "ladder_fallbacks": fallbacks,
+            "chaos_seeds": list(_CHAOS_SEEDS)}
+
+
+def run(tier: str = "quick") -> dict:
+    prev = get_policy()
+    try:
+        guard = _guard_overhead(tier)
+        chaos = _chaos_recovery(tier)
+    finally:
+        set_policy(prev)
+        faults.disarm()
+    return {"summary": {**guard, **chaos}}
+
+
+if __name__ == "__main__":
+    run("quick")

@@ -23,8 +23,8 @@ from repro import benchlib
 from benchmarks import (bench_clusterwise, bench_kernels, bench_memory,
                         bench_obs, bench_overhead, bench_planner,
                         bench_preprocess, bench_reorder_rowwise,
-                        bench_tallskinny, bench_traffic, roofline_report,
-                        trajectory)
+                        bench_resilience, bench_tallskinny, bench_traffic,
+                        roofline_report, trajectory)
 
 TABLES = {
     "fig2": ("Fig.2/Table2 row-wise reorder", bench_reorder_rowwise.run),
@@ -39,6 +39,8 @@ TABLES = {
                    bench_preprocess.run),
     "planner": ("ISSUE-2 planner vs best/worst-static", bench_planner.run),
     "obs": ("Tracing/metrics overhead + stage breakdown", bench_obs.run),
+    "resilience": ("Resilience guard overhead + chaos recovery",
+                   bench_resilience.run),
     "roofline": ("TPU roofline (from dry-run)", roofline_report.run),
 }
 

@@ -86,6 +86,9 @@ _GATED = [
 # a relative gate while eating the whole budget.
 _ABS_GATED = [
     ("obs", ("tracing_overhead_frac",), 0.03),
+    # resilience tier (ISSUE 8): the validation/finiteness/breaker guards
+    # on the steady serving path carry a hard ≤2% budget
+    ("resilience", ("guard_overhead_frac",), 0.02),
 ]
 
 
@@ -196,6 +199,14 @@ def _sum_obs(res: dict) -> dict:
     return {k: float(s[k]) for k in keys if k in s}
 
 
+def _sum_resilience(res: dict) -> dict:
+    s = res.get("summary", {})
+    keys = ("guard_overhead_frac", "t_off_s", "t_on_s",
+            "requests_per_pass", "chaos_requests", "faults_fired",
+            "ladder_fallbacks")
+    return {k: float(s[k]) for k in keys if k in s}
+
+
 _SUMMARIZERS = {
     "fig2": _sum_fig2,
     "fig3": _sum_fig3,
@@ -207,6 +218,7 @@ _SUMMARIZERS = {
     "preprocess": _sum_preprocess,
     "kernels": _sum_kernels,
     "obs": _sum_obs,
+    "resilience": _sum_resilience,
 }
 
 

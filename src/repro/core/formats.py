@@ -78,7 +78,10 @@ class HostCSR:
     required (but tolerated).
     """
 
-    __slots__ = ("indptr", "indices", "data", "shape")
+    # __weakref__ so the serving boundary's validation memo (a
+    # WeakValueDictionary on ResiliencePolicy) can hold operands without
+    # pinning them
+    __slots__ = ("indptr", "indices", "data", "shape", "__weakref__")
 
     def __init__(self, indptr, indices, data, shape):
         self.indptr = np.asarray(indptr, dtype=np.int64)
@@ -154,6 +157,16 @@ class HostCSR:
     def row(self, i: int) -> tuple[np.ndarray, np.ndarray]:
         s, e = self.indptr[i], self.indptr[i + 1]
         return self.indices[s:e], self.data[s:e]
+
+    def validate(self, name: str = "operand") -> "HostCSR":
+        """Check every structural invariant (monotone ``indptr``, in-range
+        sorted ``indices``, finite ``data``, consistent lengths); raises
+        :class:`repro.resilience.errors.InvalidOperandError` naming the
+        violated invariant. Returns ``self`` for chaining."""
+        # lazy import: resilience sits above core in the layer order
+        from repro.resilience.validation import validate_host_csr
+        validate_host_csr(self, name=name)
+        return self
 
     # -- transforms ----------------------------------------------------------
 

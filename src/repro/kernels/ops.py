@@ -32,6 +32,7 @@ from repro.kernels.cluster_spgemm import (cluster_spgemm_pairs,
 from repro.kernels.cluster_spmm import cluster_spmm, cluster_spmm_compact
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_chunk import ssd_chunk_scan
+from repro.resilience import faults as _faults
 
 __all__ = ["on_tpu", "pallas_shard_count", "bcc_spmm",
            "bcc_compact_stream", "bcc_compact_stream_reference",
@@ -371,6 +372,7 @@ def bcc_spgemm_sparse_c(a: BCC, b: TiledCSR, *,
     (:func:`build_sparse_c_pairs` — cached per operand pair by the
     planner's chain workload).
     """
+    _faults.maybe_fault("kernel_launch")
     if interpret is None:
         interpret = not on_tpu()
     if a.block_k != b.block_k:
@@ -460,6 +462,7 @@ def bcc_spgemm_tiled(a: BCC, b: TiledCSR, *,
         that want the compacted format itself call
         :func:`bcc_spgemm_sparse_c` directly.
     """
+    _faults.maybe_fault("kernel_launch")
     if interpret is None:
         interpret = not on_tpu()
     if a.block_k != b.block_k:

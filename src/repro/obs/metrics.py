@@ -86,6 +86,24 @@ _HOST_METRICS: dict[str, tuple[str, str]] = {
     "audit_flagged": (
         "gauge", "fingerprints currently beyond the drift threshold "
         "(count)"),
+    "serve_rejects": (
+        "counter", "requests rejected by boundary validation, by reason "
+        "(count)"),
+    "serve_fallbacks": (
+        "counter", "executions recovered by a degradation-ladder rung, "
+        "by failing scheme (count)"),
+    "quarantine": (
+        "gauge", "(fingerprint, scheme, variant) triples currently "
+        "quarantined by the circuit breaker (count)"),
+    "plan_cache_corrupt": (
+        "counter", "damaged plan-cache disk entries evicted "
+        "(miss-plus-evict), by reason (count)"),
+    "probe_skips": (
+        "counter", "measured-mode probe candidates skipped by the "
+        "wall-clock cap (count)"),
+    "faults_injected": (
+        "counter", "chaos-harness faults fired, by site — always 0 in "
+        "production (count)"),
 }
 
 METRIC_CATALOG: dict[str, tuple[str, str]] = dict(_HOST_METRICS)

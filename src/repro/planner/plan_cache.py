@@ -27,6 +27,17 @@ multi-tenant serving fix for the previously unbounded on-disk growth).
 Everything is a plain file per key — no index to corrupt, safe to delete
 at any time.
 
+**Crash safety** (ISSUE 8): every entry embeds a blake2b checksum of its
+payload; writes go through a unique temp file + ``os.replace`` (fsync'd,
+so a crash mid-write can never leave a truncated ``.npz`` under the live
+name); and a corrupt, truncated, checksum-mismatched or
+version-mismatched disk entry is treated as **miss-plus-evict** — the
+damaged file is deleted, the ``plan_cache_corrupt`` metric incremented,
+and planning proceeds as a normal miss — never as an unpickling
+exception on the serving path. ``_scan_disk`` applies the same
+discipline at construction: stale ``*.tmp`` files and unreadable entries
+are removed before they can be served.
+
 **Namespaces** (per-tenant isolation): ``PlanCache(namespace="tenant-a")``
 prefixes every key (and on-disk filename, ``ns-<namespace>_…``) and scopes
 the LRU byte budget to that namespace — the disk scan only accounts, and
@@ -38,19 +49,24 @@ owns the un-prefixed files and likewise never touches namespaced ones.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import io
 import json
 import math
 import os
+import tempfile
 from collections import OrderedDict
 
 import numpy as np
 
+from repro.resilience import faults as _faults
+from repro.resilience.errors import CorruptPlanError
+
 __all__ = ["Plan", "PlanCache", "PLAN_CACHE_VERSION", "reuse_bucket",
            "DEFAULT_CACHE_DIR", "DEFAULT_MAX_BYTES"]
 
-# v2: workload-keyed entries + the pallas scheme
-PLAN_CACHE_VERSION = "plan-v2"
+# v3: checksummed crash-safe entries (v2: workload keys + pallas scheme)
+PLAN_CACHE_VERSION = "plan-v3"
 
 DEFAULT_CACHE_DIR = os.path.join(
     os.path.dirname(__file__), "..", "..", "..", "experiments", "plan_cache")
@@ -106,6 +122,19 @@ class Plan:
 
     # -- (de)serialization ---------------------------------------------------
 
+    @staticmethod
+    def _payload_digest(meta_bytes: bytes, perm, boundaries) -> str:
+        """blake2b over everything that round-trips: a flipped bit or a
+        truncated array anywhere in the entry changes this digest."""
+        d = hashlib.blake2b(digest_size=16)
+        d.update(meta_bytes)
+        for tag, arr in ((b"perm", perm), (b"boundaries", boundaries)):
+            if arr is not None:
+                d.update(tag)
+                d.update(np.ascontiguousarray(arr,
+                                              dtype=np.int64).tobytes())
+        return d.hexdigest()
+
     def to_npz_bytes(self) -> bytes:
         meta = {
             "fingerprint": self.fingerprint, "reorder": self.reorder,
@@ -114,26 +143,49 @@ class Plan:
             "preprocess_s": self.preprocess_s, "predicted": self.predicted,
             "measured": self.measured, "version": self.version,
         }
-        arrays = {"meta": np.frombuffer(
-            json.dumps(meta).encode(), dtype=np.uint8)}
+        meta_bytes = json.dumps(meta).encode()
+        arrays = {"meta": np.frombuffer(meta_bytes, dtype=np.uint8)}
         if self.perm is not None:
             arrays["perm"] = np.asarray(self.perm, dtype=np.int64)
         if self.boundaries is not None:
             arrays["boundaries"] = np.asarray(self.boundaries, dtype=np.int64)
+        digest = self._payload_digest(meta_bytes, arrays.get("perm"),
+                                      arrays.get("boundaries"))
+        arrays["checksum"] = np.frombuffer(digest.encode(), dtype=np.uint8)
         buf = io.BytesIO()
         np.savez(buf, **arrays)
         return buf.getvalue()
 
     @classmethod
-    def from_npz_bytes(cls, raw: bytes) -> "Plan":
-        with np.load(io.BytesIO(raw)) as z:
-            meta = json.loads(bytes(z["meta"].tobytes()).decode())
-            perm = z["perm"] if "perm" in z.files else None
-            bounds = z["boundaries"] if "boundaries" in z.files else None
-            if perm is not None:
-                perm = np.array(perm)
-            if bounds is not None:
-                bounds = np.array(bounds)
+    def from_npz_bytes(cls, raw: bytes, path: str = "<bytes>") -> "Plan":
+        """Deserialize one entry; any damage — an unreadable archive, a
+        missing member, a checksum mismatch — raises
+        :class:`~repro.resilience.errors.CorruptPlanError` (which the
+        cache turns into miss-plus-evict, never an exception to the
+        serving path)."""
+        try:
+            with np.load(io.BytesIO(raw)) as z:
+                if "meta" not in z.files:
+                    raise CorruptPlanError(path, "missing meta member")
+                meta_bytes = bytes(z["meta"].tobytes())
+                meta = json.loads(meta_bytes.decode())
+                perm = np.array(z["perm"]) if "perm" in z.files else None
+                bounds = (np.array(z["boundaries"])
+                          if "boundaries" in z.files else None)
+                stored = (bytes(z["checksum"].tobytes()).decode()
+                          if "checksum" in z.files else None)
+        except CorruptPlanError:
+            raise
+        except Exception as e:   # BadZipFile / ValueError / json / key
+            raise CorruptPlanError(
+                path, f"unreadable archive ({type(e).__name__}: {e})")
+        if stored is None:
+            raise CorruptPlanError(path, "missing checksum member")
+        expect = cls._payload_digest(meta_bytes, perm, bounds)
+        if stored != expect:
+            raise CorruptPlanError(
+                path, f"checksum mismatch (stored {stored[:8]}…, "
+                f"payload {expect[:8]}…)")
         return cls(fingerprint=meta["fingerprint"], reorder=meta["reorder"],
                    scheme=meta["scheme"], reuse_hint=meta["reuse_hint"],
                    max_cluster=meta["max_cluster"],
@@ -174,8 +226,28 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.corrupt_evictions = 0    # damaged disk entries deleted
         self._scan_disk()
         self._enforce_budget()
+
+    @staticmethod
+    def _note_corrupt(reason: str) -> None:
+        # lazy import: metrics pulls in heavier modules; the cache must
+        # stay importable early in the stack
+        from repro.obs import metrics as obs_metrics
+        obs_metrics.get_registry().counter("plan_cache_corrupt",
+                                           reason=reason).inc()
+
+    def _evict_corrupt(self, path: str, reason: str) -> None:
+        """Miss-plus-evict: delete a damaged disk entry and account it.
+        The serving path never sees the damage — just a cache miss."""
+        self.corrupt_evictions += 1
+        self._inherited.pop(path, None)
+        try:
+            os.remove(path)
+        except OSError:
+            pass
+        self._note_corrupt(reason)
 
     def _scan_disk(self) -> None:
         """Account the pre-existing on-disk tier: a restarted process
@@ -188,20 +260,32 @@ class PlanCache:
             return
         files = []
         prefix = f"ns-{self.namespace}_" if self.namespace else None
-        for name in os.listdir(self.path):
-            if not name.endswith(".npz"):
-                continue
+
+        def _mine(name: str) -> bool:
             # budget isolation: only this namespace's files are accounted
-            # (and thus evictable) by this cache instance
+            # (and thus evictable/cleanable) by this cache instance
             if prefix is not None:
-                if not name.startswith(prefix):
-                    continue
-            elif name.startswith("ns-"):
-                continue
+                return name.startswith(prefix)
+            return not name.startswith("ns-")
+
+        for name in os.listdir(self.path):
             p = os.path.join(self.path, name)
+            if name.endswith(".tmp"):
+                # crash debris from an interrupted atomic write
+                if _mine(name):
+                    self._evict_corrupt(p, "stale_tmp")
+                continue
+            if not name.endswith(".npz") or not _mine(name):
+                continue
             try:
                 st = os.stat(p)
+                with open(p, "rb") as fh:
+                    magic = fh.read(4)
             except OSError:
+                self._evict_corrupt(p, "unreadable")
+                continue
+            if magic != b"PK\x03\x04":       # not a zip/npz at all
+                self._evict_corrupt(p, "not_npz")
                 continue
             files.append((st.st_mtime, st.st_size, p))
         for _, size, p in sorted(files):
@@ -230,15 +314,28 @@ class PlanCache:
         if plan is None:
             f = self._file(key)
             if f is not None and os.path.exists(f):
-                with open(f, "rb") as fh:
-                    plan = Plan.from_npz_bytes(fh.read())
-                if plan.version != PLAN_CACHE_VERSION:   # stale generation
+                try:
+                    with open(f, "rb") as fh:
+                        raw = fh.read()
+                    raw = _faults.corrupt_bytes("cache_load", raw)
+                    plan = Plan.from_npz_bytes(raw, path=f)
+                except (CorruptPlanError, OSError) as e:
+                    # miss-plus-evict: damage never reaches the caller
+                    self._evict_corrupt(
+                        f, e.reason if isinstance(e, CorruptPlanError)
+                        else "io_error")
                     plan = None
                 else:
-                    # now accounted as a live memory entry, not an
-                    # inherited file (no double counting)
-                    self._inherited.pop(f, None)
-                    self._insert(key, plan)
+                    if plan.version != PLAN_CACHE_VERSION:
+                        # stale generation: evict so it stops costing a
+                        # parse on every miss
+                        self._evict_corrupt(f, "version_mismatch")
+                        plan = None
+                    else:
+                        # now accounted as a live memory entry, not an
+                        # inherited file (no double counting)
+                        self._inherited.pop(f, None)
+                        self._insert(key, plan)
         if plan is None:
             self.misses += 1
             return None
@@ -252,10 +349,26 @@ class PlanCache:
         f = self._file(key)
         if f is not None:
             os.makedirs(self.path, exist_ok=True)
-            tmp = f + ".tmp"
-            with open(tmp, "wb") as fh:
-                fh.write(plan.to_npz_bytes())
-            os.replace(tmp, f)
+            # atomic publish: unique temp file in the same directory,
+            # fsync'd, then os.replace — a crash at any point leaves
+            # either the old entry or the new one under the live name,
+            # never a truncated archive (the .tmp debris is swept by the
+            # next _scan_disk)
+            fd, tmp = tempfile.mkstemp(
+                prefix=os.path.basename(f) + ".", suffix=".tmp",
+                dir=self.path)
+            try:
+                with os.fdopen(fd, "wb") as fh:
+                    fh.write(plan.to_npz_bytes())
+                    fh.flush()
+                    os.fsync(fh.fileno())
+                os.replace(tmp, f)
+            except BaseException:
+                try:
+                    os.remove(tmp)
+                except OSError:
+                    pass
+                raise
             self._inherited.pop(f, None)    # overwritten: counted via _mem
         self._insert(key, dataclasses.replace(plan, from_cache=False))
 
@@ -300,4 +413,6 @@ class PlanCache:
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "entries": len(self._mem), "bytes": self.total_bytes,
-                "evictions": self.evictions, "namespace": self.namespace}
+                "evictions": self.evictions,
+                "corrupt_evictions": self.corrupt_evictions,
+                "namespace": self.namespace}

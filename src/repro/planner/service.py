@@ -60,6 +60,11 @@ from repro.planner.cost_model import (Candidate, CostModel,
 from repro.planner.features import extract_features, fingerprint
 from repro.planner.plan_cache import (DEFAULT_CACHE_DIR, DEFAULT_MAX_BYTES,
                                       Plan, PlanCache)
+from repro.resilience import faults as _faults
+from repro.resilience.errors import (LadderExhaustedError,
+                                     NonFiniteOutputError, ProbeTimeoutError)
+from repro.resilience.policy import (ResiliencePolicy, fallback_chain,
+                                     get_policy)
 
 __all__ = ["Planner", "plan_spgemm", "execute", "execute_chain",
            "default_planner", "reset_default_planner"]
@@ -172,6 +177,15 @@ class Planner:
       auditor: drift auditor executed plans are recorded into (predicted
         score vs measured wall time — see :mod:`repro.obs.audit`).
         Defaults to the process-global auditor.
+      resilience: the :class:`~repro.resilience.policy.ResiliencePolicy`
+        arming the degradation ladder, output finiteness guard and
+        circuit-breaker quarantine around :meth:`execute` / :meth:`plan`.
+        ``None`` (default) resolves the process-global policy at use
+        time; pass ``ResiliencePolicy.disabled()`` for the raw path.
+      probe_timeout_s: hard per-candidate wall-clock cap on measured-mode
+        probes — a candidate that exceeds it is skipped (scored
+        heuristically) instead of wedging the request. ``None`` disables
+        the cap.
     """
 
     def __init__(self, cache: Optional[PlanCache] = None,
@@ -183,7 +197,9 @@ class Planner:
                  candidates: Sequence[Candidate] = DEFAULT_CANDIDATES,
                  calibration=None,
                  pallas_b_dtype=None,
-                 auditor: Optional[obs_audit.DriftAuditor] = None):
+                 auditor: Optional[obs_audit.DriftAuditor] = None,
+                 resilience: Optional[ResiliencePolicy] = None,
+                 probe_timeout_s: Optional[float] = 30.0):
         self.cache = cache if cache is not None else PlanCache()
         self.auditor = (auditor if auditor is not None
                         else obs_audit.get_auditor())
@@ -195,6 +211,9 @@ class Planner:
         self.measure_top = measure_top
         self.measure_budget = measure_budget
         self.candidates = tuple(candidates)
+        self._resilience = resilience
+        self.probe_timeout_s = probe_timeout_s
+        self.probe_skips = 0
         # (fingerprint, candidate.key) -> materialization artifacts, so a
         # measured candidate's preprocessing is never run twice
         self._artifacts: dict[tuple[str, str], tuple] = {}
@@ -204,6 +223,13 @@ class Planner:
         # (plan key, value digest) -> packed device operands for execute()
         self._exec_cache: dict[str, tuple] = {}
         self._exec_cache_cap = 64
+
+    @property
+    def resilience(self) -> ResiliencePolicy:
+        """The effective policy: the injected one, else the process-global
+        (resolved per use so tests swapping the global take effect)."""
+        return (self._resilience if self._resilience is not None
+                else get_policy())
 
     # -- planning ------------------------------------------------------------
 
@@ -239,6 +265,9 @@ class Planner:
         cs = self.cache.stats
         for key in ("hits", "misses", "evictions", "entries", "bytes"):
             reg.gauge(f"plan_cache_{key}").set(cs[key])
+        policy = self.resilience
+        if policy.ladder:
+            reg.gauge("quarantine").set(len(policy.breaker.open_keys()))
         return plan
 
     def _plan_impl(self, a: HostCSR, reuse_hint: int, *,
@@ -254,17 +283,30 @@ class Planner:
         # baseline timed on SpMM must only normalize SpMM probes
         fp_w = fp if workload == "a2" else f"{fp}|{workload}"
         cands = tuple(candidates) if candidates is not None else self.candidates
+        policy = self.resilience
         if use_cache:
             hit = self.cache.get(fp, reuse_hint, workload)
             if hit is not None:
+                # a quarantined triple's cached plan is bypassed — NOT
+                # evicted: when the breaker heals, the plan serves again
+                # instantly. Until then we re-plan around it (and skip
+                # the put below, preserving the cached entry).
+                if not policy.allows(fp, hit.scheme, hit.reorder):
+                    use_cache = False
                 # a per-call candidate restriction must hold on hits too:
                 # a cached plan outside the caller's set is replanned
                 # fresh (without evicting the general cached plan)
-                if candidates is None or any(
+                elif candidates is None or any(
                         c.reorder == hit.reorder and c.scheme == hit.scheme
                         for c in cands) or hit.is_identity:
                     return hit
-                use_cache = False
+                else:
+                    use_cache = False
+        if policy.ladder and policy.breaker.open_keys():
+            # re-plan around quarantined (fingerprint, scheme, variant)
+            # triples; identity stays the implicit fallback either way
+            cands = tuple(c for c in cands
+                          if policy.allows(fp, c.scheme, c.reorder))
         feats = extract_features(a)
         ranked = self.cost_model.rank(feats, reuse_hint, cands, fp_w,
                                       workload)
@@ -273,22 +315,30 @@ class Planner:
                                    workload=workload):
                 # the identity baseline normalizes every other measurement
                 # — probe it even when the caller's candidate set omits it
-                if self.cost_model.measurement(fp_w, IDENTITY) is None:
-                    m = self._call_measurer(a, IDENTITY, workload)
-                    self.cost_model.observe(fp_w, IDENTITY,
-                                            m.kernel_s, m.preprocess_s)
-                for sc in self._shortlist(ranked):
+                probes = [IDENTITY] + [sc.candidate
+                                       for sc in self._shortlist(ranked)
+                                       if sc.candidate.key != IDENTITY.key]
+                for cand_p in probes:
                     if self.cost_model.measurement(fp_w,
-                                                   sc.candidate) is None:
-                        m = self._call_measurer(a, sc.candidate, workload)
-                        self.cost_model.observe(fp_w, sc.candidate,
-                                                m.kernel_s, m.preprocess_s)
+                                                   cand_p) is not None:
+                        continue
+                    try:
+                        m = self._call_measurer(a, cand_p, workload)
+                    except ProbeTimeoutError:
+                        # skip-and-score-heuristically: a pathological
+                        # candidate must not wedge the request
+                        self._note_probe_skip()
+                        continue
+                    self.cost_model.observe(fp_w, cand_p,
+                                            m.kernel_s, m.preprocess_s)
             ranked = self.cost_model.rank(feats, reuse_hint, cands, fp_w,
                                           workload)
             # evidence only: an unmeasured candidate's optimistic heuristic
             # must not outrank the measured shortlist (identity is always
-            # measured, so this pool is never empty)
-            pool = [s for s in ranked if s.measured]
+            # probed, so the pool is only empty when even the identity
+            # probe hit the wall-clock cap — then the heuristic ranking
+            # is all the evidence there is)
+            pool = [s for s in ranked if s.measured] or ranked
         else:
             pool = ranked
         chosen = next((s for s in pool if s.amortizes),
@@ -375,7 +425,22 @@ class Planner:
         Probes of one planning pass share materialized reorders (see
         ``_materialize``): the second scheme probed under the same reorder
         pays only its clustering increment.
+
+        ``probe_timeout_s`` is a hard per-candidate wall-clock cap
+        (materialize + compile/warm + timed reps): past the deadline with
+        no timed rep yet, :class:`ProbeTimeoutError` tells the planning
+        loop to skip the candidate; with at least one rep banked the
+        measurement is simply cut short and returned.
         """
+        t_start = time.perf_counter()
+        cap = self.probe_timeout_s
+
+        def _over() -> float | None:
+            if cap is None:
+                return None
+            el = time.perf_counter() - t_start
+            return el if el > cap else None
+
         fp = fingerprint(a)
         fp_w = fp if workload == "a2" else f"{fp}|{workload}"
         rcache = self._reorders.setdefault(fp, {})
@@ -383,6 +448,9 @@ class Planner:
             a, cand, reorder_cache=rcache)
         self._artifacts[(fp_w, cand.key)] = (perm, boundaries, max_cluster,
                                              t_pre)
+        el = _over()
+        if el is not None:
+            raise ProbeTimeoutError(cand.key, el, cap)
         plan = Plan(fingerprint=fp, reorder=cand.reorder, scheme=cand.scheme,
                     reuse_hint=1, max_cluster=max_cluster, perm=perm,
                     boundaries=boundaries, workload=workload)
@@ -397,11 +465,16 @@ class Planner:
                 dtype=np.float32)
         runner = self._build_runner(plan, a, probe_b)
         runner()                                        # compile + warm
+        el = _over()
+        if el is not None:
+            raise ProbeTimeoutError(cand.key, el, cap)
         best = float("inf")
         for _ in range(reps):
             t0 = time.perf_counter()
             np.asarray(runner())
             best = min(best, time.perf_counter() - t0)
+            if _over() is not None:
+                break                    # one rep banked: cut short, keep it
         return Measurement(kernel_s=best, preprocess_s=t_pre)
 
     # -- execution -----------------------------------------------------------
@@ -418,7 +491,117 @@ class Planner:
         Every execution is device-synced (``jax.block_until_ready``) and
         its wall time fed to the drift auditor next to the plan's
         predicted score.
+
+        With the resilience policy's ladder armed (the default), a
+        failing execution — a raising kernel/pack path or a non-finite
+        output — **degrades instead of erroring**: the request re-runs
+        down the fallback ladder (pallas → fixed XLA clusterwise →
+        rowwise identity, all on ``reorder="original"``), the incident is
+        recorded, and the failing (fingerprint, scheme, variant) triple
+        is quarantined by the circuit breaker so the *next* request
+        re-plans around it. Only when every rung fails does
+        :class:`~repro.resilience.errors.LadderExhaustedError` escape.
         """
+        policy = self.resilience
+        if not policy.ladder:
+            return self._execute_impl(plan, a, b)
+        key = policy.triple(plan.fingerprint, plan.scheme, plan.reorder)
+        try:
+            out = self._guarded_execute(plan, a, b)
+        except Exception as e:           # noqa: BLE001 — ladder catches all
+            primary = e                  # outlives the except block
+            policy.breaker.record_failure(key)
+        else:
+            policy.breaker.record_success(key)
+            return out
+        return self._run_ladder(plan, a, b, primary)
+
+    def _run_ladder(self, plan: Plan, a: HostCSR,
+                    b: HostCSR | np.ndarray | None,
+                    primary: Exception) -> np.ndarray:
+        """Walk the fallback rungs below ``plan.scheme`` after ``primary``
+        failed; records the incident and the ``serve_fallbacks`` metric
+        on the rung that recovers the request."""
+        policy = self.resilience
+        tracer = get_tracer()
+        site = self._classify_failure(primary)
+        causes: list[tuple[str, Exception]] = [(plan.scheme, primary)]
+        for rung in fallback_chain(plan.scheme):
+            fb = self._fallback_plan(plan, rung, a)
+            with tracer.span("fallback", fingerprint=plan.fingerprint,
+                             from_scheme=plan.scheme, to_scheme=rung,
+                             site=site) as sp:
+                try:
+                    if rung == "rowwise":
+                        # the identity rung is the guaranteed-safe floor:
+                        # in production nothing is armed; under the chaos
+                        # harness it runs fault-suppressed
+                        with _faults.suppressed():
+                            out = self._guarded_execute(fb, a, b)
+                    else:
+                        out = self._guarded_execute(fb, a, b)
+                except Exception as e:   # noqa: BLE001 — ladder walks on
+                    causes.append((rung, e))
+                    sp.set(recovered=False)
+                    continue
+                sp.set(recovered=True)
+            policy.record_incident(
+                fingerprint=plan.fingerprint, workload=plan.workload,
+                scheme=plan.scheme, reorder=plan.reorder, site=site,
+                error=primary, fallback=rung)
+            obs_metrics.get_registry().counter(
+                "serve_fallbacks", scheme=plan.scheme).inc()
+            return out
+        policy.record_incident(
+            fingerprint=plan.fingerprint, workload=plan.workload,
+            scheme=plan.scheme, reorder=plan.reorder, site=site,
+            error=primary, fallback="")
+        raise LadderExhaustedError(plan.scheme, causes) from primary
+
+    def _guarded_execute(self, plan: Plan, a: HostCSR,
+                         b: HostCSR | np.ndarray | None) -> np.ndarray:
+        """One execution under the output guard: the chaos harness's
+        ``output`` site corrupts here, and non-finite results raise (a
+        single ``np.sum`` reduction propagates any NaN/Inf)."""
+        out = self._execute_impl(plan, a, b)
+        out = _faults.corrupt_output("output", out)
+        # np.asarray first: on a device array, np.sum would dispatch a
+        # traced jax reduction that silently truncates the requested
+        # float64 accumulator to f32 — the host-side f64 sum is both the
+        # intended overflow-safe accumulation and cheaper
+        if not np.isfinite(np.sum(np.asarray(out), dtype=np.float64)):
+            raise NonFiniteOutputError(plan.scheme)
+        return out
+
+    @staticmethod
+    def _classify_failure(e: Exception) -> str:
+        if isinstance(e, NonFiniteOutputError):
+            return "nonfinite"
+        site = getattr(e, "site", None)     # FaultInjectedError carries it
+        return site if isinstance(site, str) else "exception"
+
+    def _fallback_plan(self, plan: Plan, rung: str, a: HostCSR) -> Plan:
+        """A rung's plan: same fingerprint/workload, ``reorder="original"``
+        (a failing request must not pay a reorder on its recovery path).
+        The fixed rung's boundaries are an O(nrows) recompute; its packed
+        operands exec-cache like any plan's, so repeated fallbacks on one
+        operand pay host packing once."""
+        if rung == "rowwise":
+            return Plan(fingerprint=plan.fingerprint, reorder="original",
+                        scheme="rowwise", reuse_hint=plan.reuse_hint,
+                        max_cluster=plan.max_cluster,
+                        workload=plan.workload)
+        perm, boundaries, max_cluster, t_pre = _materialize(
+            a, Candidate("original", rung), max_cluster=plan.max_cluster)
+        return Plan(fingerprint=plan.fingerprint, reorder="original",
+                    scheme=rung, reuse_hint=plan.reuse_hint,
+                    max_cluster=max_cluster, workload=plan.workload,
+                    perm=perm, boundaries=boundaries, preprocess_s=t_pre)
+
+    def _execute_impl(self, plan: Plan, a: HostCSR,
+                      b: HostCSR | np.ndarray | None = None) -> np.ndarray:
+        """:meth:`execute` minus the resilience ladder (the raw path the
+        overhead benchmark baselines against)."""
         tracer = get_tracer()
         with tracer.span("execute", fingerprint=plan.fingerprint,
                          scheme=plan.scheme, reorder=plan.reorder,
@@ -488,9 +671,29 @@ class Planner:
 
     def _chain_hop(self, plan: Plan, cur: HostCSR,
                    b: Optional[HostCSR]) -> HostCSR:
-        """One hop ``cur · (b if b is not None else cur)`` → HostCSR."""
+        """One hop ``cur · (b if b is not None else cur)`` → HostCSR.
+
+        With the ladder armed, a failing sparse-C route degrades to the
+        dense :meth:`execute` path (itself ladder-guarded), recording
+        the incident and quarantining the triple like any execution
+        failure — a chain request survives a pallas hop failure."""
+        policy = self.resilience
         if plan.scheme == "pallas":
-            host = self._chain_hop_sparse(plan, cur, b)
+            try:
+                host = self._chain_hop_sparse(plan, cur, b)
+            except Exception as e:       # noqa: BLE001 — ladder catches all
+                if not policy.ladder:
+                    raise
+                policy.breaker.record_failure(policy.triple(
+                    plan.fingerprint, plan.scheme, plan.reorder))
+                policy.record_incident(
+                    fingerprint=plan.fingerprint, workload=plan.workload,
+                    scheme=plan.scheme, reorder=plan.reorder,
+                    site=self._classify_failure(e), error=e,
+                    fallback="dense_route")
+                obs_metrics.get_registry().counter(
+                    "serve_fallbacks", scheme=plan.scheme).inc()
+                host = None
             if host is not None:
                 return host
         dense = self.execute(plan, cur, b)
@@ -516,6 +719,7 @@ class Planner:
         if cached is None:
             with tracer.span("pack", fingerprint=plan.fingerprint,
                              scheme=plan.scheme, kind="sparse_c"):
+                _faults.maybe_fault("pack")
                 ap = _apply_plan_perm(cur, plan, symmetric=b is None)
                 bh = ap if b is None else b
                 bk = select_block_k(bh)
@@ -576,6 +780,7 @@ class Planner:
             if cached is None:
                 with get_tracer().span("pack", fingerprint=plan.fingerprint,
                                        scheme=plan.scheme, kind="dense_b"):
+                    _faults.maybe_fault("pack")
                     ap = _apply_plan_perm(a, plan, symmetric=False)
                     if plan.scheme == "rowwise":
                         dev = csr_from_host(ap)
@@ -609,6 +814,7 @@ class Planner:
             with get_tracer().span("pack", fingerprint=plan.fingerprint,
                                    scheme=plan.scheme,
                                    kind="sq" if squared else "ab"):
+                _faults.maybe_fault("pack")
                 if squared:
                     ap = _apply_plan_perm(a, plan, symmetric=True)
                     bh = ap
@@ -699,6 +905,11 @@ class Planner:
         reg.counter("exec_cache_packs").inc()
         reg.gauge("exec_cache_entries").set(len(self._exec_cache))
 
+    def _note_probe_skip(self) -> None:
+        """Account one wall-clock-capped probe skip."""
+        self.probe_skips += 1
+        obs_metrics.get_registry().counter("probe_skips").inc()
+
     @staticmethod
     def _bounds(plan: Plan, ap: HostCSR) -> list[int]:
         if plan.boundaries is None:
@@ -727,7 +938,9 @@ class Planner:
 
     @property
     def stats(self) -> dict:
-        return {**self.cache.stats, "exec_entries": len(self._exec_cache)}
+        return {**self.cache.stats, "exec_entries": len(self._exec_cache),
+                "probe_skips": self.probe_skips,
+                "resilience": self.resilience.stats}
 
 
 # ---------------------------------------------------------------------------

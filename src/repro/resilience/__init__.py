@@ -1,0 +1,46 @@
+"""Resilience layer for the SpGEMM serving stack (ISSUE 8).
+
+Four cooperating pieces, threaded through ``serve/engine.py`` →
+``planner/service.py`` → ``planner/plan_cache.py`` → ``kernels/ops.py``:
+
+* :mod:`repro.resilience.validation` — structural operand validation at
+  the ``SpGEMMServer.submit`` boundary; malformed CSRs reject with a
+  structured :class:`~repro.resilience.errors.InvalidOperandError`
+  instead of crashing deep inside a packed kernel.
+* :mod:`repro.resilience.policy` — the degradation ladder definition
+  (pallas → XLA clusterwise → rowwise identity), the per-layer guard
+  switches, and the bounded incident log.
+* :mod:`repro.resilience.breaker` — the circuit breaker quarantining
+  failing (fingerprint, scheme, variant) triples so subsequent requests
+  re-plan around them, with a timed half-open retry that heals
+  transient failures.
+* :mod:`repro.resilience.faults` — the deterministic, seeded
+  fault-injection harness (strict no-op when disarmed) the chaos suite
+  and ``benchmarks/bench_resilience.py`` drive the other three with.
+
+See ``docs/resilience.md`` for the failure taxonomy and lifecycle
+diagrams.
+"""
+from repro.resilience.breaker import CircuitBreaker
+from repro.resilience.errors import (CorruptPlanError, FaultInjectedError,
+                                     InvalidOperandError,
+                                     LadderExhaustedError,
+                                     NonFiniteOutputError,
+                                     ProbeTimeoutError)
+from repro.resilience.faults import FaultPlan, arm, disarm, injected
+from repro.resilience.policy import (FALLBACK_LADDER, Incident,
+                                     ResiliencePolicy, fallback_chain,
+                                     get_policy, reset_policy, set_policy)
+from repro.resilience.validation import (validate_dense_operand,
+                                         validate_host_csr,
+                                         validate_request_pair)
+
+__all__ = [
+    "InvalidOperandError", "CorruptPlanError", "FaultInjectedError",
+    "NonFiniteOutputError", "ProbeTimeoutError", "LadderExhaustedError",
+    "CircuitBreaker",
+    "FaultPlan", "arm", "disarm", "injected",
+    "FALLBACK_LADDER", "fallback_chain", "Incident", "ResiliencePolicy",
+    "get_policy", "set_policy", "reset_policy",
+    "validate_host_csr", "validate_dense_operand", "validate_request_pair",
+]

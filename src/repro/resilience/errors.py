@@ -1,0 +1,98 @@
+"""Structured exception types of the resilience layer.
+
+These are leaf definitions (no repo-internal imports) so every layer —
+``core.formats`` validation, the plan cache, the kernel wrappers, the
+serving engine — can raise them without import cycles.
+"""
+from __future__ import annotations
+
+__all__ = ["InvalidOperandError", "CorruptPlanError", "FaultInjectedError",
+           "NonFiniteOutputError", "ProbeTimeoutError",
+           "LadderExhaustedError"]
+
+
+class InvalidOperandError(ValueError):
+    """A request operand failed structural validation at the serving
+    boundary.
+
+    Subclasses ``ValueError`` so pre-existing ``except ValueError``
+    call sites keep working. ``field`` names the violated invariant
+    class (``indptr`` / ``indices`` / ``data`` / ``shape``) — the
+    rejection metric labels on it — and ``detail`` carries the
+    machine-readable specifics (offending row, value, bound).
+    """
+
+    def __init__(self, field: str, reason: str, **detail):
+        self.field = field
+        self.reason = reason
+        self.detail = dict(detail)
+        extra = "".join(f", {k}={v}" for k, v in self.detail.items())
+        super().__init__(f"invalid operand [{field}]: {reason}{extra}")
+
+
+class CorruptPlanError(RuntimeError):
+    """An on-disk plan-cache entry failed to deserialize or checksum.
+
+    Never escapes :class:`repro.planner.plan_cache.PlanCache` — a corrupt
+    entry is treated as a miss and the file evicted — but the distinct
+    type lets the cache separate "damaged bytes" from real I/O errors.
+    """
+
+    def __init__(self, path: str, reason: str):
+        self.path = path
+        self.reason = reason
+        super().__init__(f"corrupt plan entry {path}: {reason}")
+
+
+class FaultInjectedError(RuntimeError):
+    """Raised by an armed :class:`repro.resilience.faults.FaultPlan` at an
+    injection site — the deterministic stand-in for a pallas compile
+    failure, a VMEM budget violation, or a truncated read."""
+
+    def __init__(self, site: str, fire: int):
+        self.site = site
+        self.fire = fire
+        super().__init__(f"injected fault at site '{site}' (fire #{fire})")
+
+
+class NonFiniteOutputError(ArithmeticError):
+    """The output finiteness guard found NaN/Inf in a produced result —
+    the numeric-blowup failure mode the degradation ladder treats
+    exactly like an exception from the kernel."""
+
+    def __init__(self, scheme: str):
+        self.scheme = scheme
+        super().__init__(
+            f"non-finite values in output of scheme '{scheme}'")
+
+
+class ProbeTimeoutError(RuntimeError):
+    """A measured-mode probe exceeded its per-candidate wall-clock cap.
+
+    Caught inside :meth:`repro.planner.service.Planner.plan`: the
+    candidate is skipped (scored heuristically) and the skip counted in
+    ``Planner.stats`` — a pathological candidate must not wedge the
+    request.
+    """
+
+    def __init__(self, candidate_key: str, elapsed_s: float, cap_s: float):
+        self.candidate_key = candidate_key
+        self.elapsed_s = elapsed_s
+        self.cap_s = cap_s
+        super().__init__(
+            f"probe of '{candidate_key}' hit the wall-clock cap: "
+            f"{elapsed_s:.3f}s > {cap_s:.3f}s")
+
+
+class LadderExhaustedError(RuntimeError):
+    """Every rung of the degradation ladder failed — including the
+    identity row-wise oracle. Carries the per-rung causes; reaching this
+    means the failure is in the operands or the host, not the scheme."""
+
+    def __init__(self, scheme: str, causes: list):
+        self.scheme = scheme
+        self.causes = list(causes)
+        chain = "; ".join(f"{s}: {type(e).__name__}: {e}"
+                          for s, e in self.causes)
+        super().__init__(
+            f"degradation ladder exhausted for scheme '{scheme}' ({chain})")

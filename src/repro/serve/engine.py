@@ -30,6 +30,8 @@ from repro.models.transformer import decode_step, init_cache, prefill
 from repro.obs import metrics as obs_metrics
 from repro.obs.trace import get_tracer
 from repro.planner.service import Planner
+from repro.resilience.errors import InvalidOperandError
+from repro.resilience.validation import validate_request_pair
 
 __all__ = ["make_serve_step", "ServingEngine", "SpGEMMServer"]
 
@@ -66,6 +68,8 @@ class SpGEMMResponse:
     plan_s: float              # planning + preprocessing wall time (0-ish on hit)
     execute_s: float
     trace_id: str = ""         # root span's trace id ("" when tracing is off)
+    degraded: bool = False     # served by a degradation-ladder rung
+    fallback_scheme: str = ""  # the rung that recovered it ("" when not)
 
 
 class SpGEMMServer:
@@ -117,6 +121,17 @@ class SpGEMMServer:
         Each request runs under a root ``request`` span (its trace id is
         returned as ``SpGEMMResponse.trace_id`` when tracing is on) and
         feeds the per-tenant ``serve_*`` metrics.
+
+        With the resilience policy's validation armed (the default),
+        malformed operands — a non-monotone ``indptr``, out-of-range or
+        unsorted indices, non-finite data, an inconsistent shape chain —
+        are rejected *here* with a structured
+        :class:`~repro.resilience.errors.InvalidOperandError` instead of
+        crashing deep inside a packed kernel; rejections count in the
+        ``serve_rejects`` metric (labeled by the violated field). A
+        request whose execution failed but was recovered by the
+        degradation ladder reports ``degraded=True`` and the recovering
+        rung in ``fallback_scheme``.
         """
         self.requests += 1
         hint = self.default_reuse_hint if reuse_hint is None else reuse_hint
@@ -128,6 +143,18 @@ class SpGEMMServer:
                     else "a2")
         reg = obs_metrics.get_registry()
         reg.counter("serve_requests", tenant=self.tenant).inc()
+        policy = self.planner.resilience
+        if policy.validate:
+            try:
+                validate_request_pair(a, b, skip=policy.is_validated)
+            except InvalidOperandError as e:
+                policy.rejects += 1
+                reg.counter("serve_rejects", tenant=self.tenant,
+                            field=e.field).inc()
+                raise
+            policy.mark_validated(a)
+            if b is not None and hasattr(b, "indptr"):
+                policy.mark_validated(b)
         with get_tracer().span("request", tenant=self.tenant,
                                workload=workload) as root:
             resp = self._submit_impl(a, b, hint=hint, hops=hops,
@@ -148,6 +175,8 @@ class SpGEMMServer:
         """:meth:`submit` minus the span/metric bookkeeping. Timed
         regions are device-synced: planner runners block until the device
         result is ready before the closing ``perf_counter`` read."""
+        policy = self.planner.resilience
+        inc0 = policy.fallbacks
         if hops is not None:
             t0 = time.perf_counter()
             out, plans = self.planner.execute_chain(
@@ -157,12 +186,16 @@ class SpGEMMServer:
             if hit:
                 self.plan_hits += 1
             lead = plans[0]
+            degraded = policy.fallbacks > inc0
             return SpGEMMResponse(
                 result=out, fingerprint=lead.fingerprint,
                 reorder=lead.reorder, scheme=lead.scheme, workload="chain",
                 kernel_path=("pallas" if any(p.scheme == "pallas"
                                              for p in plans) else "xla"),
-                plan_cache_hit=hit, plan_s=0.0, execute_s=t1 - t0)
+                plan_cache_hit=hit, plan_s=0.0, execute_s=t1 - t0,
+                degraded=degraded,
+                fallback_scheme=(policy.incidents[-1].fallback
+                                 if degraded else ""))
         t0 = time.perf_counter()
         plan = self.planner.plan(a, hint, measure=self.measure,
                                  workload=workload)
@@ -171,22 +204,28 @@ class SpGEMMServer:
         t2 = time.perf_counter()
         if plan.from_cache:
             self.plan_hits += 1
+        degraded = policy.fallbacks > inc0
         return SpGEMMResponse(
             result=out, fingerprint=plan.fingerprint, reorder=plan.reorder,
             scheme=plan.scheme, workload=workload,
             kernel_path="pallas" if plan.scheme == "pallas" else "xla",
             plan_cache_hit=plan.from_cache,
-            plan_s=t1 - t0, execute_s=t2 - t1)
+            plan_s=t1 - t0, execute_s=t2 - t1, degraded=degraded,
+            fallback_scheme=(policy.incidents[-1].fallback
+                             if degraded else ""))
 
     def stats(self) -> dict:
         """Serving snapshot: request/hit counts, the tenant's plan-cache
         partition (``PlanCache.stats``, both spread flat for
         back-compat and nested under ``"plan_cache"``) and the drift
-        auditor's rolling summary under ``"audit"``."""
+        auditor's rolling summary under ``"audit"``, plus the resilience
+        policy's fallback/reject/quarantine accounting under
+        ``"resilience"``."""
         return {"requests": self.requests, "plan_hits": self.plan_hits,
                 "tenant": self.tenant, **self.planner.stats,
                 "plan_cache": dict(self.planner.cache.stats),
-                "audit": self.planner.auditor.summary()}
+                "audit": self.planner.auditor.summary(),
+                "resilience": self.planner.resilience.stats}
 
 
 @dataclasses.dataclass

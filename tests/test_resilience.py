@@ -1,0 +1,601 @@
+"""Resilience layer tests (ISSUE 8): validation, degradation ladder,
+circuit breaker, crash-safe plan cache, deterministic fault injection.
+
+Covers the contracted behaviors:
+  * boundary validation rejects every malformed-CSR class with a
+    structured ``InvalidOperandError`` naming the violated field;
+  * under injected faults at every site (cache_load / pack /
+    kernel_launch / output) every ``SpGEMMServer.submit`` still returns
+    a result **bit-identical** to the rowwise oracle (integer-valued
+    matrices make fp32 accumulation exact across kernel tiers);
+  * the circuit breaker opens on failure, quarantines the
+    (fingerprint, scheme, variant) triple so the next plan routes
+    around it, half-opens after the retry window, and heals on success;
+  * a corrupted / truncated / checksum-flipped on-disk plan entry is a
+    miss-plus-evict, never an exception; writes are atomic (no ``.tmp``
+    debris under the live name);
+  * measured-mode probes are wall-clock capped: a pathological
+    candidate is skipped and scored heuristically;
+  * with no fault plan armed every hook is a strict no-op (asserted
+    with identity checks and a call-count shim).
+
+The fault seed is parameterized by ``CHAOS_SEED`` — ``make test-chaos``
+re-runs this file under three fixed seeds.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.formats import HostCSR
+from repro.planner.cost_model import Candidate
+from repro.planner.features import fingerprint
+from repro.planner.plan_cache import (PLAN_CACHE_VERSION, Plan, PlanCache)
+from repro.planner.service import Planner
+from repro.resilience import (CircuitBreaker, CorruptPlanError, FaultPlan,
+                              InvalidOperandError, LadderExhaustedError,
+                              ProbeTimeoutError, ResiliencePolicy,
+                              fallback_chain, get_policy, injected,
+                              reset_policy, set_policy)
+from repro.resilience import faults
+from repro.serve.engine import SpGEMMServer
+
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "0"))
+
+
+@pytest.fixture(autouse=True)
+def _fresh_policy():
+    """Each test gets an isolated process-global policy and no armed
+    fault plan (the production default)."""
+    reset_policy()
+    faults.disarm()
+    yield
+    reset_policy()
+    faults.disarm()
+
+
+def _mat(n=64, density=0.08, seed=0):
+    """Integer-valued CSR: fp32 accumulation is exact regardless of
+    summation order, so every kernel tier is bit-identical."""
+    rng = np.random.default_rng(seed)
+    dense = ((rng.random((n, n)) < density)
+             * rng.integers(1, 4, (n, n))).astype(np.float32)
+    return HostCSR.from_dense(dense)
+
+
+def _oracle_sq(a: HostCSR) -> np.ndarray:
+    d = a.to_dense()
+    return (d @ d).astype(np.float32)
+
+
+def _pallas_server(a: HostCSR, *, cache: PlanCache | None = None,
+                   reuse_hint: int = 20) -> SpGEMMServer:
+    """A server whose plan cache is pre-seeded with a pallas-scheme plan
+    for ``a`` — submit() hits it and executes the Pallas tier, which is
+    where the interesting failures live."""
+    cache = cache if cache is not None else PlanCache()
+    cache.put(Plan(fingerprint=fingerprint(a), reorder="original",
+                   scheme="pallas", reuse_hint=reuse_hint))
+    return SpGEMMServer(planner=Planner(cache=cache),
+                        default_reuse_hint=reuse_hint)
+
+
+# ---------------------------------------------------------------------------
+# boundary validation
+# ---------------------------------------------------------------------------
+
+
+def _raw(a: HostCSR):
+    return (a.indptr.copy(), a.indices.copy(), a.data.copy(), a.shape)
+
+
+def test_validate_accepts_well_formed():
+    a = _mat()
+    assert a.validate() is a                  # chains
+
+
+def test_validate_rejects_each_malformed_class():
+    a = _mat()
+    server = SpGEMMServer(planner=Planner(cache=PlanCache()))
+
+    def reject(mutate, field):
+        indptr, indices, data, shape = _raw(a)
+        bad = HostCSR(indptr, indices, data, shape)
+        mutate(bad)
+        with pytest.raises(InvalidOperandError) as ei:
+            server.submit(bad)
+        assert ei.value.field == field
+
+    def nonmonotone(h):
+        h.indptr[1], h.indptr[2] = h.indptr[2] + 1, h.indptr[1]
+    reject(nonmonotone, "indptr")
+
+    def bad_start(h):
+        h.indptr[0] = 1
+    reject(bad_start, "indptr")
+
+    def bad_end(h):
+        h.indptr[-1] = h.nnz + 3
+    reject(bad_end, "indptr")
+
+    def out_of_range(h):
+        h.indices[0] = h.ncols
+    reject(out_of_range, "indices")
+
+    def negative(h):
+        h.indices[0] = -1
+    reject(negative, "indices")
+
+    def unsorted(h):
+        # find a row with >= 2 entries and swap its first two columns
+        lens = np.diff(h.indptr)
+        r = int(np.argmax(lens >= 2))
+        s = int(h.indptr[r])
+        h.indices[s], h.indices[s + 1] = h.indices[s + 1], h.indices[s]
+    reject(unsorted, "indices")
+
+    def nan_data(h):
+        h.data[0] = np.nan
+    reject(nan_data, "data")
+
+    def inf_data(h):
+        h.data[-1] = np.inf
+    reject(inf_data, "data")
+
+
+def test_validate_rejects_mismatched_pair_shapes():
+    a = _mat(64)
+    b = _mat(32, seed=1)
+    server = SpGEMMServer(planner=Planner(cache=PlanCache()))
+    with pytest.raises(InvalidOperandError) as ei:
+        server.submit(a, b)
+    assert ei.value.field == "shape"
+    # dense B with the wrong leading dim rejects too
+    with pytest.raises(InvalidOperandError):
+        server.submit(a, np.ones((a.ncols + 1, 8), np.float32))
+    # non-finite dense B rejects
+    bad = np.ones((a.ncols, 8), np.float32)
+    bad[3, 3] = np.nan
+    with pytest.raises(InvalidOperandError):
+        server.submit(a, bad)
+
+
+def test_rejects_counted_in_policy_and_response_metrics():
+    a = _mat()
+    server = SpGEMMServer(planner=Planner(cache=PlanCache()))
+    indptr, indices, data, shape = _raw(a)
+    indices[0] = -5
+    bad = HostCSR(indptr, indices, data, shape)
+    for _ in range(2):
+        with pytest.raises(InvalidOperandError):
+            server.submit(bad)
+    assert get_policy().rejects == 2
+    assert server.stats()["resilience"]["rejects"] == 2
+
+
+def test_disabled_policy_skips_validation():
+    set_policy(ResiliencePolicy.disabled())
+    a = _mat()
+    indptr, indices, data, shape = _raw(a)
+    indices[0] = -5                     # malformed, but validation is off
+    bad = HostCSR(indptr, indices, data, shape)
+    server = SpGEMMServer(planner=Planner(cache=PlanCache()))
+    # whatever happens downstream, the boundary must not raise
+    # InvalidOperandError — the disabled policy is the raw path
+    try:
+        server.submit(bad)
+    except InvalidOperandError:
+        pytest.fail("disabled policy must not validate")
+    except Exception:
+        pass
+
+
+def test_validation_deep_scans_memoized_per_object(monkeypatch):
+    """The O(nnz) content scans run once per operand *object* (serving
+    treats accepted operands as immutable, like the exec cache does);
+    a fresh object — or a fresh policy — scans again, and pairwise
+    shape compatibility is never memoized."""
+    from repro.resilience import validation as vmod
+    a = _mat()
+    server = SpGEMMServer(planner=Planner(cache=PlanCache()))
+    calls = []
+    real = vmod.validate_host_csr
+
+    def counting(h, name="operand"):
+        calls.append(name)
+        return real(h, name)
+    monkeypatch.setattr(vmod, "validate_host_csr", counting)
+
+    server.submit(a)
+    server.submit(a)                    # same object: scan memoized
+    assert calls == ["a"]
+    # per object, not per content — a fresh malformed operand scans
+    indptr, indices, data, shape = _raw(a)
+    indices[0] = -7
+    with pytest.raises(InvalidOperandError):
+        server.submit(HostCSR(indptr, indices, data, shape))
+    assert calls == ["a", "a"]
+    # a fresh policy forgets the memo
+    reset_policy()
+    server.submit(a)
+    assert calls == ["a", "a", "a"]
+
+
+def test_pair_shape_check_not_memoized():
+    a = _mat(64)
+    b = _mat(32, seed=1)
+    server = SpGEMMServer(planner=Planner(cache=PlanCache()))
+    server.submit(a)                    # both individually validated
+    server.submit(b)
+    with pytest.raises(InvalidOperandError) as ei:
+        server.submit(a, b)             # memoized objects, bad pair
+    assert ei.value.field == "shape"
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder: bit-identity under faults at every site
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("site", faults.SITES)
+def test_ladder_recovers_bit_identical_at_every_site(site, tmp_path):
+    a = _mat(seed=CHAOS_SEED)
+    oracle = _oracle_sq(a)
+    cache = PlanCache(path=str(tmp_path), max_bytes=1 << 20)
+    server = _pallas_server(a, cache=cache)
+    # warm once (no faults): plan hit + packed operands; also proves the
+    # pallas tier itself is bit-identical to the oracle on this matrix
+    warm = server.submit(a)
+    np.testing.assert_array_equal(np.asarray(warm.result), oracle)
+    if site == "cache_load":
+        # force the disk round-trip the cache_load site corrupts
+        cache.clear_memory()
+    elif site == "pack":
+        # drop the packed operands so the request re-packs (and fails)
+        server.planner._exec_cache.clear()
+    with injected(FaultPlan(seed=CHAOS_SEED, sites=(site,))) as fp:
+        resp = server.submit(a)
+    np.testing.assert_array_equal(np.asarray(resp.result), oracle)
+    if site in ("pack", "kernel_launch", "output"):
+        assert fp.total_fires() == 1
+        assert resp.degraded
+        assert resp.fallback_scheme in fallback_chain("pallas")
+        assert get_policy().incidents[-1].fallback == resp.fallback_scheme
+    else:
+        # cache_load damage is absorbed by the cache itself: a re-plan,
+        # not a degraded execution
+        assert cache.stats["corrupt_evictions"] >= 1
+
+
+def test_every_rung_fails_raises_ladder_exhausted(monkeypatch):
+    """Injected faults alone can never exhaust the ladder — the identity
+    rung runs fault-suppressed by design. Only a *real* failure every
+    rung shares (a host-level fault) reaches LadderExhaustedError."""
+    a = _mat(seed=CHAOS_SEED)
+    planner = Planner(cache=PlanCache())
+    plan = Plan(fingerprint=fingerprint(a), reorder="original",
+                scheme="pallas", reuse_hint=20)
+
+    def boom(plan, a, b=None):
+        raise MemoryError("host OOM")
+    monkeypatch.setattr(planner, "_execute_impl", boom)
+    with pytest.raises(LadderExhaustedError) as ei:
+        planner.execute(plan, a)
+    schemes = [s for s, _ in ei.value.causes]
+    assert schemes == ["pallas", "fixed", "rowwise"]
+    assert all(isinstance(e, MemoryError) for _, e in ei.value.causes)
+    # the exhaustion is still an incident (fallback empty)
+    assert get_policy().incidents[-1].fallback == ""
+
+
+def test_identity_rung_is_fault_suppressed():
+    a = _mat(seed=CHAOS_SEED)
+    oracle = _oracle_sq(a)
+    server = _pallas_server(a)
+    server.submit(a)
+    server.planner._exec_cache.clear()
+    # pack fails persistently for pallas and fixed; the identity rung
+    # packs under suppressed() and must recover the request
+    with injected(FaultPlan(seed=CHAOS_SEED, sites=("pack",),
+                            max_fires=2)):
+        resp = server.submit(a)
+    np.testing.assert_array_equal(np.asarray(resp.result), oracle)
+    assert resp.degraded and resp.fallback_scheme == "rowwise"
+
+
+def test_chain_request_survives_pallas_hop_failure():
+    a = _mat(seed=CHAOS_SEED, density=0.06)
+    d = a.to_dense()
+    oracle = HostCSR.from_dense((d @ d @ d).astype(np.float32))
+    cache = PlanCache()
+    cache.put(Plan(fingerprint=fingerprint(a), reorder="original",
+                   scheme="pallas", reuse_hint=20, workload="chain"))
+    server = SpGEMMServer(planner=Planner(cache=cache),
+                          default_reuse_hint=20)
+    with injected(FaultPlan(seed=CHAOS_SEED, sites=("kernel_launch",))):
+        resp = server.submit(a, hops=2)
+    out = resp.result
+    np.testing.assert_array_equal(out.to_dense(), oracle.to_dense())
+    assert get_policy().fallbacks >= 1
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker + quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_breaker_state_machine_with_fake_clock():
+    now = [0.0]
+    br = CircuitBreaker(failure_threshold=2, retry_after_s=10.0,
+                        clock=lambda: now[0])
+    key = ("fp", "pallas", "original")
+    assert br.allows(key)
+    assert br.record_failure(key) == "closed"      # 1 < threshold
+    assert br.allows(key)
+    assert br.record_failure(key) == "open"        # threshold reached
+    assert not br.allows(key)
+    assert br.state(key) == "open"
+    now[0] = 10.0                                  # retry window elapsed
+    assert br.state(key) == "half-open"
+    assert br.allows(key)                          # the half-open trial
+    # failed trial re-opens with doubled backoff
+    assert br.record_failure(key) == "open"
+    now[0] = 19.9
+    assert not br.allows(key)                      # 10*2=20s not elapsed
+    now[0] = 30.0
+    assert br.allows(key)
+    br.record_success(key)                         # trial succeeded
+    assert br.state(key) == "closed"
+    assert br.stats["healed_total"] == 1
+    assert br.stats["opened_total"] == 1
+    assert br.open_keys() == []
+
+
+def test_quarantined_triple_is_replanned_around_without_eviction():
+    a = _mat(seed=CHAOS_SEED)
+    oracle = _oracle_sq(a)
+    now = [0.0]
+    set_policy(ResiliencePolicy(
+        breaker=CircuitBreaker(retry_after_s=30.0, clock=lambda: now[0])))
+    cache = PlanCache()
+    server = _pallas_server(a, cache=cache)
+    server.submit(a)                                   # warm, healthy
+    with injected(FaultPlan(seed=CHAOS_SEED, sites=("kernel_launch",))):
+        server.submit(a)                               # fails -> quarantine
+    policy = get_policy()
+    fp = fingerprint(a)
+    assert not policy.allows(fp, "pallas", "original")
+    # next request re-plans around the quarantined triple...
+    resp = server.submit(a)
+    assert resp.scheme != "pallas"
+    assert not resp.degraded                           # planned around, not
+    np.testing.assert_array_equal(np.asarray(resp.result), oracle)
+    # ...without evicting the cached pallas plan
+    held = cache.get(fp, 20)
+    assert held is not None and held.scheme == "pallas"
+    # after the retry window the half-open trial serves pallas again and
+    # a clean execution heals the breaker
+    now[0] = 31.0
+    resp2 = server.submit(a)
+    assert resp2.scheme == "pallas"
+    np.testing.assert_array_equal(np.asarray(resp2.result), oracle)
+    assert policy.breaker.stats["healed_total"] == 1
+    assert policy.stats["quarantined"] == 0
+
+
+# ---------------------------------------------------------------------------
+# crash-safe plan cache
+# ---------------------------------------------------------------------------
+
+
+def _plan(fp="fpX"):
+    return Plan(fingerprint=fp, reorder="rcm", scheme="fixed",
+                reuse_hint=10, perm=np.arange(16, dtype=np.int64),
+                boundaries=np.array([0, 8, 16], dtype=np.int64))
+
+
+def _entry_file(d):
+    files = [f for f in os.listdir(d) if f.endswith(".npz")]
+    assert len(files) == 1
+    return os.path.join(d, files[0])
+
+
+def test_atomic_write_leaves_no_tmp(tmp_path):
+    c = PlanCache(path=str(tmp_path), max_bytes=1 << 20)
+    c.put(_plan())
+    names = os.listdir(tmp_path)
+    assert not any(n.endswith(".tmp") for n in names)
+    c2 = PlanCache(path=str(tmp_path), max_bytes=1 << 20)
+    assert c2.get("fpX", 10) is not None
+
+
+@pytest.mark.parametrize("damage", ["bitflip", "truncate", "garbage"])
+def test_corrupt_disk_entry_is_miss_plus_evict(tmp_path, damage):
+    c = PlanCache(path=str(tmp_path), max_bytes=1 << 20)
+    c.put(_plan())
+    f = _entry_file(tmp_path)
+    raw = open(f, "rb").read()
+    if damage == "bitflip":
+        buf = bytearray(raw)
+        buf[len(buf) // 2] ^= 0xFF
+        open(f, "wb").write(bytes(buf))
+    elif damage == "truncate":
+        open(f, "wb").write(raw[: len(raw) // 3])
+    else:
+        open(f, "wb").write(b"not an npz at all")
+    fresh = PlanCache(path=str(tmp_path), max_bytes=1 << 20)
+    got = fresh.get("fpX", 10)
+    assert got is None                      # a miss, never an exception
+    assert not os.path.exists(f)            # ...plus evict
+    assert fresh.stats["corrupt_evictions"] >= 1
+    # and the store recovers: a re-put round-trips
+    fresh.put(_plan())
+    fresh.clear_memory()
+    assert fresh.get("fpX", 10) is not None
+
+
+def test_checksum_flip_detected_even_when_archive_parses(tmp_path):
+    p = _plan()
+    raw = p.to_npz_bytes()
+    back = Plan.from_npz_bytes(raw)
+    assert back.fingerprint == p.fingerprint
+    assert back.version == PLAN_CACHE_VERSION
+    # rebuild the archive with one perm value changed but the original
+    # checksum: a parseable-but-wrong entry must still be rejected
+    import io
+    import zipfile
+    with np.load(io.BytesIO(raw)) as z:
+        arrays = {k: np.array(z[k]) for k in z.files}
+    arrays["perm"][0] += 1
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    with pytest.raises(CorruptPlanError) as ei:
+        Plan.from_npz_bytes(buf.getvalue())
+    assert "checksum" in str(ei.value)
+
+
+def test_stale_tmp_files_swept_at_scan(tmp_path):
+    (tmp_path / "half-written.tmp").write_bytes(b"\x00" * 64)
+    c = PlanCache(path=str(tmp_path), max_bytes=1 << 20)
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+    assert c.stats["corrupt_evictions"] == 1
+
+
+def test_cache_load_fault_site_is_absorbed(tmp_path):
+    c = PlanCache(path=str(tmp_path), max_bytes=1 << 20)
+    c.put(_plan())
+    c.clear_memory()
+    with injected(FaultPlan(seed=CHAOS_SEED,
+                            sites=("cache_load",))) as fp:
+        assert c.get("fpX", 10) is None     # corrupted read -> miss
+    assert fp.total_fires() == 1
+    assert c.stats["corrupt_evictions"] == 1
+
+
+# ---------------------------------------------------------------------------
+# probe wall-clock cap
+# ---------------------------------------------------------------------------
+
+
+def test_probe_timeout_skips_candidate_and_scores_heuristically():
+    a = _mat(seed=CHAOS_SEED)
+    planner = Planner(cache=PlanCache(), probe_timeout_s=0.0)
+    plan = planner.plan(a, 50, measure=True)
+    assert plan is not None                 # request not wedged
+    assert planner.probe_skips >= 1         # every probe hit the 0s cap
+    assert planner.stats["probe_skips"] == planner.probe_skips
+
+
+def test_probe_timeout_disabled_with_none():
+    a = _mat(seed=CHAOS_SEED)
+    planner = Planner(cache=PlanCache(), probe_timeout_s=None)
+    planner.plan(a, 50, measure=True)
+    assert planner.probe_skips == 0
+
+
+def test_probe_timeout_error_carries_context():
+    e = ProbeTimeoutError("rcm+fixed", 2.5, 1.0)
+    assert e.candidate_key == "rcm+fixed"
+    assert "2.5" in str(e)
+
+
+# ---------------------------------------------------------------------------
+# fault harness determinism + strict no-op when disarmed
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_is_deterministic_per_seed():
+    for seed in (CHAOS_SEED, CHAOS_SEED + 1):
+        a = FaultPlan(seed, rate=0.5, max_fires=None)
+        b = FaultPlan(seed, rate=0.5, max_fires=None)
+        pattern_a = [a.should_fire("pack") for _ in range(32)]
+        pattern_b = [b.should_fire("pack") for _ in range(32)]
+        assert pattern_a == pattern_b
+
+
+def test_fault_plan_respects_max_fires_and_sites():
+    p = FaultPlan(CHAOS_SEED, sites=("pack",), max_fires=2)
+    fires = sum(p.should_fire("pack") for _ in range(10))
+    assert fires == 2
+    assert not p.should_fire("kernel_launch")   # unarmed site never fires
+    assert p.calls["pack"] == 10
+    with pytest.raises(ValueError):
+        FaultPlan(0, sites=("not-a-site",))
+
+
+def test_disarmed_hooks_are_strict_noops():
+    assert faults.active_plan() is None
+    payload = b"payload-bytes"
+    arr = np.ones((4, 4), np.float32)
+    # identity, not a copy
+    assert faults.corrupt_bytes("cache_load", payload) is payload
+    assert faults.corrupt_output("output", arr) is arr
+    faults.maybe_fault("kernel_launch")         # no raise
+    # call-count shim: an armed-then-disarmed plan's should_fire is
+    # never consulted once disarmed
+    plan = FaultPlan(CHAOS_SEED)
+    calls = []
+    orig = plan.should_fire
+    plan.should_fire = lambda site: (calls.append(site), orig(site))[1]
+    faults.arm(plan)
+    faults.disarm()
+    faults.maybe_fault("pack")
+    faults.corrupt_bytes("cache_load", payload)
+    assert calls == []
+
+
+def test_suppressed_blocks_firing_in_block_only():
+    with injected(FaultPlan(CHAOS_SEED, sites=("pack",),
+                            max_fires=None)) as p:
+        with faults.suppressed():
+            faults.maybe_fault("pack")          # no raise
+        assert p.total_fires() == 0
+        with pytest.raises(Exception):
+            faults.maybe_fault("pack")
+        assert p.total_fires() == 1
+
+
+def test_faults_never_fire_with_disabled_ladder():
+    """ResiliencePolicy.disabled() means the raw path: a fault escapes
+    as its own exception instead of degrading."""
+    set_policy(ResiliencePolicy.disabled())
+    a = _mat(seed=CHAOS_SEED)
+    server = _pallas_server(a)
+    server.submit(a)                                   # warm
+    server.planner._exec_cache.clear()
+    from repro.resilience.errors import FaultInjectedError
+    with injected(FaultPlan(seed=CHAOS_SEED, sites=("pack",))):
+        with pytest.raises(FaultInjectedError):
+            server.submit(a)
+
+
+# ---------------------------------------------------------------------------
+# incidents + stats surface
+# ---------------------------------------------------------------------------
+
+
+def test_incident_log_records_fallback_and_bounds():
+    policy = ResiliencePolicy(max_incidents=3)
+    for i in range(5):
+        policy.record_incident(fingerprint=f"fp{i}", workload="a2",
+                               scheme="pallas", reorder="original",
+                               site="exception", error=RuntimeError("x"),
+                               fallback="fixed")
+    assert len(policy.incidents) == 3                  # bounded
+    assert policy.fallbacks == 5
+    inc = policy.incidents[-1]
+    assert inc.fingerprint == "fp4" and inc.fallback == "fixed"
+    assert "RuntimeError" in inc.error
+
+
+def test_server_stats_surface_resilience_section():
+    a = _mat(seed=CHAOS_SEED)
+    server = _pallas_server(a)
+    server.submit(a)
+    with injected(FaultPlan(seed=CHAOS_SEED, sites=("kernel_launch",))):
+        server.submit(a)
+    s = server.stats()["resilience"]
+    assert s["fallbacks"] == 1
+    assert s["incidents"] == 1
+    assert s["quarantined"] == 1
+    assert s["breaker"]["opened_total"] == 1

@@ -5,7 +5,7 @@ Keeps the `docs/` architecture suite honest against the code it
 describes. Checks, in order:
 
 1. the guides exist (`docs/formats.md`, `docs/planner.md`,
-   `docs/kernels.md`, `docs/observability.md`);
+   `docs/kernels.md`, `docs/observability.md`, `docs/resilience.md`);
 2. every relative markdown link in `README.md` + `docs/*.md` resolves to
    an existing file (anchors stripped; http(s) links skipped);
 3. every backticked code cross-reference of the form ``path.py::symbol``
@@ -30,7 +30,7 @@ import sys
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 GUIDES = ["docs/formats.md", "docs/planner.md", "docs/kernels.md",
-          "docs/observability.md"]
+          "docs/observability.md", "docs/resilience.md"]
 DOC_FILES = ["README.md"] + GUIDES
 
 LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
