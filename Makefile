@@ -22,7 +22,8 @@ test:
 test-chaos:
 	for s in 0 1 2; do \
 	    CHAOS_SEED=$$s PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q \
-	        tests/test_resilience.py || exit 1; \
+	        tests/test_resilience.py tests/test_serving_frontend.py \
+	        || exit 1; \
 	done
 
 ## runnable docstring examples (core/formats, planner/cost_model) + the

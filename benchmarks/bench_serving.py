@@ -1,0 +1,249 @@
+"""Serving front-end benchmark (ISSUE 9): overhead + overload goodput.
+
+Two measurements:
+
+1. **Front-end overhead.** The async front-end's per-request mechanics —
+   fingerprint memo, estimator bump, queue offer/take, single-flight
+   registration, metrics — sit on every request. This bench serves the
+   same steady cache-hit traffic directly through
+   ``SpGEMMServer.submit`` and through ``AsyncSpGEMMServer`` in inline
+   mode (``workers=0``: submit + pump on one thread, no handoff
+   latency), and gates
+
+       frontend_overhead_frac = max(0, t_fe / t_direct - 1) <= 0.02
+
+   with best-of-N minimum times on interleaved passes (the bench_obs
+   measurement pattern: GC parked during timed passes, repeated
+   attempts before a gate failure is real). Both paths submit with the
+   same explicit ``reuse_hint`` so the plan-cache state is identical —
+   the comparison isolates the front-end, not planning policy.
+
+2. **Overload goodput.** A deterministic 2× burst (twice queue
+   capacity, fake clock): every admission outcome must be structured —
+   admitted requests complete bit-identically to the direct-path
+   oracle, the rest shed with ``OverloadError`` — and
+
+       goodput = in-deadline completions / admitted >= 0.95
+
+   with **zero** deadline-missed completions and the queue never past
+   capacity. Integer-valued operands make fp32 accumulation exact, so
+   coalesced and degraded responses are checked bit-identical too.
+"""
+from __future__ import annotations
+
+import gc
+import time
+
+import numpy as np
+
+from repro.core.formats import HostCSR
+from repro.planner.plan_cache import PlanCache
+from repro.planner.service import Planner
+from repro.resilience import OverloadError
+from repro.serve.engine import SpGEMMServer
+from repro.serve.frontend import AsyncSpGEMMServer
+
+# overhead ceiling the trajectory gate (``_ABS_GATED``) also enforces on
+# committed artifacts
+OVERHEAD_GATE = 0.02
+GOODPUT_GATE = 0.95
+
+_REPS = 12         # interleaved direct/front-end passes; min is scored
+_ATTEMPTS = 3      # full re-measurements before the gate failure is real
+
+
+def _mats(tier: str, *, integer: bool = False) -> list[HostCSR]:
+    # per-request work must be representative of real serving (a few ms,
+    # not sub-ms toys) or the fixed per-request front-end cost reads as
+    # an inflated fraction of an unrealistically tiny denominator
+    n = 192 if tier == "quick" else 256
+    out = []
+    for seed in range(3):
+        rng = np.random.default_rng(11 + seed)
+        mask = rng.random((n, n)) < 0.08
+        if integer:
+            dense = (mask * rng.integers(1, 4, (n, n))).astype(np.float32)
+        else:
+            dense = mask.astype(np.float32)
+        out.append(HostCSR.from_dense(dense))
+    return out
+
+
+_HINT = 20         # both paths pin the hint: identical plan-cache state
+
+
+def _direct_pass(srv: SpGEMMServer, mats: list[HostCSR],
+                 repeats: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        for a in mats:
+            srv.submit(a, reuse_hint=_HINT)
+    return time.perf_counter() - t0
+
+
+def _frontend_pass(fe: AsyncSpGEMMServer, mats: list[HostCSR],
+                   repeats: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        for a in mats:
+            tk = fe.submit(a, reuse_hint=_HINT)
+            fe.pump()
+            tk.result(0)
+    return time.perf_counter() - t0
+
+
+def _measure_once(srv: SpGEMMServer, fe: AsyncSpGEMMServer,
+                  mats: list[HostCSR], repeats: int) -> tuple[float, float]:
+    """(t_direct, t_fe): best-of-_REPS interleaved passes, GC parked
+    during the timed regions (collected between them)."""
+    t_direct = t_fe = float("inf")
+    gc_was_enabled = gc.isenabled()
+    try:
+        for _ in range(_REPS):
+            gc.collect()
+            gc.disable()
+            t_direct = min(t_direct, _direct_pass(srv, mats, repeats))
+            gc.enable()
+            gc.collect()
+            gc.disable()
+            t_fe = min(t_fe, _frontend_pass(fe, mats, repeats))
+            gc.enable()
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+        else:
+            gc.disable()
+    return t_direct, t_fe
+
+
+def _frontend_overhead(tier: str) -> dict:
+    mats = _mats(tier)
+    repeats = 4 if tier == "quick" else 6
+    # ONE shared server/planner: both paths hit the same warmed plans
+    # and packed operands, so the delta is the front-end alone
+    srv = SpGEMMServer(planner=Planner(cache=PlanCache()),
+                       tenant="bench-serve")
+    fe = AsyncSpGEMMServer(srv, capacity=len(mats) + 1, workers=0)
+    _direct_pass(srv, mats, 1)          # warm: plans, packings, compiles
+    _frontend_pass(fe, mats, 1)
+
+    overhead = float("inf")
+    t_direct = t_fe = 0.0
+    for attempt in range(_ATTEMPTS):
+        t_direct, t_fe = _measure_once(srv, fe, mats, repeats)
+        overhead = max(0.0, t_fe / t_direct - 1.0)
+        if overhead <= OVERHEAD_GATE:
+            break
+        print(f"# bench_serving: attempt {attempt + 1}: overhead "
+              f"{overhead:.4f} > {OVERHEAD_GATE} — re-measuring")
+
+    n_req = repeats * len(mats)
+    print(f"# bench_serving: {n_req} requests/pass, best-of-{_REPS}: "
+          f"direct {t_direct * 1e3:.2f} ms, front-end {t_fe * 1e3:.2f} ms, "
+          f"overhead {overhead:.4f} (gate {OVERHEAD_GATE})")
+    if overhead > OVERHEAD_GATE:
+        raise RuntimeError(
+            f"front-end overhead {overhead:.4f} exceeds the "
+            f"{OVERHEAD_GATE} gate after {_ATTEMPTS} attempts")
+    fe.close()
+    return {"frontend_overhead_frac": overhead,
+            "t_direct_s": t_direct, "t_frontend_s": t_fe,
+            "requests_per_pass": n_req}
+
+
+def _burst_mat(seed: int, n: int) -> HostCSR:
+    rng = np.random.default_rng(seed)
+    dense = ((rng.random((n, n)) < 0.08)
+             * rng.integers(1, 4, (n, n))).astype(np.float32)
+    return HostCSR.from_dense(dense)
+
+
+def _overload_burst(tier: str) -> dict:
+    """Deterministic 2× burst of distinct patterns (identical patterns
+    would coalesce instead of queueing): shed cleanly, serve the rest in
+    deadline, bit-identical to the direct-path oracle."""
+    n = 128 if tier == "quick" else 192
+    capacity = 8
+    submitted = 2 * capacity            # the 2× overload burst
+    mats = [_burst_mat(50 + i, n) for i in range(submitted)]
+    oracles = {}
+    oracle_srv = SpGEMMServer(planner=Planner(cache=PlanCache()))
+    for m in mats:
+        oracles[id(m)] = np.asarray(
+            oracle_srv.submit(m, reuse_hint=_HINT).result)
+
+    t = [0.0]
+    fe = AsyncSpGEMMServer(SpGEMMServer(planner=Planner(cache=PlanCache())),
+                           capacity=capacity, workers=0,
+                           clock=lambda: t[0])
+    # warm each pattern once so burst-time requests are cache hits
+    for m in mats:
+        fe.submit(m, reuse_hint=_HINT)
+        fe.pump()
+
+    admitted = []
+    shed = 0
+    for m in mats:
+        try:
+            admitted.append((m, fe.submit(m, reuse_hint=_HINT,
+                                          deadline_s=60.0)))
+        except OverloadError:
+            shed += 1
+        assert fe.queue.depth() <= capacity, "queue grew past capacity"
+        t[0] += 0.01
+    fe.pump()
+
+    in_deadline = 0
+    missed = 0
+    for m, tk in admitted:
+        resp = tk.result(0)             # structured by contract
+        np.testing.assert_array_equal(np.asarray(resp.result),
+                                      oracles[id(m)])
+        if resp.deadline_missed:
+            missed += 1
+        else:
+            in_deadline += 1
+
+    # coalescing under the same roof: identical values in flight dedupe
+    # onto one execution, bit-identical results for every waiter
+    dup = mats[0]
+    requests_before = fe.server.requests
+    dup_tickets = [fe.submit(dup, reuse_hint=_HINT) for _ in range(3)]
+    fe.pump()
+    coalesced = sum(bool(tk.result(0).coalesced) for tk in dup_tickets)
+    for tk in dup_tickets:
+        np.testing.assert_array_equal(np.asarray(tk.result(0).result),
+                                      oracles[id(dup)])
+    executed = fe.server.requests - requests_before
+    fe.close()
+
+    goodput = in_deadline / max(len(admitted), 1)
+    print(f"# bench_serving: burst {submitted} → admitted {len(admitted)}, "
+          f"shed {shed}, goodput {goodput:.3f} (gate {GOODPUT_GATE}), "
+          f"deadline-missed completions {missed}; coalesce 3 → "
+          f"{executed} execution")
+    if shed + len(admitted) != submitted:
+        raise RuntimeError("burst accounting does not add up")
+    if missed:
+        raise RuntimeError(
+            f"{missed} completions overran their deadline in the burst")
+    if goodput < GOODPUT_GATE:
+        raise RuntimeError(
+            f"burst goodput {goodput:.3f} below the {GOODPUT_GATE} gate")
+    if coalesced != 2 or executed != 1:
+        raise RuntimeError(
+            f"coalescing broke: {coalesced} coalesced, {executed} executed")
+    return {"burst_submitted": submitted, "burst_admitted": len(admitted),
+            "burst_shed": shed, "burst_coalesced": coalesced,
+            "burst_goodput": goodput,
+            "deadline_missed_completions": missed}
+
+
+def run(tier: str = "quick") -> dict:
+    overhead = _frontend_overhead(tier)
+    burst = _overload_burst(tier)
+    return {"summary": {**overhead, **burst}}
+
+
+if __name__ == "__main__":
+    run("quick")

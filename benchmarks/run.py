@@ -23,8 +23,8 @@ from repro import benchlib
 from benchmarks import (bench_clusterwise, bench_kernels, bench_memory,
                         bench_obs, bench_overhead, bench_planner,
                         bench_preprocess, bench_reorder_rowwise,
-                        bench_resilience, bench_tallskinny, bench_traffic,
-                        roofline_report, trajectory)
+                        bench_resilience, bench_serving, bench_tallskinny,
+                        bench_traffic, roofline_report, trajectory)
 
 TABLES = {
     "fig2": ("Fig.2/Table2 row-wise reorder", bench_reorder_rowwise.run),
@@ -41,6 +41,8 @@ TABLES = {
     "obs": ("Tracing/metrics overhead + stage breakdown", bench_obs.run),
     "resilience": ("Resilience guard overhead + chaos recovery",
                    bench_resilience.run),
+    "serving": ("Async front-end overhead + overload goodput",
+                bench_serving.run),
     "roofline": ("TPU roofline (from dry-run)", roofline_report.run),
 }
 

@@ -89,6 +89,10 @@ _ABS_GATED = [
     # resilience tier (ISSUE 8): the validation/finiteness/breaker guards
     # on the steady serving path carry a hard ≤2% budget
     ("resilience", ("guard_overhead_frac",), 0.02),
+    # serving tier (ISSUE 9): the async front-end's queue/estimator/
+    # coalescing mechanics carry the same hard ≤2% budget on steady
+    # cache-hit traffic
+    ("serving", ("frontend_overhead_frac",), 0.02),
 ]
 
 
@@ -207,6 +211,15 @@ def _sum_resilience(res: dict) -> dict:
     return {k: float(s[k]) for k in keys if k in s}
 
 
+def _sum_serving(res: dict) -> dict:
+    s = res.get("summary", {})
+    keys = ("frontend_overhead_frac", "t_direct_s", "t_frontend_s",
+            "requests_per_pass", "burst_submitted", "burst_admitted",
+            "burst_shed", "burst_coalesced", "burst_goodput",
+            "deadline_missed_completions")
+    return {k: float(s[k]) for k in keys if k in s}
+
+
 _SUMMARIZERS = {
     "fig2": _sum_fig2,
     "fig3": _sum_fig3,
@@ -219,6 +232,7 @@ _SUMMARIZERS = {
     "kernels": _sum_kernels,
     "obs": _sum_obs,
     "resilience": _sum_resilience,
+    "serving": _sum_serving,
 }
 
 

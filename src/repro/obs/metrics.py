@@ -104,6 +104,27 @@ _HOST_METRICS: dict[str, tuple[str, str]] = {
     "faults_injected": (
         "counter", "chaos-harness faults fired, by site — always 0 in "
         "production (count)"),
+    "serve_shed": (
+        "counter", "requests shed at the front-end admission boundary, "
+        "by reason (count)"),
+    "serve_deadline_miss": (
+        "counter", "request deadlines missed, by stage — admission / "
+        "queue / completion (count)"),
+    "serve_queue_depth": (
+        "gauge", "front-end bounded-queue depth after the last "
+        "enqueue/dequeue (count)"),
+    "serve_queue_wait_s": (
+        "histogram", "time admitted requests spent queued before "
+        "execution (seconds)"),
+    "serve_coalesced": (
+        "counter", "requests coalesced onto an identical in-flight "
+        "request's single-flight latch (count)"),
+    "serve_downgrades": (
+        "counter", "cold fingerprints proactively admitted on the "
+        "identity rung under queue pressure (count)"),
+    "serve_recalibrations": (
+        "counter", "scheduled cost-model refits from live audit "
+        "samples, by outcome — applied / skipped (count)"),
 }
 
 METRIC_CATALOG: dict[str, tuple[str, str]] = dict(_HOST_METRICS)

@@ -29,7 +29,9 @@ the sparse-C tier so the intermediate round-trips as
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
+import threading
 import time
 from typing import Callable, Optional, Sequence
 
@@ -142,6 +144,36 @@ def _plan_digest(plan: Plan) -> str:
     return out
 
 
+class _SingleFlight:
+    """Per-key mutual exclusion with refcounted cleanup: concurrent
+    planners of the same (fingerprint, workload) serialize, so a thundering
+    herd on a cold pattern pays feature extraction + materialization once
+    (the losers wake up into a cache hit). Keys for distinct patterns never
+    contend, and idle keys hold no memory."""
+
+    def __init__(self):
+        self._mu = threading.Lock()
+        self._locks: dict = {}      # key -> [lock, refcount]
+
+    @contextlib.contextmanager
+    def lock(self, key):
+        with self._mu:
+            ent = self._locks.get(key)
+            if ent is None:
+                ent = [threading.Lock(), 0]
+                self._locks[key] = ent
+            ent[1] += 1
+        ent[0].acquire()
+        try:
+            yield
+        finally:
+            ent[0].release()
+            with self._mu:
+                ent[1] -= 1
+                if ent[1] == 0:
+                    self._locks.pop(key, None)
+
+
 def _apply_plan_perm(a: HostCSR, plan: Plan, *, symmetric: bool) -> HostCSR:
     if plan.perm is None:
         return a
@@ -186,6 +218,11 @@ class Planner:
         probes — a candidate that exceeds it is skipped (scored
         heuristically) instead of wedging the request. ``None`` disables
         the cap.
+      hint_provider: optional ``fingerprint -> int`` resolving the reuse
+        hint when a caller passes ``reuse_hint=None`` — the serving
+        front-end injects its live arrival-rate estimator here so the
+        break-even rule sees measured recurrence instead of a static
+        default. ``None`` (default) keeps ``reuse_hint=None`` meaning 1.
     """
 
     def __init__(self, cache: Optional[PlanCache] = None,
@@ -199,7 +236,8 @@ class Planner:
                  pallas_b_dtype=None,
                  auditor: Optional[obs_audit.DriftAuditor] = None,
                  resilience: Optional[ResiliencePolicy] = None,
-                 probe_timeout_s: Optional[float] = 30.0):
+                 probe_timeout_s: Optional[float] = 30.0,
+                 hint_provider: Optional[Callable[[str], int]] = None):
         self.cache = cache if cache is not None else PlanCache()
         self.auditor = (auditor if auditor is not None
                         else obs_audit.get_auditor())
@@ -213,6 +251,7 @@ class Planner:
         self.candidates = tuple(candidates)
         self._resilience = resilience
         self.probe_timeout_s = probe_timeout_s
+        self.hint_provider = hint_provider
         self.probe_skips = 0
         # (fingerprint, candidate.key) -> materialization artifacts, so a
         # measured candidate's preprocessing is never run twice
@@ -223,6 +262,9 @@ class Planner:
         # (plan key, value digest) -> packed device operands for execute()
         self._exec_cache: dict[str, tuple] = {}
         self._exec_cache_cap = 64
+        # concurrent plans of one (fingerprint, workload) serialize so a
+        # burst on a cold pattern preprocesses once, not once per request
+        self._plan_flight = _SingleFlight()
 
     @property
     def resilience(self) -> ResiliencePolicy:
@@ -233,7 +275,7 @@ class Planner:
 
     # -- planning ------------------------------------------------------------
 
-    def plan(self, a: HostCSR, reuse_hint: int = 1, *,
+    def plan(self, a: HostCSR, reuse_hint: Optional[int] = 1, *,
              measure: bool = False,
              candidates: Optional[Sequence[Candidate]] = None,
              use_cache: bool = True, workload: str = "a2") -> Plan:
@@ -242,6 +284,12 @@ class Planner:
         The do-nothing identity plan (original order, row-wise) is the
         implicit fallback whenever no candidate amortizes, even when it
         is not in ``candidates``.
+
+        ``reuse_hint=None`` defers to the injected ``hint_provider``
+        (the serving front-end's live arrival-rate estimator) when one is
+        set, else 1. Concurrent calls on one (fingerprint, workload)
+        single-flight: the first pays planning, the rest wake into the
+        cached plan.
 
         ``workload`` selects the kernel family the plan is scored (and in
         measured mode, probed) on: ``"a2"`` — the paper's sparse×sparse
@@ -253,11 +301,18 @@ class Planner:
         the pallas scheme wins). Cache entries are workload-keyed, so
         the workloads never shadow each other.
         """
+        fp = fingerprint(a)
+        if reuse_hint is None:
+            reuse_hint = (self.hint_provider(fp)
+                          if self.hint_provider is not None else 1)
         with get_tracer().span("plan", workload=workload,
                                measure=measure) as sp:
-            plan = self._plan_impl(a, reuse_hint, measure=measure,
-                                   candidates=candidates,
-                                   use_cache=use_cache, workload=workload)
+            with self._plan_flight.lock((fp, workload)):
+                plan = self._plan_impl(a, reuse_hint, fp=fp,
+                                       measure=measure,
+                                       candidates=candidates,
+                                       use_cache=use_cache,
+                                       workload=workload)
             sp.set(fingerprint=plan.fingerprint, scheme=plan.scheme,
                    reorder=plan.reorder, cache_hit=plan.from_cache)
         reg = obs_metrics.get_registry()
@@ -270,15 +325,14 @@ class Planner:
             reg.gauge("quarantine").set(len(policy.breaker.open_keys()))
         return plan
 
-    def _plan_impl(self, a: HostCSR, reuse_hint: int, *,
+    def _plan_impl(self, a: HostCSR, reuse_hint: int, *, fp: str,
                    measure: bool,
                    candidates: Optional[Sequence[Candidate]],
                    use_cache: bool, workload: str) -> Plan:
-        """:meth:`plan` minus the span/metric bookkeeping."""
+        """:meth:`plan` minus the span/metric/single-flight bookkeeping."""
         reuse_hint = max(int(reuse_hint), 1)
         if workload not in ("a2", "spmm", "chain"):
             raise ValueError(f"unknown workload '{workload}'")
-        fp = fingerprint(a)
         # workload-qualified key for cost-model measurements: an identity
         # baseline timed on SpMM must only normalize SpMM probes
         fp_w = fp if workload == "a2" else f"{fp}|{workload}"
@@ -650,10 +704,12 @@ class Planner:
         hops = int(hops)
         if hops < 1:
             raise ValueError(f"hops must be >= 1, got {hops}")
-        if reuse_hint is None:
+        if reuse_hint is None and self.hint_provider is None:
             # each hop's plan serves one product per chain call; the
             # chain itself is the reuse unit, so default to expecting a
-            # handful of repeated chains (the serving pattern)
+            # handful of repeated chains (the serving pattern). With a
+            # hint provider injected, None flows through to plan() so
+            # every hop's intermediate gets its own live estimate.
             reuse_hint = max(hops, 2)
         cur = a
         plans: list[Plan] = []
@@ -661,8 +717,13 @@ class Planner:
         hop_counter = obs_metrics.get_registry().counter("chain_hops")
         for k in range(hops):
             with tracer.span("hop", hop=k, hops=hops) as sp:
+                t0 = time.perf_counter()
                 plan = self.plan(cur, reuse_hint, measure=measure,
                                  candidates=candidates, workload="chain")
+                # per-hop planning wall time, annotated on the returned
+                # plan so the serving layer can report a truthful plan_s
+                # for chain requests (cache hits annotate ~0)
+                plan.plan_wall_s = time.perf_counter() - t0
                 plans.append(plan)
                 sp.set(fingerprint=plan.fingerprint, scheme=plan.scheme)
                 cur = self._chain_hop(plan, cur, None if k == 0 else a)

@@ -22,15 +22,18 @@ See ``docs/resilience.md`` for the failure taxonomy and lifecycle
 diagrams.
 """
 from repro.resilience.breaker import CircuitBreaker
-from repro.resilience.errors import (CorruptPlanError, FaultInjectedError,
+from repro.resilience.errors import (CorruptPlanError,
+                                     DeadlineExceededError,
+                                     FaultInjectedError,
                                      InvalidOperandError,
                                      LadderExhaustedError,
-                                     NonFiniteOutputError,
+                                     NonFiniteOutputError, OverloadError,
                                      ProbeTimeoutError)
 from repro.resilience.faults import FaultPlan, arm, disarm, injected
 from repro.resilience.policy import (FALLBACK_LADDER, Incident,
-                                     ResiliencePolicy, fallback_chain,
-                                     get_policy, reset_policy, set_policy)
+                                     ResiliencePolicy, Watermarks,
+                                     fallback_chain, get_policy,
+                                     reset_policy, set_policy)
 from repro.resilience.validation import (validate_dense_operand,
                                          validate_host_csr,
                                          validate_request_pair)
@@ -38,9 +41,10 @@ from repro.resilience.validation import (validate_dense_operand,
 __all__ = [
     "InvalidOperandError", "CorruptPlanError", "FaultInjectedError",
     "NonFiniteOutputError", "ProbeTimeoutError", "LadderExhaustedError",
+    "OverloadError", "DeadlineExceededError",
     "CircuitBreaker",
     "FaultPlan", "arm", "disarm", "injected",
     "FALLBACK_LADDER", "fallback_chain", "Incident", "ResiliencePolicy",
-    "get_policy", "set_policy", "reset_policy",
+    "Watermarks", "get_policy", "set_policy", "reset_policy",
     "validate_host_csr", "validate_dense_operand", "validate_request_pair",
 ]

@@ -8,7 +8,8 @@ from __future__ import annotations
 
 __all__ = ["InvalidOperandError", "CorruptPlanError", "FaultInjectedError",
            "NonFiniteOutputError", "ProbeTimeoutError",
-           "LadderExhaustedError"]
+           "LadderExhaustedError", "OverloadError",
+           "DeadlineExceededError"]
 
 
 class InvalidOperandError(ValueError):
@@ -82,6 +83,54 @@ class ProbeTimeoutError(RuntimeError):
         super().__init__(
             f"probe of '{candidate_key}' hit the wall-clock cap: "
             f"{elapsed_s:.3f}s > {cap_s:.3f}s")
+
+
+class OverloadError(RuntimeError):
+    """The serving front-end shed a request at admission.
+
+    Raised by :class:`repro.serve.frontend.AsyncSpGEMMServer` when the
+    bounded request queue (or the caller's per-tenant depth partition)
+    is full — the structured alternative to unbounded queue growth.
+    ``reason`` is the admission rule that fired (``capacity`` /
+    ``tenant_depth`` / ``shutdown``); ``depth``/``limit`` carry the
+    observed and allowed queue depths so clients can back off
+    proportionally.
+    """
+
+    def __init__(self, reason: str, *, tenant: str = "", depth: int = 0,
+                 limit: int = 0):
+        self.reason = reason
+        self.tenant = tenant
+        self.depth = int(depth)
+        self.limit = int(limit)
+        who = f" tenant '{tenant}'" if tenant else ""
+        super().__init__(
+            f"overload [{reason}]:{who} queue depth {depth} at limit "
+            f"{limit} — request shed")
+
+
+class DeadlineExceededError(RuntimeError):
+    """A request's deadline cannot be (or was not) met.
+
+    ``stage`` names where the deadline fired: ``admission`` (the
+    predicted plan+execute cost already exceeds the remaining budget —
+    shed before any work), ``queue`` (the budget expired while the
+    request waited — shed at dequeue, never executed). Completions that
+    overrun their deadline are *not* raised — they are counted in
+    ``serve_deadline_miss`` and flagged on the response instead.
+    """
+
+    def __init__(self, stage: str, *, deadline_s: float = 0.0,
+                 predicted_s: float = 0.0, waited_s: float = 0.0):
+        self.stage = stage
+        self.deadline_s = float(deadline_s)
+        self.predicted_s = float(predicted_s)
+        self.waited_s = float(waited_s)
+        detail = (f"predicted {predicted_s:.4f}s" if stage == "admission"
+                  else f"waited {waited_s:.4f}s")
+        super().__init__(
+            f"deadline exceeded [{stage}]: budget {deadline_s:.4f}s, "
+            f"{detail}")
 
 
 class LadderExhaustedError(RuntimeError):

@@ -29,7 +29,7 @@ from typing import Optional
 
 from repro.resilience.breaker import CircuitBreaker
 
-__all__ = ["FALLBACK_LADDER", "fallback_chain", "Incident",
+__all__ = ["FALLBACK_LADDER", "fallback_chain", "Incident", "Watermarks",
            "ResiliencePolicy", "get_policy", "set_policy", "reset_policy"]
 
 
@@ -62,6 +62,32 @@ class Incident:
     at_unix: float
 
 
+@dataclasses.dataclass(frozen=True)
+class Watermarks:
+    """Queue-depth thresholds driving the *proactive* degradation ladder.
+
+    The reactive ladder (:data:`FALLBACK_LADDER`) fires after a failure;
+    these watermarks fire *before* one: when the serving front-end's
+    bounded queue fills past ``high`` (as a fraction of capacity), new
+    — not-yet-hot — fingerprints are admitted on the ladder's floor
+    (identity row-wise, zero preprocessing) instead of paying plan
+    materialization the queue cannot afford; the downgrade pressure
+    clears once the queue drains below ``low`` (hysteresis, so the
+    ladder does not flap at the threshold). Fingerprints the reuse
+    estimator already grades hot keep their full plans even under
+    pressure — their preprocessing amortizes regardless.
+    """
+
+    high: float = 0.75       # fill fraction that turns downgrades on
+    low: float = 0.50        # fill fraction that turns them back off
+
+    def __post_init__(self):
+        if not 0.0 <= self.low <= self.high <= 1.0:
+            raise ValueError(
+                f"need 0 <= low <= high <= 1, got low={self.low}, "
+                f"high={self.high}")
+
+
 class ResiliencePolicy:
     """Guard configuration + quarantine + incident log.
 
@@ -74,17 +100,25 @@ class ResiliencePolicy:
         default one. The breaker only acts when ``ladder`` is on (a
         failure must be *observed* to be quarantined).
       max_incidents: incident-log bound.
+      watermarks: the queue-fill :class:`Watermarks` at which the
+        serving front-end proactively downgrades cold fingerprints to
+        the ladder's identity floor (``None`` constructs the defaults).
     """
 
     def __init__(self, *, validate: bool = True, ladder: bool = True,
                  breaker: Optional[CircuitBreaker] = None,
-                 max_incidents: int = 256):
+                 max_incidents: int = 256,
+                 watermarks: Optional[Watermarks] = None):
         self.validate = bool(validate)
         self.ladder = bool(ladder)
         self.breaker = breaker if breaker is not None else CircuitBreaker()
+        self.watermarks = (watermarks if watermarks is not None
+                           else Watermarks())
         self.incidents: deque[Incident] = deque(maxlen=max_incidents)
         self.fallbacks = 0       # executions recovered by a lower rung
         self.rejects = 0         # operands rejected at the boundary
+        self.sheds = 0           # requests shed at the admission boundary
+        self.downgrades = 0      # proactive watermark-driven downgrades
         # operands whose deep content checks already passed. Serving
         # treats submitted operands as immutable (the exec cache
         # re-serves packed operands on exactly that assumption), so the
@@ -150,6 +184,7 @@ class ResiliencePolicy:
     @property
     def stats(self) -> dict:
         return {"fallbacks": self.fallbacks, "rejects": self.rejects,
+                "sheds": self.sheds, "downgrades": self.downgrades,
                 "incidents": len(self.incidents),
                 "quarantined": len(self.breaker.open_keys()),
                 "breaker": self.breaker.stats}

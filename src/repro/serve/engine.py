@@ -70,6 +70,9 @@ class SpGEMMResponse:
     trace_id: str = ""         # root span's trace id ("" when tracing is off)
     degraded: bool = False     # served by a degradation-ladder rung
     fallback_scheme: str = ""  # the rung that recovered it ("" when not)
+    coalesced: bool = False    # shared an identical in-flight execution
+    downgraded: bool = False   # front-end forced the identity rung
+    deadline_missed: bool = False  # completed past its deadline (counted)
 
 
 class SpGEMMServer:
@@ -134,7 +137,14 @@ class SpGEMMServer:
         rung in ``fallback_scheme``.
         """
         self.requests += 1
-        hint = self.default_reuse_hint if reuse_hint is None else reuse_hint
+        if reuse_hint is not None:
+            hint: Optional[int] = reuse_hint
+        elif getattr(self.planner, "hint_provider", None) is not None:
+            # the planner's injected live estimator resolves the hint
+            # per fingerprint — the static default would override it
+            hint = None
+        else:
+            hint = self.default_reuse_hint
         if hops is not None and b is not None:
             raise ValueError("chain requests take b=None (A^k workload)")
         workload = ("chain" if hops is not None
@@ -170,7 +180,7 @@ class SpGEMMServer:
                       tenant=self.tenant).observe(resp.execute_s)
         return resp
 
-    def _submit_impl(self, a: HostCSR, b, *, hint: int,
+    def _submit_impl(self, a: HostCSR, b, *, hint: Optional[int],
                      hops: Optional[int], workload: str) -> SpGEMMResponse:
         """:meth:`submit` minus the span/metric bookkeeping. Timed
         regions are device-synced: planner runners block until the device
@@ -187,12 +197,18 @@ class SpGEMMServer:
                 self.plan_hits += 1
             lead = plans[0]
             degraded = policy.fallbacks > inc0
+            # truthful chain planning time: the sum of the per-hop
+            # planning wall times execute_chain annotates on each plan
+            # (previously hardcoded 0.0, which made the serve_plan_s
+            # histogram lie for chain traffic)
+            plan_s = sum(getattr(p, "plan_wall_s", 0.0) for p in plans)
             return SpGEMMResponse(
                 result=out, fingerprint=lead.fingerprint,
                 reorder=lead.reorder, scheme=lead.scheme, workload="chain",
                 kernel_path=("pallas" if any(p.scheme == "pallas"
                                              for p in plans) else "xla"),
-                plan_cache_hit=hit, plan_s=0.0, execute_s=t1 - t0,
+                plan_cache_hit=hit, plan_s=plan_s,
+                execute_s=max(t1 - t0 - plan_s, 0.0),
                 degraded=degraded,
                 fallback_scheme=(policy.incidents[-1].fallback
                                  if degraded else ""))
@@ -251,6 +267,12 @@ class ServingEngine:
         self.requests: list[Optional[Request]] = [None] * slots
         self.positions = np.zeros(slots, np.int64)
         self._step = jax.jit(make_serve_step(cfg))
+        # one jitted replay step for the whole engine lifetime: tokens are
+        # always (slots, 1) int32, so every prompt token of every request
+        # reuses this single trace (constructing jax.jit(lambda ...)
+        # inside the replay loop re-traced per token)
+        self._replay_step = jax.jit(
+            lambda p, c, b: decode_step(self.cfg, p, b, c))
         self._queue: list[Request] = []
 
     def submit(self, req: Request) -> None:
@@ -266,9 +288,8 @@ class ServingEngine:
                 for t in req.prompt:
                     tok = jnp.zeros((self.slots, 1), jnp.int32)
                     tok = tok.at[i, 0].set(int(t))
-                    _, self.cache = jax.jit(
-                        lambda p, c, b: decode_step(self.cfg, p, b, c)
-                    )(self.params, self.cache, {"tokens": tok})
+                    _, self.cache = self._replay_step(
+                        self.params, self.cache, {"tokens": tok})
                 self.positions[i] = len(req.prompt)
 
     def run(self, steps: int) -> None:

@@ -1,0 +1,541 @@
+"""Overload-robust serving front-end tests (ISSUE 9).
+
+Deterministic burst behavior — no real time, no threads: every test
+drives an ``AsyncSpGEMMServer`` in inline mode (``workers=0``, the
+caller pumps) with an injectable fake clock, so admission, deadlines,
+watermark pressure and estimator graduation are all exact.
+
+Contracted behaviors:
+  * a full queue (global or per-tenant partition) sheds with a
+    structured ``OverloadError`` at ``submit`` — depth never exceeds
+    capacity, nothing unstructured escapes;
+  * deadlines by stage: infeasible budgets shed at *admission*
+    (or downgrade to the identity rung when that still fits), budgets
+    that expire while queued shed at *dequeue*, completions that
+    overrun are **counted and flagged, never raised mid-flight**;
+  * coalesced requests (identical pattern + values + workload) execute
+    once and every waiter's result is bit-identical to a serial
+    submission (integer-valued matrices make fp32 accumulation exact);
+  * watermark pressure downgrades cold fingerprints to the identity
+    rung and they graduate to full plans when pressure clears; hot
+    fingerprints (live estimator) keep full plans throughout;
+  * the estimator's live arrival rate replaces ``default_reuse_hint``
+    through ``Planner.hint_provider``, and a hot fingerprint's plan
+    graduates from rowwise to a planned scheme;
+  * concurrent plans of one (fingerprint, workload) single-flight;
+  * ``ServingEngine`` prompt replay traces its decode step once, not
+    once per token (the hoisted-jit regression);
+  * chain responses report truthful per-hop planning time.
+
+``make test-chaos`` re-runs this file under three fixed ``CHAOS_SEED``
+values: the burst-under-faults test arms the PR 8 harness and asserts
+every admitted request still resolves bit-identically.
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.formats import HostCSR
+from repro.core.spgemm import spgemm_reference
+from repro.core.suite import gen_block_diag
+from repro.obs.audit import get_auditor
+from repro.obs.metrics import get_registry
+from repro.planner.plan_cache import PlanCache
+from repro.planner.service import Planner
+from repro.resilience import (DeadlineExceededError, FaultPlan,
+                              OverloadError, Watermarks, faults,
+                              reset_policy)
+from repro.serve.engine import SpGEMMServer
+from repro.serve.estimator import ReuseEstimator
+from repro.serve.frontend import AsyncSpGEMMServer
+from repro.serve.queue import BoundedRequestQueue, QueuedRequest
+
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "0"))
+
+
+@pytest.fixture(autouse=True)
+def _fresh_state():
+    """Isolated process-global policy, metrics and no armed fault plan."""
+    reset_policy()
+    faults.disarm()
+    get_registry().reset()
+    get_auditor().reset()
+    yield
+    reset_policy()
+    faults.disarm()
+    get_registry().reset()
+    get_auditor().reset()
+
+
+class FakeClock:
+    """Manually advanced monotonic time."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _mat(n=64, density=0.08, seed=0):
+    """Integer-valued CSR: fp32 accumulation is exact regardless of
+    summation order, so every kernel tier is bit-identical."""
+    rng = np.random.default_rng(seed)
+    dense = ((rng.random((n, n)) < density)
+             * rng.integers(1, 4, (n, n))).astype(np.float32)
+    return HostCSR.from_dense(dense)
+
+
+def _frontend(clock, **kw):
+    kw.setdefault("capacity", 4)
+    kw.setdefault("workers", 0)
+    est = kw.pop("estimator", None)
+    if est is None:
+        est = ReuseEstimator(clock=clock)
+    srv = kw.pop("server", None)
+    if srv is None:
+        srv = SpGEMMServer(planner=Planner(cache=PlanCache()))
+    return AsyncSpGEMMServer(srv, clock=clock, estimator=est, **kw)
+
+
+def _counter(name, **labels):
+    key = get_registry()._key(name, labels)
+    return get_registry().snapshot().get(key, 0)
+
+
+# ---------------------------------------------------------------------------
+# admission control: bounded queue sheds, never grows
+# ---------------------------------------------------------------------------
+
+
+def test_shed_at_capacity_with_structured_error():
+    clock = FakeClock()
+    fe = _frontend(clock, capacity=3)
+    admitted = [fe.submit(_mat(seed=i)) for i in range(3)]
+    with pytest.raises(OverloadError) as ei:
+        fe.submit(_mat(seed=99))
+    assert ei.value.reason == "capacity"
+    assert ei.value.depth == 3 and ei.value.limit == 3
+    assert fe.queue.depth() == 3                 # never grew past capacity
+    assert _counter("serve_shed", reason="capacity") == 1
+    assert fe.pump() == 3
+    assert all(t.done() and t.error() is None for t in admitted)
+
+
+def test_per_tenant_depth_shed_leaves_other_tenants_room():
+    clock = FakeClock()
+    fe = _frontend(clock, capacity=4, tenant_capacity=1)
+    fe.submit(_mat(seed=0), tenant="flooder")
+    with pytest.raises(OverloadError) as ei:
+        fe.submit(_mat(seed=1), tenant="flooder")
+    assert ei.value.reason == "tenant_depth" and ei.value.tenant == "flooder"
+    # global capacity remains for everyone else
+    fe.submit(_mat(seed=2), tenant="polite")
+    assert fe.queue.depth_of("flooder") == 1
+    assert fe.pump() == 2
+
+
+def test_shutdown_rejects_queued_requests():
+    clock = FakeClock()
+    fe = _frontend(clock)
+    t1 = fe.submit(_mat(seed=0))
+    fe.close(drain=False)
+    assert isinstance(t1.error(), OverloadError)
+    assert t1.error().reason == "shutdown"
+    with pytest.raises(OverloadError):
+        fe.submit(_mat(seed=1))
+
+
+# ---------------------------------------------------------------------------
+# deadlines by stage
+# ---------------------------------------------------------------------------
+
+
+def test_infeasible_deadline_sheds_at_admission():
+    clock = FakeClock()
+    est = ReuseEstimator(clock=clock)
+    fe = _frontend(clock, estimator=est)
+    a = _mat(seed=0)
+    fp = fe._fingerprint(a)
+    est.note_service(fp, 2.0)                    # predicted full path: 2 s
+    with pytest.raises(DeadlineExceededError) as ei:
+        fe.submit(a, deadline_s=0.5)
+    assert ei.value.stage == "admission"
+    assert ei.value.predicted_s == pytest.approx(2.0)
+    assert _counter("serve_deadline_miss", stage="admission") == 1
+    assert _counter("serve_shed", reason="deadline") == 1
+
+
+def test_infeasible_deadline_downgrades_when_cheap_path_fits():
+    clock = FakeClock()
+    est = ReuseEstimator(clock=clock)
+    fe = _frontend(clock, estimator=est)
+    a = _mat(seed=0)
+    fp = fe._fingerprint(a)
+    est.note_service(fp, 2.0)                    # full path too slow ...
+    est.note_service(fp, 0.1, downgraded=True)   # ... identity rung fits
+    tk = fe.submit(a, deadline_s=0.5)
+    fe.pump()
+    resp = tk.result(0)
+    assert resp.downgraded and resp.scheme == "rowwise"
+    assert _counter("serve_downgrades") == 1
+
+
+def test_deadline_expired_in_queue_is_shed_at_dequeue():
+    clock = FakeClock()
+    fe = _frontend(clock)
+    tk = fe.submit(_mat(seed=0), deadline_s=5.0)
+    clock.advance(10.0)
+    fe.pump()
+    with pytest.raises(DeadlineExceededError) as ei:
+        tk.result(0)
+    assert ei.value.stage == "queue"
+    assert ei.value.waited_s == pytest.approx(10.0)
+    assert _counter("serve_deadline_miss", stage="queue") == 1
+
+
+def test_completion_overrun_is_counted_and_flagged_not_raised():
+    clock = FakeClock()
+    fe = _frontend(clock)
+    inner = fe.server.submit
+
+    def slow_submit(*args, **kwargs):
+        clock.advance(9.0)                       # execution overran
+        return inner(*args, **kwargs)
+
+    fe.server.submit = slow_submit
+    tk = fe.submit(_mat(seed=0), deadline_s=5.0)
+    fe.pump()
+    resp = tk.result(0)                          # returns — no raise
+    assert resp.deadline_missed
+    assert _counter("serve_deadline_miss", stage="completion") == 1
+
+
+def test_unknown_cost_never_sheds_on_deadline():
+    clock = FakeClock()
+    fe = _frontend(clock)
+    tk = fe.submit(_mat(seed=0), deadline_s=1e-6)   # no prediction yet
+    fe.pump()
+    assert tk.result(0).fingerprint                 # admitted and served
+
+
+# ---------------------------------------------------------------------------
+# coalescing: single flight, bit-identical results
+# ---------------------------------------------------------------------------
+
+
+def test_coalesced_requests_bit_identical_to_serial():
+    a = _mat(seed=3)
+    serial = SpGEMMServer(planner=Planner(cache=PlanCache()))
+    want = np.asarray(serial.submit(a).result)
+    np.testing.assert_array_equal(want, spgemm_reference(a, a))
+
+    clock = FakeClock()
+    fe = _frontend(clock)
+    tickets = [fe.submit(a) for _ in range(3)]
+    fe.pump()
+    assert fe.server.requests == 1               # one execution, three results
+    results = [t.result(0) for t in tickets]
+    assert not results[0].coalesced
+    assert results[1].coalesced and results[2].coalesced
+    for r in results:
+        np.testing.assert_array_equal(np.asarray(r.result), want)
+    assert _counter("serve_coalesced") == 2
+
+
+def test_same_pattern_different_values_not_coalesced():
+    a = _mat(seed=4)
+    a2 = HostCSR(a.indptr, a.indices, a.data * 2.0, a.shape)
+    clock = FakeClock()
+    fe = _frontend(clock)
+    t1, t2 = fe.submit(a), fe.submit(a2)
+    fe.pump()
+    assert fe.server.requests == 2               # no result sharing
+    np.testing.assert_array_equal(np.asarray(t2.result(0).result),
+                                  4.0 * np.asarray(t1.result(0).result))
+
+
+# ---------------------------------------------------------------------------
+# load-adaptive degradation: watermarks, hysteresis, graduation
+# ---------------------------------------------------------------------------
+
+
+def _fill_to_pressure(fe, nseeds=4, start=100):
+    """Admit enough distinct cold patterns to cross the high watermark."""
+    return [fe.submit(_mat(seed=start + i)) for i in range(nseeds)]
+
+
+def test_pressure_downgrades_cold_and_graduates_after():
+    clock = FakeClock()
+    fe = _frontend(clock, capacity=4)
+    a = gen_block_diag(256, block=8, seed=0)     # plans hierarchical at
+    fp = fe._fingerprint(a)                      # hint>=50, rowwise at 1
+    for _ in range(60):                          # make it want a full plan
+        fe.estimator.observe(fp)
+        clock.advance(0.1)
+    assert fe.estimator.reuse_hint(fp) >= 50
+    # a *cold* distinct pattern dequeued under pressure takes the
+    # identity rung (FIFO: submit it first so it dequeues while the
+    # queue is still above the low watermark)
+    cold = _mat(96, seed=7)
+    t_cold = fe.submit(cold)
+    _fill_to_pressure(fe, 3)                     # depth 4/4 >= high mark
+    assert fe.queue.fill_frac() >= fe.server.planner.resilience.watermarks.high
+    assert fe.pressure
+    fe.pump(1)
+    resp = t_cold.result(0)
+    assert resp.downgraded and resp.scheme == "rowwise"
+    fe.pump()
+    assert not fe.pressure                       # drained past low mark
+    # pressure cleared: the same pattern now gets its full plan
+    t_again = fe.submit(HostCSR(cold.indptr, cold.indices,
+                                cold.data.copy(), cold.shape))
+    fe.pump()
+    assert not t_again.result(0).downgraded
+
+
+def test_hot_fingerprint_keeps_full_plan_under_pressure():
+    clock = FakeClock()
+    fe = _frontend(clock, capacity=4)
+    a = gen_block_diag(256, block=8, seed=1)
+    fp = fe._fingerprint(a)
+    for _ in range(60):
+        fe.estimator.observe(fp)
+        clock.advance(0.1)
+    assert fe.estimator.is_hot(fp)
+    tk = fe.submit(a)                            # FIFO: dequeues first,
+    _fill_to_pressure(fe, 3)                     # while pressure is on
+    assert fe.pressure
+    fe.pump(1)
+    resp = tk.result(0)
+    assert not resp.downgraded
+    assert resp.scheme != "rowwise"              # the estimator's hint won
+    fe.pump()
+
+
+def test_watermark_hysteresis():
+    wm = Watermarks(high=0.75, low=0.5)
+    clock = FakeClock()
+    fe = _frontend(clock, capacity=4)
+    fe.server.planner.resilience.watermarks = wm
+    tickets = _fill_to_pressure(fe, 3)           # 0.75: pressure on
+    fe.submit(_mat(seed=200))
+    assert fe.pressure
+    fe.pump(1)                                   # 3/4: still above low
+    assert fe.pressure
+    fe.pump()                                    # drained: below low
+    assert not fe.pressure
+    del tickets
+
+
+def test_watermarks_validate():
+    with pytest.raises(ValueError):
+        Watermarks(high=0.4, low=0.6)
+    with pytest.raises(ValueError):
+        Watermarks(high=1.4, low=0.5)
+
+
+# ---------------------------------------------------------------------------
+# live reuse estimation
+# ---------------------------------------------------------------------------
+
+
+def test_estimator_rate_and_hint_dynamics():
+    clock = FakeClock()
+    est = ReuseEstimator(clock=clock, tau_s=30.0, horizon_s=60.0)
+    assert est.reuse_hint("unseen") == 1
+    for _ in range(30):
+        est.observe("fp")
+        clock.advance(1.0)                       # ~1 arrival/s
+    assert est.rate("fp") > 0.5
+    assert est.reuse_hint("fp") >= 30
+    clock.advance(300.0)                         # 10·tau of silence
+    assert est.reuse_hint("fp") == 1             # decayed back to floor
+
+
+def test_estimator_replaces_default_reuse_hint():
+    clock = FakeClock()
+    fe = _frontend(clock)
+    seen = []
+    plan_orig = fe.server.planner.plan
+
+    def spy(a, reuse_hint=None, **kw):
+        plan = plan_orig(a, reuse_hint, **kw)
+        seen.append(plan.reuse_hint)
+        return plan
+
+    fe.server.planner.plan = spy
+    a = _mat(seed=5)
+    fe.submit(a)
+    fe.pump()
+    # the hint is the live estimate for this fingerprint (one arrival:
+    # rate 1/tau over a 2·tau horizon = 2), NOT the server's static
+    # default_reuse_hint (20)
+    assert seen == [fe.estimator.reuse_hint(fe._fingerprint(a))] == [2]
+    assert fe.server.default_reuse_hint == 20
+
+
+def test_hot_pattern_graduates_from_rowwise_to_planned_scheme():
+    clock = FakeClock()
+    # horizon == tau: a single arrival maps to the hint floor of 1
+    est = ReuseEstimator(clock=clock, horizon_s=30.0, tau_s=30.0)
+    fe = _frontend(clock, capacity=8, estimator=est)
+    a = gen_block_diag(256, block=8, seed=2)
+    first = fe.submit(a)
+    fe.pump()
+    assert first.result(0).scheme == "rowwise"   # cold: identity plan
+    for i in range(80):                          # steady 1/s traffic
+        clock.advance(1.0)
+        tk = fe.submit(HostCSR(a.indptr, a.indices, a.data.copy(), a.shape))
+        fe.pump()
+    resp = tk.result(0)
+    assert resp.scheme != "rowwise"              # graduated to a full plan
+
+
+def test_scheduled_recalibration_counts_outcome():
+    clock = FakeClock()
+    fe = _frontend(clock, recalibrate_every=2)
+    for i in range(2):
+        fe.submit(_mat(seed=20 + i))
+        fe.pump()
+    # under 8 audit samples: the refresh runs and reports "skipped"
+    assert _counter("serve_recalibrations", outcome="skipped") == 1
+    assert fe.recalibrate() is False
+
+
+# ---------------------------------------------------------------------------
+# planner single flight
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_plans_single_flight():
+    a = gen_block_diag(256, block=8, seed=3)
+    planner = Planner(cache=PlanCache())
+    barrier = threading.Barrier(4)
+    plans = []
+
+    def worker():
+        barrier.wait()
+        plans.append(planner.plan(a, reuse_hint=50))
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # one planning pass; the other three woke into the cached plan
+    assert planner.cache.stats["misses"] == 1
+    assert planner.cache.stats["hits"] == 3
+    assert len({(p.reorder, p.scheme) for p in plans}) == 1
+
+
+# ---------------------------------------------------------------------------
+# chain plan_s truthfulness
+# ---------------------------------------------------------------------------
+
+
+def test_chain_response_reports_real_plan_time():
+    srv = SpGEMMServer(planner=Planner(cache=PlanCache()))
+    a = _mat(seed=6)
+    cold = srv.submit(a, hops=2)
+    assert cold.plan_s > 0.0                     # was hardcoded 0.0
+    assert cold.execute_s >= 0.0
+    warm = srv.submit(HostCSR(a.indptr, a.indices, a.data.copy(), a.shape),
+                      hops=2)
+    assert warm.plan_cache_hit
+    assert warm.plan_s < cold.plan_s
+
+
+# ---------------------------------------------------------------------------
+# burst under injected faults (make test-chaos re-runs this file)
+# ---------------------------------------------------------------------------
+
+
+def test_burst_under_faults_all_resolve_bit_identical():
+    mats = [_mat(seed=30 + i) for i in range(3)]
+    oracles = [spgemm_reference(m, m) for m in mats]
+    # pre-seed pallas plans (as the resilience suite does): the primary
+    # scheme then has ladder rungs below it, so injected faults degrade
+    # instead of exhausting on the identity floor
+    from repro.planner.features import fingerprint as _fp
+    from repro.planner.plan_cache import Plan
+    cache = PlanCache()
+    for m in mats:
+        cache.put(Plan(fingerprint=_fp(m), reorder="original",
+                       scheme="pallas", reuse_hint=20))
+    faults.arm(FaultPlan(CHAOS_SEED,
+                         sites=("pack", "kernel_launch", "output"),
+                         rate=0.3, max_fires=2))
+    try:
+        clock = FakeClock()
+        fe = _frontend(clock, capacity=16,
+                       server=SpGEMMServer(planner=Planner(cache=cache)))
+        tickets = [fe.submit(m, reuse_hint=20) for m in mats
+                   for _ in range(2)]
+        fe.pump()
+        for tk, want in zip(tickets,
+                            [o for o in oracles for _ in range(2)]):
+            resp = tk.result(0)                  # structured or served —
+            np.testing.assert_array_equal(       # never an unstructured
+                np.asarray(resp.result), want)   # escape from the worker
+    finally:
+        faults.disarm()
+
+
+# ---------------------------------------------------------------------------
+# queue unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_queue_fifo_and_tenant_accounting():
+    q = BoundedRequestQueue(3, tenant_capacity=2)
+    reqs = [QueuedRequest(a=None, tenant=t) for t in ("x", "x", "y")]
+    for r in reqs:
+        q.offer(r)
+    assert q.depth() == 3 and q.depth_of("x") == 2
+    assert q.take() is reqs[0]
+    assert q.depth_of("x") == 1
+    assert q.fill_frac() == pytest.approx(2 / 3)
+    assert q.take(timeout=0) is reqs[1] and q.take() is reqs[2]
+    assert q.take() is None and q.depth() == 0
+
+
+# ---------------------------------------------------------------------------
+# ServingEngine: prompt replay must not retrace per token
+# ---------------------------------------------------------------------------
+
+
+def test_prompt_replay_traces_once():
+    jax = pytest.importorskip("jax")
+    import repro.serve.engine as engine_mod
+    from repro.configs.base import smoke_config
+    from repro.models.transformer import init_params
+    from repro.serve.engine import Request, ServingEngine
+
+    cfg = smoke_config("qwen3-14b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    traces = {"n": 0}
+    orig = engine_mod.decode_step
+
+    def counting(*args, **kwargs):
+        traces["n"] += 1                         # runs only while tracing
+        return orig(*args, **kwargs)
+
+    engine_mod.decode_step = counting
+    try:
+        eng = ServingEngine(cfg, params, slots=2, max_len=64)
+        eng.submit(Request(prompt=np.array([1, 2, 3, 4], np.int32),
+                           max_new_tokens=2))
+        eng.submit(Request(prompt=np.array([5, 6, 7], np.int32),
+                           max_new_tokens=2))
+        eng.run(2)
+    finally:
+        engine_mod.decode_step = orig
+    # one trace for the hoisted replay step + one for the decode step —
+    # the old per-token jit construction traced all 7 prompt tokens
+    assert traces["n"] <= 2

@@ -30,7 +30,8 @@ import sys
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 GUIDES = ["docs/formats.md", "docs/planner.md", "docs/kernels.md",
-          "docs/observability.md", "docs/resilience.md"]
+          "docs/observability.md", "docs/resilience.md",
+          "docs/serving.md"]
 DOC_FILES = ["README.md"] + GUIDES
 
 LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
