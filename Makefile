@@ -3,8 +3,9 @@
 PY        ?= python
 PYPATH    := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow test-chaos docs-check trace-report bench-quick \
-        bench-kernels bench-preprocess bench-planner bench-trajectory lint
+.PHONY: test test-slow test-chaos test-batch docs-check trace-report \
+        bench-quick bench-kernels bench-preprocess bench-planner \
+        bench-trajectory lint
 
 ## tier-1 verification (the command CI runs; pytest.ini excludes -m slow)
 ## — includes the docs gate: doctests on the two doc-bearing modules and
@@ -15,6 +16,7 @@ test:
 	$(MAKE) docs-check
 	$(MAKE) trace-report
 	$(MAKE) test-chaos
+	$(MAKE) test-batch
 
 ## the chaos suite under three fixed fault seeds: every injected failure
 ## (cache_load / pack / kernel_launch / output) must degrade to a result
@@ -23,6 +25,17 @@ test-chaos:
 	for s in 0 1 2; do \
 	    CHAOS_SEED=$$s PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q \
 	        tests/test_resilience.py tests/test_serving_frontend.py \
+	        tests/test_batching.py \
+	        || exit 1; \
+	done
+
+## the cross-request batching suite (packer properties, bit-identical
+## batched serving, expiry sweep) plus its burst/fault scenarios under
+## the three chaos seeds — see docs/serving.md "Cross-request batching"
+test-batch:
+	for s in 0 1 2; do \
+	    CHAOS_SEED=$$s PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q \
+	        tests/test_batching.py \
 	        || exit 1; \
 	done
 

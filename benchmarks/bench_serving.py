@@ -28,6 +28,16 @@ Two measurements:
    with **zero** deadline-missed completions and the queue never past
    capacity. Integer-valued operands make fp32 accumulation exact, so
    coalesced and degraded responses are checked bit-identical too.
+
+3. **Batched-burst amortization (ISSUE 10).** A burst of 8 distinct
+   sub-threshold matrices drains through the cross-request batcher as
+   block-diagonal launches, and the table gates
+
+       batch_launch_amortization = served / launches >= 2.0
+
+   at unchanged (>= 0.95) goodput, every response bit-identical to its
+   unbatched oracle. The trajectory artifact re-checks both as
+   absolute floors (``_ABS_FLOOR_GATED``).
 """
 from __future__ import annotations
 
@@ -47,6 +57,7 @@ from repro.serve.frontend import AsyncSpGEMMServer
 # committed artifacts
 OVERHEAD_GATE = 0.02
 GOODPUT_GATE = 0.95
+AMORTIZATION_GATE = 2.0    # requests served per launch on the batched burst
 
 _REPS = 12         # interleaved direct/front-end passes; min is scored
 _ATTEMPTS = 3      # full re-measurements before the gate failure is real
@@ -239,10 +250,64 @@ def _overload_burst(tier: str) -> dict:
             "deadline_missed_completions": missed}
 
 
+def _batched_burst(tier: str) -> dict:
+    """Burst of distinct sub-threshold matrices through the batcher:
+    >=2x launch amortization at unchanged goodput, bit-identical."""
+    n = 96 if tier == "quick" else 128      # sub-threshold members
+    members = 8
+    mats = [_burst_mat(90 + i, n) for i in range(members)]
+    oracle_srv = SpGEMMServer(planner=Planner(cache=PlanCache()))
+    oracles = [np.asarray(oracle_srv.submit(m, reuse_hint=_HINT).result)
+               for m in mats]
+
+    t = [0.0]
+    # capacity 2x the burst: the queue never fills, watermark pressure
+    # never arms, so the whole burst is batch-eligible
+    fe = AsyncSpGEMMServer(SpGEMMServer(planner=Planner(cache=PlanCache())),
+                           capacity=2 * members, workers=0,
+                           clock=lambda: t[0])
+    tickets = []
+    for m in mats:
+        tickets.append(fe.submit(m, reuse_hint=_HINT, deadline_s=60.0))
+        t[0] += 0.01
+    fe.pump()
+
+    in_deadline = 0
+    for tk, want in zip(tickets, oracles):
+        resp = tk.result(0)
+        np.testing.assert_array_equal(np.asarray(resp.result), want)
+        if not resp.batched:
+            raise RuntimeError("batched-burst member served unbatched")
+        if not resp.deadline_missed:
+            in_deadline += 1
+    stats = fe.stats()["batching"]
+    fe.close()
+
+    amortization = stats["launch_amortization"]
+    goodput = in_deadline / members
+    print(f"# bench_serving: batched burst {members} members → "
+          f"{stats['launches']} launch(es), amortization "
+          f"{amortization:.1f}x (gate {AMORTIZATION_GATE}x), goodput "
+          f"{goodput:.3f} (gate {GOODPUT_GATE})")
+    if amortization < AMORTIZATION_GATE:
+        raise RuntimeError(
+            f"batch launch amortization {amortization:.2f}x below the "
+            f"{AMORTIZATION_GATE}x gate")
+    if goodput < GOODPUT_GATE:
+        raise RuntimeError(
+            f"batched-burst goodput {goodput:.3f} below the "
+            f"{GOODPUT_GATE} gate")
+    return {"batched_burst_members": members,
+            "batch_launches": stats["launches"],
+            "batch_launch_amortization": amortization,
+            "batched_goodput": goodput}
+
+
 def run(tier: str = "quick") -> dict:
     overhead = _frontend_overhead(tier)
     burst = _overload_burst(tier)
-    return {"summary": {**overhead, **burst}}
+    batched = _batched_burst(tier)
+    return {"summary": {**overhead, **burst, **batched}}
 
 
 if __name__ == "__main__":

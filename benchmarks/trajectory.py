@@ -95,6 +95,18 @@ _ABS_GATED = [
     ("serving", ("frontend_overhead_frac",), 0.02),
 ]
 
+# absolute floors, the dual of the ceilings above: (table, key-path,
+# min_allowed), checked on the newest artifact alone. The batching
+# tier's amortization is a contract — a committed artifact where the
+# batched burst stopped amortizing launches must fail the gate even
+# with no baseline pair to diff against.
+_ABS_FLOOR_GATED = [
+    # serving tier (ISSUE 10): the 8-member batched burst must keep
+    # serving >= 2 requests per kernel launch at >= 95% goodput
+    ("serving", ("batch_launch_amortization",), 2.0),
+    ("serving", ("batched_goodput",), 0.95),
+]
+
 
 def git_sha() -> str:
     """Short HEAD sha, suffixed ``-dirty`` when the tree has uncommitted
@@ -216,7 +228,9 @@ def _sum_serving(res: dict) -> dict:
     keys = ("frontend_overhead_frac", "t_direct_s", "t_frontend_s",
             "requests_per_pass", "burst_submitted", "burst_admitted",
             "burst_shed", "burst_coalesced", "burst_goodput",
-            "deadline_missed_completions")
+            "deadline_missed_completions", "batched_burst_members",
+            "batch_launches", "batch_launch_amortization",
+            "batched_goodput")
     return {k: float(s[k]) for k in keys if k in s}
 
 
@@ -321,13 +335,20 @@ def compare(old: dict, new: dict,
 
 
 def check_absolute(artifact: dict) -> list[str]:
-    """Violations of the ``_ABS_GATED`` ceilings in one artifact."""
+    """Violations of the ``_ABS_GATED`` ceilings or ``_ABS_FLOOR_GATED``
+    floors in one artifact. A floor metric absent from the artifact is
+    not a violation — older artifacts predate the batching tier."""
     bad = []
     for table, path, ceiling in _ABS_GATED:
         for k, v in _metric_values(artifact, table, path).items():
             if v > ceiling:
                 bad.append(f"{table}.{'.'.join(path)}.{k}: {v:.4g} "
                            f"exceeds ceiling {ceiling:g}")
+    for table, path, floor in _ABS_FLOOR_GATED:
+        for k, v in _metric_values(artifact, table, path).items():
+            if v < floor:
+                bad.append(f"{table}.{'.'.join(path)}.{k}: {v:.4g} "
+                           f"below floor {floor:g}")
     return bad
 
 

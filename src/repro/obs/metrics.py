@@ -125,6 +125,14 @@ _HOST_METRICS: dict[str, tuple[str, str]] = {
     "serve_recalibrations": (
         "counter", "scheduled cost-model refits from live audit "
         "samples, by outcome — applied / skipped (count)"),
+    "serve_batches": (
+        "counter", "block-diagonal batched launches executed by the "
+        "front-end, by outcome — served / disbanded (count)"),
+    "batch_occupancy": (
+        "histogram", "members packed per batched launch (count)"),
+    "batch_launch_amortization": (
+        "gauge", "front-end requests served per kernel launch — 1.0 "
+        "unbatched, higher as batching amortizes dispatch (ratio)"),
 }
 
 METRIC_CATALOG: dict[str, tuple[str, str]] = dict(_HOST_METRICS)

@@ -32,7 +32,8 @@ from repro.planner.features import MatrixFeatures
 
 __all__ = ["Candidate", "ScoredCandidate", "Measurement", "CostModel",
            "DEFAULT_CANDIDATES", "IDENTITY", "break_even_reuse",
-           "amortizes", "SCHEMES"]
+           "amortizes", "SCHEMES", "batch_break_even",
+           "BATCH_DISPATCH_REL", "BATCH_PACK_REL"]
 
 SCHEMES = ("rowwise", "fixed", "variable", "hierarchical", "pallas")
 
@@ -73,6 +74,44 @@ PALLAS_DEAD_STEP_REL = 0.01
 # step count; the partitioner's acceptance gate bounds imbalance at 20%
 # of ideal, hence the efficiency discount ≈ 1/1.2.
 PALLAS_SHARD_EFFICIENCY = 0.85
+
+# -- cross-request batching break-even --------------------------------------
+# sub-threshold requests are dispatch-bound: the fixed per-launch cost
+# (dispatch + host→device argument staging + result readback) is on the
+# order of the kernel work itself for the matrices the front-end batches,
+# so it is expressed — like every other constant here — in units of one
+# identity-order row-wise SpGEMM on one member
+BATCH_DISPATCH_REL = 1.0
+# per-member block-diagonal packing cost: one concatenate per CSR array
+# plus the column-offset shift — linear in member nnz, far below the
+# member's own SpGEMM
+BATCH_PACK_REL = 0.15
+
+
+def batch_break_even(members: int, *,
+                     dispatch_rel: float = BATCH_DISPATCH_REL,
+                     pack_rel: float = BATCH_PACK_REL) -> bool:
+    """Whether one block-diagonal launch beats ``members`` single launches.
+
+    ``members`` singles pay ``members × dispatch``; the batch pays one
+    dispatch plus per-member packing (the kernel work itself is identical
+    — the packed product's diagonal blocks are exactly the member
+    products), so batching amortizes iff
+
+        dispatch × (members − 1)  >  members × pack
+
+    With the defaults any group of two or more sub-threshold requests
+    clears the bar — the rule exists so the constants (and any future
+    calibration of them) own the decision, not the batcher.
+
+    >>> batch_break_even(1)
+    False
+    >>> batch_break_even(2)
+    True
+    """
+    if members < 2:
+        return False
+    return dispatch_rel * (members - 1) > members * pack_rel
 
 
 def _pallas_on_tpu() -> bool:
@@ -320,7 +359,8 @@ class CostModel:
         without the per-core division. ``workload="chain"`` (repeated
         sparse × sparse hops over a re-fingerprinted ``CompactedC``
         intermediate) is A²-shaped per hop and collects the same
-        discount."""
+        discount, as does ``workload="batch"`` — a block-diagonal pack
+        of square members is itself a square sparse × sparse product."""
         # disorder: how far the current order is from a banded layout —
         # a random symmetric permutation lands at bandwidth_mean ≈ 1/3
         disorder = min(3.0 * f.bandwidth_mean, 1.0)
@@ -395,7 +435,7 @@ class CostModel:
                 # the dense-B SpMM path is not sharded at all — neither
                 # collects the discount.
                 cores = (max(_pallas_core_count(), 1)
-                         if workload in ("a2", "chain")
+                         if workload in ("a2", "chain", "batch")
                          and _pallas_compact_ok(f.ncols)
                          else 1)
                 if cores > 1:

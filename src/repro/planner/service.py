@@ -298,8 +298,12 @@ class Planner:
         ``cluster_spmm_compact``, not A² proxies); ``"chain"`` — one hop
         of a chained sparse product (A²-shaped per hop, probed as A²,
         but executed through :meth:`execute_chain`'s sparse-C route when
-        the pallas scheme wins). Cache entries are workload-keyed, so
-        the workloads never shadow each other.
+        the pallas scheme wins); ``"batch"`` — a block-diagonal pack of
+        several requests' operands (A²-shaped, scored with the same
+        per-core pallas discount, executed once through
+        :meth:`execute_batch`). Cache entries are workload-keyed, so
+        the workloads never shadow each other — a pack whose pattern
+        collides with a single request's fingerprint still plans apart.
         """
         fp = fingerprint(a)
         if reuse_hint is None:
@@ -331,7 +335,7 @@ class Planner:
                    use_cache: bool, workload: str) -> Plan:
         """:meth:`plan` minus the span/metric/single-flight bookkeeping."""
         reuse_hint = max(int(reuse_hint), 1)
-        if workload not in ("a2", "spmm", "chain"):
+        if workload not in ("a2", "spmm", "chain", "batch"):
             raise ValueError(f"unknown workload '{workload}'")
         # workload-qualified key for cost-model measurements: an identity
         # baseline timed on SpMM must only normalize SpMM probes
@@ -569,6 +573,41 @@ class Planner:
             policy.breaker.record_success(key)
             return out
         return self._run_ladder(plan, a, b, primary)
+
+    def execute_batch(self, plan: Plan, a: HostCSR,
+                      b: HostCSR | None = None) -> np.ndarray:
+        """One block-diagonal batched launch — guarded, but **without**
+        the fallback ladder.
+
+        The ladder degrades a *single* request in place; re-running a
+        whole batch down the rungs would make every co-batched tenant
+        pay (repeatedly) for one member's fault, and the identity rung's
+        fault suppression would mask *which* member carried it. So a
+        failing batched launch is resolved one level up: the circuit
+        breaker records the failing triple, the incident is recorded
+        with ``fallback="unbatch"``, and the error propagates so the
+        batcher disbands the group — each member then re-runs
+        individually through :meth:`execute`'s full ladder, isolating
+        the fault to the request that owns it.
+        """
+        policy = self.resilience
+        if not policy.ladder:
+            return self._execute_impl(plan, a, b)
+        key = policy.triple(plan.fingerprint, plan.scheme, plan.reorder)
+        try:
+            out = self._guarded_execute(plan, a, b)
+        except Exception as e:           # noqa: BLE001 — batcher disbands
+            policy.breaker.record_failure(key)
+            policy.record_incident(
+                fingerprint=plan.fingerprint, workload=plan.workload,
+                scheme=plan.scheme, reorder=plan.reorder,
+                site=self._classify_failure(e), error=e,
+                fallback="unbatch")
+            obs_metrics.get_registry().counter(
+                "serve_fallbacks", scheme=plan.scheme).inc()
+            raise
+        policy.breaker.record_success(key)
+        return out
 
     def _run_ladder(self, plan: Plan, a: HostCSR,
                     b: HostCSR | np.ndarray | None,

@@ -73,6 +73,8 @@ class SpGEMMResponse:
     coalesced: bool = False    # shared an identical in-flight execution
     downgraded: bool = False   # front-end forced the identity rung
     deadline_missed: bool = False  # completed past its deadline (counted)
+    batched: bool = False      # served as one member of a block-diagonal
+    batch_size: int = 0        # launch of this many distinct requests
 
 
 class SpGEMMServer:

@@ -34,6 +34,14 @@ turns it into a server that survives real multi-tenant traffic:
    ``hint_provider``, so the break-even rule sees measured recurrence.
    A scheduled ``fit_calibration(samples=auditor.samples())`` refresh
    closes PR 7's drift loop from live traffic.
+6. **Cross-request batching** — the pump drains a *compatible group* of
+   queued sub-threshold requests (``serve/batcher.py``) and serves them
+   with one block-diagonal launch, splitting the product back per
+   ticket bit-identically; distinct small requests stop paying N×
+   dispatch. Batching stands down under watermark pressure — a packed
+   group's pattern is by construction cold, and planning cold patterns
+   is exactly the work pressure sheds — and a faulted batch disbands
+   into individually ladder-guarded singles.
 
 Threading: ``workers >= 1`` starts background worker threads;
 ``workers=0`` is the deterministic mode — ``submit`` only enqueues and
@@ -55,6 +63,7 @@ from repro.obs import metrics as obs_metrics
 from repro.planner.features import fingerprint
 from repro.planner.service import _value_digest
 from repro.resilience.errors import DeadlineExceededError, OverloadError
+from repro.serve.batcher import BatchPolicy, Batcher, batchable, compatible
 from repro.serve.engine import SpGEMMResponse, SpGEMMServer
 from repro.serve.estimator import ReuseEstimator
 from repro.serve.queue import BoundedRequestQueue, QueuedRequest, Ticket
@@ -79,6 +88,10 @@ class AsyncSpGEMMServer:
       recalibrate_every: completed-request period of the scheduled
         ``fit_calibration(samples=auditor.samples())`` refresh
         (``None`` disables).
+      batch_policy: what the pump may pack into one block-diagonal
+        launch (:class:`~repro.serve.batcher.BatchPolicy`; default
+        enabled — pass ``BatchPolicy(enabled=False)`` for strictly
+        one-launch-per-request serving).
     """
 
     def __init__(self, server: Optional[SpGEMMServer] = None, *,
@@ -87,7 +100,8 @@ class AsyncSpGEMMServer:
                  workers: int = 1,
                  estimator: Optional[ReuseEstimator] = None,
                  clock: Optional[Callable[[], float]] = None,
-                 recalibrate_every: Optional[int] = None):
+                 recalibrate_every: Optional[int] = None,
+                 batch_policy: Optional[BatchPolicy] = None):
         self.server = server if server is not None else SpGEMMServer()
         self.clock = clock if clock is not None else time.monotonic
         self.estimator = (estimator if estimator is not None
@@ -99,11 +113,20 @@ class AsyncSpGEMMServer:
         self.queue = BoundedRequestQueue(capacity,
                                          tenant_capacity=tenant_capacity)
         self.recalibrate_every = recalibrate_every
+        self.batch_policy = (batch_policy if batch_policy is not None
+                             else BatchPolicy())
+        self.batcher = Batcher(self.server.planner, clock=self.clock)
         self._mu = threading.Lock()
         self._inflight: dict[str, list[Ticket]] = {}
         self._planned: set[str] = set()     # fps served a full plan
         self._pressure = False              # watermark hysteresis state
         self._completions = 0
+        # launch-amortization accounting: completed queued requests per
+        # planner-routed launch (1.0 unbatched; batching raises it)
+        self._launches = 0
+        self._served = 0
+        self._batches = 0
+        self._batched_members = 0
         self._closed = False
         # fingerprint memo keyed by operand object identity (the same
         # immutability contract as policy validation memoization)
@@ -203,39 +226,101 @@ class AsyncSpGEMMServer:
 
     def pump(self, max_items: Optional[int] = None) -> int:
         """Drain queued requests on the caller's thread (deterministic
-        mode); returns how many were processed."""
+        mode); returns how many were retired. One round retires a whole
+        dequeued group (batch members + swept-expired tickets), so the
+        return can exceed ``max_items`` by the final group's size."""
         done = 0
         while max_items is None or done < max_items:
-            req = self.queue.take(timeout=0)
-            if req is None:
+            n = self._pump_once()
+            if n == 0:
                 break
-            self._process(req)
-            done += 1
+            done += n
         return done
 
     def _worker(self) -> None:
         while not self._closed:
-            req = self.queue.take(timeout=0.05)
-            if req is not None:
-                self._process(req)
+            if self._pump_once() == 0:
+                self.queue.wait_for_item(0.05)
 
-    def _process(self, req: QueuedRequest) -> None:
-        """Execute one dequeued request; every outcome — response,
-        structured shed, inner-stack failure — lands on the ticket (and
-        its coalesced waiters). Nothing escapes the worker."""
+    def _pump_once(self) -> int:
+        """One dequeue round: sweep deadline-expired tickets, pop the
+        head — plus a compatible sub-threshold group when batching
+        applies — and serve it. Returns requests retired (0 = empty).
+
+        Batching stands down under watermark pressure: a packed group's
+        pattern is by construction a cold fingerprint, and planning cold
+        patterns is exactly the work the pressure downgrade sheds — the
+        singles path keeps its guaranteed-cheap identity floor.
+        """
+        pol = self.batch_policy
+        with self._mu:
+            batching = pol.enabled and not self._pressure
+        rows = [0]
+
+        def _pred(head: QueuedRequest, req: QueuedRequest) -> bool:
+            if not (batchable(head, pol) and batchable(req, pol)
+                    and compatible(head, req)):
+                return False
+            if rows[0] == 0:
+                rows[0] = head.a.nrows
+            if rows[0] + req.a.nrows > pol.max_total_rows:
+                return False
+            rows[0] += req.a.nrows
+            return True
+
+        group, expired = self.queue.take_group(
+            limit=pol.max_members if batching else 1,
+            predicate=_pred if batching else None,
+            now=self.clock())
+        for req in expired:
+            self._expire(req)
+        if not group:
+            return len(expired)
+        if len(group) >= pol.min_members:
+            self._process_batch(group)
+        else:
+            self._process(group[0])
+        return len(group) + len(expired)
+
+    def _expire(self, req: QueuedRequest) -> None:
+        """A ticket whose budget died while queued — swept at dequeue by
+        ``take_group`` so it can never be packed into a batch; counted
+        exactly as the in-process queue-deadline check."""
         reg = obs_metrics.get_registry()
         now = self.clock()
         reg.gauge("serve_queue_depth").set(self.queue.depth())
         reg.histogram("serve_queue_wait_s",
                       tenant=req.tenant).observe(now - req.enqueued_at)
-        if req.deadline_at is not None and now >= req.deadline_at:
-            # the budget died in the queue: count + shed, never execute
-            reg.counter("serve_deadline_miss", stage="queue",
-                        tenant=req.tenant).inc()
-            self._resolve_error(req, DeadlineExceededError(
-                "queue", deadline_s=req.deadline_s,
-                waited_s=now - req.enqueued_at))
-            return
+        reg.counter("serve_deadline_miss", stage="queue",
+                    tenant=req.tenant).inc()
+        self._resolve_error(req, DeadlineExceededError(
+            "queue", deadline_s=req.deadline_s,
+            waited_s=now - req.enqueued_at))
+
+    def _process(self, req: QueuedRequest, *, dequeued: bool = False) -> None:
+        """Execute one dequeued request; every outcome — response,
+        structured shed, inner-stack failure — lands on the ticket (and
+        its coalesced waiters). Nothing escapes the worker.
+
+        ``dequeued=True`` marks a request whose dequeue bookkeeping
+        (queue-wait histogram, depth gauge, queue-deadline check) already
+        ran — the disband path re-runs batch members here without double
+        counting; their lateness is a *completion* overrun, not a queue
+        expiry, because execution had already begun."""
+        reg = obs_metrics.get_registry()
+        if not dequeued:
+            now = self.clock()
+            reg.gauge("serve_queue_depth").set(self.queue.depth())
+            reg.histogram("serve_queue_wait_s",
+                          tenant=req.tenant).observe(now - req.enqueued_at)
+            if req.deadline_at is not None and now >= req.deadline_at:
+                # the budget died in the queue: count + shed, never execute
+                reg.counter("serve_deadline_miss", stage="queue",
+                            tenant=req.tenant).inc()
+                self._resolve_error(req, DeadlineExceededError(
+                    "queue", deadline_s=req.deadline_s,
+                    waited_s=now - req.enqueued_at))
+                return
         downgrade = req.downgrade or self._should_downgrade(req.fingerprint)
         hint = 1 if downgrade else req.reuse_hint
         if downgrade:
@@ -247,6 +332,39 @@ class AsyncSpGEMMServer:
         except Exception as e:        # noqa: BLE001 — ticket carries it
             self._resolve_error(req, e)
             return
+        self._note_launch(1)
+        self._finish(req, resp, downgrade=downgrade)
+
+    def _process_batch(self, group: list[QueuedRequest]) -> None:
+        """Serve a compatible dequeued group with one block-diagonal
+        launch; members the batcher hands back (validation reject,
+        break-even decline, disbanded faulted batch) fall through to the
+        individually ladder-guarded singles path."""
+        reg = obs_metrics.get_registry()
+        now = self.clock()
+        reg.gauge("serve_queue_depth").set(self.queue.depth())
+        for req in group:
+            reg.histogram("serve_queue_wait_s",
+                          tenant=req.tenant).observe(now - req.enqueued_at)
+        outcomes = self.batcher.execute(group)
+        n_batched = sum(1 for _, o in outcomes
+                        if isinstance(o, SpGEMMResponse))
+        if n_batched:
+            self._note_launch(n_batched, batch=True)
+        for req, outcome in outcomes:
+            if outcome is None:
+                self._process(req, dequeued=True)
+            elif isinstance(outcome, SpGEMMResponse):
+                self._finish(req, outcome, downgrade=False)
+            else:
+                self._resolve_error(req, outcome)
+
+    def _finish(self, req: QueuedRequest, resp: SpGEMMResponse, *,
+                downgrade: bool) -> None:
+        """Post-execution bookkeeping shared by the single and batched
+        paths: completion-deadline flag, estimator feedback, coalesced
+        waiters, pressure update, recalibration schedule."""
+        reg = obs_metrics.get_registry()
         resp.downgraded = downgrade
         if req.deadline_at is not None and self.clock() > req.deadline_at:
             # completed late: counted and flagged, not raised
@@ -268,6 +386,21 @@ class AsyncSpGEMMServer:
         if (self.recalibrate_every
                 and self._completions % self.recalibrate_every == 0):
             self.recalibrate()
+
+    def _note_launch(self, served: int, *, batch: bool = False) -> None:
+        """Account one planner-routed launch that completed ``served``
+        queued requests, and publish the running amortization ratio
+        (coalesced waiters ride for free and are deliberately excluded —
+        they never held a queue slot or a launch)."""
+        with self._mu:
+            self._launches += 1
+            self._served += served
+            if batch:
+                self._batches += 1
+                self._batched_members += served
+            amort = self._served / self._launches
+        obs_metrics.get_registry().gauge(
+            "batch_launch_amortization").set(amort)
 
     def _resolve_error(self, req: QueuedRequest, e: BaseException) -> None:
         with self._mu:
@@ -385,10 +518,18 @@ class AsyncSpGEMMServer:
             inflight = len(self._inflight)
             planned = len(self._planned)
             pressure = self._pressure
+            batching = {"batches": self._batches,
+                        "batched_members": self._batched_members,
+                        "launches": self._launches,
+                        "served": self._served,
+                        "launch_amortization": (
+                            self._served / self._launches
+                            if self._launches else 0.0)}
         return {"queue": self.queue.stats(),
                 "pressure": pressure,
                 "inflight_keys": inflight,
                 "planned_fingerprints": planned,
                 "completions": self._completions,
+                "batching": batching,
                 "estimator": self.estimator.stats(),
                 "server": self.server.stats()}

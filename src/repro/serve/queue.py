@@ -142,12 +142,70 @@ class BoundedRequestQueue:
             if not self._items:
                 return None
             req = self._items.popleft()
-            left = self._by_tenant.get(req.tenant, 1) - 1
-            if left > 0:
-                self._by_tenant[req.tenant] = left
-            else:
-                self._by_tenant.pop(req.tenant, None)
+            self._dec_tenant(req.tenant)
             return req
+
+    def take_group(self, *, limit: int = 1, predicate=None,
+                   now: Optional[float] = None
+                   ) -> tuple[list[QueuedRequest], list[QueuedRequest]]:
+        """Pop the head plus up to ``limit - 1`` later requests for which
+        ``predicate(head, req)`` holds, preserving FIFO order; requests
+        the predicate rejects stay queued in place. Returns
+        ``(group, expired)``.
+
+        Unlike :meth:`take` (one item, expiry checked by the worker at
+        dequeue), this is the batching dequeue — and the expiry check
+        moves *into the drain*: with ``now`` given, every queued request
+        whose ``deadline_at`` has passed is swept out first and returned
+        in ``expired``, so a dead-budget ticket can never be packed into
+        a batch (it would waste batched kernel work on a result the
+        caller already abandoned, and its slot in the group is better
+        spent on a live request). Per-tenant depth accounting is updated
+        per popped item — group members and swept-expired alike — exactly
+        as :meth:`take` would have.
+        """
+        with self._cv:
+            expired: list[QueuedRequest] = []
+            if now is not None:
+                live: deque[QueuedRequest] = deque()
+                for req in self._items:
+                    if req.deadline_at is not None and now >= req.deadline_at:
+                        expired.append(req)
+                        self._dec_tenant(req.tenant)
+                    else:
+                        live.append(req)
+                self._items = live
+            group: list[QueuedRequest] = []
+            if self._items:
+                head = self._items.popleft()
+                self._dec_tenant(head.tenant)
+                group.append(head)
+                if limit > 1 and predicate is not None:
+                    keep: deque[QueuedRequest] = deque()
+                    for req in self._items:
+                        if len(group) < limit and predicate(head, req):
+                            group.append(req)
+                            self._dec_tenant(req.tenant)
+                        else:
+                            keep.append(req)
+                    self._items = keep
+            return group, expired
+
+    def wait_for_item(self, timeout: float) -> bool:
+        """Block up to ``timeout`` seconds for a non-empty queue (worker
+        threads park here between :meth:`take_group` polls)."""
+        with self._cv:
+            if not self._items:
+                self._cv.wait(timeout)
+            return bool(self._items)
+
+    def _dec_tenant(self, tenant: str) -> None:
+        """Decrement one tenant's depth (callers hold ``_cv``)."""
+        left = self._by_tenant.get(tenant, 1) - 1
+        if left > 0:
+            self._by_tenant[tenant] = left
+        else:
+            self._by_tenant.pop(tenant, None)
 
     def drain(self) -> list[QueuedRequest]:
         """Pop everything (shutdown path)."""

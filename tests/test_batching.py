@@ -1,0 +1,410 @@
+"""Cross-request block-diagonal batching tests (ISSUE 10).
+
+Two layers, one invariant: **batched results are bit-identical to
+unbatched runs** for every batch shape, including under injected
+faults.
+
+* **Packer properties** — the vectorized
+  :func:`repro.core.formats.block_diag_csr` builder matches the loop
+  reference exactly (indptr/indices/data, offsets), round-trips through
+  :func:`split_block_diag`, and the diagonal blocks of a packed product
+  equal the member products — across ragged, empty-row, hub,
+  single-member and max-size batches (hypothesis shapes via
+  ``tests/_hypo_shim.py`` when hypothesis is absent).
+* **Serving behavior** — a 2× burst of distinct small matrices sheds
+  exactly half with structured ``OverloadError`` and batches the
+  admitted half into one launch (fake clock, ``workers=0`` inline
+  pump); a fault injected at ``kernel_launch`` inside a batched launch
+  disbands the group and every member recovers individually through
+  the PR 8 degradation ladder, bit-identically, with exact
+  incident/shed accounting. ``make test-chaos`` re-runs this file
+  under ``CHAOS_SEED`` 0/1/2.
+* **Expiry regression** — the drain-time sweep in
+  ``BoundedRequestQueue.take_group`` guarantees a deadline-expired
+  ticket can never be packed into a batch.
+
+Integer-valued matrices (fp32) keep accumulation exact regardless of
+kernel tier or summation order, so "bit-identical" is assertable with
+``assert_array_equal``.
+"""
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                  # pragma: no cover
+    from _hypo_shim import given, settings, st
+
+from repro.core.formats import (HostCSR, block_diag_csr,
+                                block_diag_csr_reference, split_block_diag)
+from repro.core.spgemm import spgemm_reference
+from repro.obs.audit import get_auditor
+from repro.obs.metrics import get_registry
+from repro.planner.cost_model import batch_break_even
+from repro.planner.features import fingerprint as _fp
+from repro.planner.plan_cache import Plan, PlanCache
+from repro.planner.service import Planner
+from repro.resilience import (DeadlineExceededError, FaultPlan, faults,
+                              reset_policy)
+from repro.serve.batcher import BatchPolicy, batchable, compatible
+from repro.serve.engine import SpGEMMServer
+from repro.serve.estimator import ReuseEstimator
+from repro.serve.frontend import AsyncSpGEMMServer
+from repro.serve.queue import BoundedRequestQueue, QueuedRequest
+
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "0"))
+
+
+@pytest.fixture(autouse=True)
+def _fresh_state():
+    """Isolated process-global policy, metrics and no armed fault plan."""
+    reset_policy()
+    faults.disarm()
+    get_registry().reset()
+    get_auditor().reset()
+    yield
+    reset_policy()
+    faults.disarm()
+    get_registry().reset()
+    get_auditor().reset()
+
+
+class FakeClock:
+    """Manually advanced monotonic time."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _mat(n=64, density=0.08, seed=0):
+    """Integer-valued CSR: fp32 accumulation is exact regardless of
+    summation order, so every kernel tier is bit-identical."""
+    rng = np.random.default_rng(seed)
+    dense = ((rng.random((n, n)) < density)
+             * rng.integers(1, 4, (n, n))).astype(np.float32)
+    return HostCSR.from_dense(dense)
+
+
+def _rect(nr, nc, density=0.2, seed=0):
+    rng = np.random.default_rng(seed)
+    dense = ((rng.random((nr, nc)) < density)
+             * rng.integers(1, 4, (nr, nc))).astype(np.float32)
+    return HostCSR.from_dense(dense)
+
+
+def _frontend(clock, **kw):
+    kw.setdefault("capacity", 16)
+    kw.setdefault("workers", 0)
+    est = kw.pop("estimator", None)
+    if est is None:
+        est = ReuseEstimator(clock=clock)
+    srv = kw.pop("server", None)
+    if srv is None:
+        srv = SpGEMMServer(planner=Planner(cache=PlanCache()))
+    return AsyncSpGEMMServer(srv, clock=clock, estimator=est, **kw)
+
+
+def _counter(name, **labels):
+    key = get_registry()._key(name, labels)
+    return get_registry().snapshot().get(key, 0)
+
+
+def _assert_pack_equal(pack, ref):
+    np.testing.assert_array_equal(pack.host.indptr, ref.host.indptr)
+    np.testing.assert_array_equal(pack.host.indices, ref.host.indices)
+    np.testing.assert_array_equal(pack.host.data, ref.host.data)
+    np.testing.assert_array_equal(pack.row_offsets, ref.row_offsets)
+    np.testing.assert_array_equal(pack.col_offsets, ref.col_offsets)
+    assert pack.host.nrows == ref.host.nrows
+    assert pack.host.ncols == ref.host.ncols
+
+
+# the named batch shapes the issue calls out; each is a list of square
+# members (A² eligible) with a distinct structural character
+def _named_batches():
+    hub = np.zeros((24, 24), np.float32)
+    hub[0, :] = 3.0                  # one dense hub row
+    hub[:, 5] = 2.0                  # and a hub column
+    hub[3, 3] = 1.0
+    empty_rows = np.zeros((16, 16), np.float32)
+    empty_rows[2, 7] = 2.0           # rows 0-1, 3-15 mostly empty
+    empty_rows[9, 1] = 3.0
+    return {
+        "ragged": [_mat(n=n, seed=40 + i)
+                   for i, n in enumerate((16, 40, 8, 64))],
+        "empty_row": [HostCSR.from_dense(empty_rows),
+                      _mat(n=16, seed=45),
+                      HostCSR.from_dense(np.zeros((8, 8), np.float32))],
+        "hub": [HostCSR.from_dense(hub), _mat(n=24, seed=46),
+                _mat(n=12, density=0.3, seed=47)],
+        "single_member": [_mat(n=32, seed=48)],
+        "max_size": [_mat(n=16, seed=50 + i) for i in range(8)],
+    }
+
+
+# ---------------------------------------------------------------------------
+# packer: vectorized builder == loop reference, split round-trips
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 6), st.integers(0, 2 ** 31 - 1),
+       st.floats(0.0, 0.5))
+@settings(max_examples=25, deadline=None)
+def test_block_diag_matches_loop_reference(members, seed, density):
+    rng = np.random.default_rng(seed)
+    mats = []
+    for _ in range(members):
+        nr, nc = int(rng.integers(1, 24)), int(rng.integers(1, 24))
+        dense = ((rng.random((nr, nc)) < density)
+                 * rng.integers(1, 4, (nr, nc))).astype(np.float32)
+        mats.append(HostCSR.from_dense(dense))
+    pack = block_diag_csr(mats)
+    _assert_pack_equal(pack, block_diag_csr_reference(mats))
+    # round-trip: the pack's dense form splits back to the members
+    parts = split_block_diag(pack.host.to_dense(), pack)
+    assert len(parts) == members
+    for part, m in zip(parts, mats):
+        np.testing.assert_array_equal(part, m.to_dense())
+
+
+@pytest.mark.parametrize("shape", sorted(_named_batches()))
+def test_block_diag_named_shapes_roundtrip(shape):
+    mats = _named_batches()[shape]
+    pack = block_diag_csr(mats)
+    _assert_pack_equal(pack, block_diag_csr_reference(mats))
+    assert pack.members == len(mats)
+    assert pack.host.nrows == sum(m.nrows for m in mats)
+    # the diagonal blocks of the packed A² product are exactly the
+    # member products — the mathematical fact batching rests on
+    packed_sq = spgemm_reference(pack.host, pack.host)
+    for part, m in zip(split_block_diag(packed_sq, pack), mats):
+        np.testing.assert_array_equal(part, spgemm_reference(m, m))
+
+
+def test_block_diag_rejects_empty_group():
+    with pytest.raises(ValueError):
+        block_diag_csr([])
+
+
+# ---------------------------------------------------------------------------
+# serving: per-ticket batched results == N unbatched runs, every shape
+# ---------------------------------------------------------------------------
+
+
+def _serve(mats, *, policy=None):
+    """Run one burst through a fresh inline front-end; return responses.
+
+    Capacity stays well above the burst so watermark pressure — which
+    makes batching stand down by design — never arms here.
+    """
+    clock = FakeClock()
+    kw = {} if policy is None else {"batch_policy": policy}
+    fe = _frontend(clock, capacity=64, **kw)
+    tickets = [fe.submit(m, reuse_hint=8) for m in mats]
+    fe.pump()
+    return [t.result(0) for t in tickets], fe
+
+
+@pytest.mark.parametrize("shape", sorted(_named_batches()))
+def test_batched_serving_bit_identical_to_unbatched(shape):
+    mats = _named_batches()[shape]
+    batched, fe = _serve(mats)
+    unbatched, _ = _serve(mats, policy=BatchPolicy(enabled=False))
+    for b, u in zip(batched, unbatched):
+        np.testing.assert_array_equal(np.asarray(b.result),
+                                      np.asarray(u.result))
+    if len(mats) >= 2:
+        assert all(r.batched and r.batch_size == len(mats)
+                   for r in batched)
+        assert _counter("serve_batches", outcome="served") == 1
+        assert fe.stats()["batching"]["launch_amortization"] == len(mats)
+    else:
+        # a lone request takes the single path untouched
+        assert not batched[0].batched
+        assert _counter("serve_batches", outcome="served") == 0
+    assert all(not r.batched for r in unbatched)
+
+
+def test_batched_sparse_ab_pairs_bit_identical():
+    pairs = [(_rect(12, 20, seed=70), _rect(20, 9, seed=71)),
+             (_rect(30, 6, seed=72), _rect(6, 14, seed=73)),
+             (_rect(8, 8, seed=74), _rect(8, 8, seed=75))]
+    clock = FakeClock()
+    fe = _frontend(clock, capacity=16)
+    tickets = [fe.submit(a, b, reuse_hint=8) for a, b in pairs]
+    fe.pump()
+    for tk, (a, b) in zip(tickets, pairs):
+        resp = tk.result(0)
+        assert resp.batched and resp.batch_size == len(pairs)
+        np.testing.assert_array_equal(
+            np.asarray(resp.result), spgemm_reference(a, b))
+
+
+# ---------------------------------------------------------------------------
+# 2x burst: twice the group-size cap drains as exactly two full batches
+# ---------------------------------------------------------------------------
+
+
+def test_2x_burst_batches_into_two_full_launches():
+    group = BatchPolicy().max_members
+    mats = [_mat(n=24, seed=100 + i) for i in range(2 * group)]
+    oracles = [spgemm_reference(m, m) for m in mats]
+    clock = FakeClock()
+    # capacity well above the burst: the queue never fills, watermark
+    # pressure never arms, so the whole burst is batch-eligible
+    fe = _frontend(clock, capacity=64)
+    tickets = [fe.submit(m, reuse_hint=8) for m in mats]
+    assert fe.queue.depth() == 2 * group
+    assert fe.pump() == 2 * group
+    for tk, want in zip(tickets, oracles):
+        resp = tk.result(0)
+        assert resp.batched and resp.batch_size == group
+        np.testing.assert_array_equal(np.asarray(resp.result), want)
+    st_ = fe.stats()["batching"]
+    assert st_["batches"] == 2 and st_["batched_members"] == 2 * group
+    assert st_["launches"] == 2 and st_["served"] == 2 * group
+    assert st_["launch_amortization"] == float(group)
+    assert _counter("serve_batches", outcome="served") == 2
+    assert _counter("serve_batches", outcome="disbanded") == 0
+    occ = _counter("batch_occupancy")
+    assert occ["count"] == 2 and occ["max"] == float(group)
+    # nothing shed, nothing rejected — exact accounting
+    policy = fe.server.planner.resilience
+    assert policy.sheds == 0 and policy.rejects == 0
+    assert _counter("serve_shed", reason="capacity") == 0
+
+
+# ---------------------------------------------------------------------------
+# chaos: a fault inside the batched launch disbands; members recover
+# on the ladder, bit-identically, with exact incident accounting
+# ---------------------------------------------------------------------------
+
+
+def test_faulted_batch_disbands_and_members_recover_on_ladder():
+    mats = [_mat(n=32, seed=60 + i) for i in range(4)]
+    oracles = [spgemm_reference(m, m) for m in mats]
+    # pre-seed pallas plans for the pack *and* each member, so the
+    # fault site is reachable in both the batched launch and the
+    # members' individual re-runs (which then have ladder rungs below)
+    cache = PlanCache()
+    pack = block_diag_csr(mats)
+    cache.put(Plan(fingerprint=_fp(pack.host), reorder="original",
+                   scheme="pallas", reuse_hint=20, workload="batch"))
+    for m in mats:
+        cache.put(Plan(fingerprint=_fp(m), reorder="original",
+                       scheme="pallas", reuse_hint=20))
+    # rate 1.0: fires are schedule-independent of CHAOS_SEED, so the
+    # accounting below is exact for every seed the chaos tier sweeps
+    faults.arm(FaultPlan(CHAOS_SEED, sites=("kernel_launch",),
+                         rate=1.0, max_fires=2))
+    try:
+        clock = FakeClock()
+        fe = _frontend(clock, capacity=16,
+                       server=SpGEMMServer(planner=Planner(cache=cache)))
+        tickets = [fe.submit(m, reuse_hint=20) for m in mats]
+        fe.pump()
+        # fire 1 kills the batched launch -> disband; fire 2 kills the
+        # first member's pallas re-run -> ladder recovers it on "fixed";
+        # the remaining members' pallas runs are past the fire cap
+        for tk, want in zip(tickets, oracles):
+            resp = tk.result(0)
+            assert not resp.batched
+            np.testing.assert_array_equal(np.asarray(resp.result), want)
+        assert _counter("serve_batches", outcome="disbanded") == 1
+        assert _counter("serve_batches", outcome="served") == 0
+        policy = fe.server.planner.resilience
+        fallbacks = [i.fallback for i in policy.incidents]
+        assert fallbacks == ["unbatch", "fixed"]
+        assert policy.fallbacks == 2
+        assert policy.sheds == 0 and policy.rejects == 0
+        assert _counter("serve_fallbacks", scheme="pallas") == 2
+        assert _counter("faults_injected", site="kernel_launch") == 2
+        st_ = fe.stats()["batching"]
+        assert st_["batches"] == 0 and st_["launches"] == len(mats)
+    finally:
+        faults.disarm()
+
+
+# ---------------------------------------------------------------------------
+# expiry regression: a deadline-expired ticket can never join a batch
+# ---------------------------------------------------------------------------
+
+
+def test_take_group_sweeps_expired_before_packing():
+    q = BoundedRequestQueue(8, tenant_capacity=4)
+    live1 = QueuedRequest(a=None, tenant="x")
+    dead = QueuedRequest(a=None, tenant="x", deadline_at=5.0)
+    live2 = QueuedRequest(a=None, tenant="y")
+    for r in (live1, dead, live2):
+        q.offer(r)
+    group, expired = q.take_group(limit=8,
+                                  predicate=lambda h, r: True, now=10.0)
+    assert expired == [dead]
+    assert group == [live1, live2]
+    assert q.depth() == 0
+    assert q.depth_of("x") == 0 and q.depth_of("y") == 0
+
+
+def test_expired_ticket_resolves_queue_miss_and_is_not_batched():
+    clock = FakeClock()
+    fe = _frontend(clock, capacity=8)
+    m1, m2, m3 = (_mat(n=24, seed=80 + i) for i in range(3))
+    t1 = fe.submit(m1, reuse_hint=8)
+    t2 = fe.submit(m2, reuse_hint=8, deadline_s=1.0)
+    t3 = fe.submit(m3, reuse_hint=8)
+    clock.advance(5.0)          # t2's budget expires while queued
+    fe.pump()
+    with pytest.raises(DeadlineExceededError) as ei:
+        t2.result(0)
+    assert ei.value.stage == "queue"
+    assert _counter("serve_deadline_miss", stage="queue") == 1
+    # the survivors still batch — without the expired member
+    r1, r3 = t1.result(0), t3.result(0)
+    assert r1.batched and r1.batch_size == 2
+    assert r3.batched and r3.batch_size == 2
+    np.testing.assert_array_equal(np.asarray(r1.result),
+                                  spgemm_reference(m1, m1))
+    np.testing.assert_array_equal(np.asarray(r3.result),
+                                  spgemm_reference(m3, m3))
+
+
+# ---------------------------------------------------------------------------
+# eligibility gates and the break-even rule
+# ---------------------------------------------------------------------------
+
+
+def test_batchable_gates():
+    pol = BatchPolicy()
+    m = _mat(n=32, seed=1)
+    assert batchable(QueuedRequest(a=m), pol)
+    assert not batchable(QueuedRequest(a=m), BatchPolicy(enabled=False))
+    assert not batchable(QueuedRequest(a=m, hops=2), pol)       # chains
+    assert not batchable(QueuedRequest(a=m, downgrade=True), pol)
+    dense_b = np.ones((32, 4), np.float32)
+    assert not batchable(QueuedRequest(a=m, b=dense_b), pol)    # SpMM
+    big = _mat(n=pol.max_member_rows * 2, density=0.01, seed=2)
+    assert not batchable(QueuedRequest(a=big), pol)             # oversized
+    rect = _rect(8, 10, seed=3)
+    assert not batchable(QueuedRequest(a=rect), pol)            # A² square
+    assert batchable(QueuedRequest(a=rect, b=_rect(10, 6, seed=4)), pol)
+    # A² and A·B members never share a pack
+    assert compatible(QueuedRequest(a=m), QueuedRequest(a=m))
+    assert not compatible(QueuedRequest(a=m),
+                          QueuedRequest(a=rect, b=_rect(10, 6, seed=4)))
+
+
+def test_batch_break_even_rule():
+    assert not batch_break_even(0)
+    assert not batch_break_even(1)      # a lone request never batches
+    assert batch_break_even(2)          # default constants: 2+ amortize
+    assert batch_break_even(8)
+    # a hypothetical free dispatch never breaks even
+    assert not batch_break_even(8, dispatch_rel=0.0, pack_rel=0.15)

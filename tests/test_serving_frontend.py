@@ -255,9 +255,14 @@ def test_same_pattern_different_values_not_coalesced():
     fe = _frontend(clock)
     t1, t2 = fe.submit(a), fe.submit(a2)
     fe.pump()
-    assert fe.server.requests == 2               # no result sharing
-    np.testing.assert_array_equal(np.asarray(t2.result(0).result),
-                                  4.0 * np.asarray(t1.result(0).result))
+    # no result sharing: both executed (one batched launch counts both
+    # members; with batching off they'd be two server.submit calls) and
+    # each got its own values' product, never the other's
+    r1, r2 = t1.result(0), t2.result(0)
+    assert not r1.coalesced and not r2.coalesced
+    assert fe.server.requests + fe.stats()["batching"]["batched_members"] == 2
+    np.testing.assert_array_equal(np.asarray(r2.result),
+                                  4.0 * np.asarray(r1.result))
 
 
 # ---------------------------------------------------------------------------

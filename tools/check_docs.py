@@ -18,7 +18,10 @@ describes. Checks, in order:
 5. the metric-catalog table in `docs/observability.md` stays in two-way
    sync with ``repro.obs.metrics.METRIC_CATALOG``: every documented
    metric is declared (with the same kind) and every declared metric is
-   documented.
+   documented;
+6. `docs/serving.md` keeps a "Cross-request batching" section that
+   cites every metric the batching layer emits
+   (``repro.serve.batcher.BATCH_METRICS``).
 
 Exit code 0 when clean; prints one line per violation otherwise.
 """
@@ -140,6 +143,26 @@ def check() -> list[str]:
         if name not in doc_rows:
             errors.append(f"METRIC_CATALOG['{name}'] undocumented in the "
                           "docs/observability.md metric catalog")
+
+    # 6. serving.md batching section cites every batching metric
+    from repro.serve.batcher import BATCH_METRICS
+    serving_doc = docs.get("docs/serving.md", "")
+    section, inside = [], False
+    for line in serving_doc.splitlines():
+        if line.startswith("## "):
+            inside = line.strip().lower() == "## cross-request batching"
+            continue
+        if inside:
+            section.append(line)
+    if not section:
+        errors.append("docs/serving.md: no 'Cross-request batching' "
+                      "section found")
+    else:
+        body = "\n".join(section)
+        for name in BATCH_METRICS:
+            if f"`{name}`" not in body:
+                errors.append("docs/serving.md batching section does not "
+                              f"cite metric '{name}'")
     return errors
 
 
